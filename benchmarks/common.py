@@ -1,0 +1,146 @@
+"""Shared benchmark substrate: the RAP subject model + evaluation protocol.
+
+The paper's experiments run Llama2-7B/Llama3-8B on WikiText2/PTB + seven
+commonsense suites. Offline, the analogue (DESIGN.md §7) is:
+  * subject model — same family (RMSNorm+SwiGLU+RoPE decoder, 8L/d256,
+    ~13M params), trained in-repo on the synthetic Zipf-Markov corpus;
+  * "WikiText2 ppl"  → held-out synthetic perplexity;
+  * "commonsense acc" → next-token top-1 accuracy on held-out text (the
+    downstream-quality proxy);
+  * unified memory budget — Eq.(3)+(4) peak at an evaluation request shape
+    chosen so KV cache dominates parameters (the paper's motivating regime).
+
+Everything heavy (subject training, DQN policies) is cached under
+``experiments/bench/`` so reruns are incremental.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.llama2_7b import RAP_SUBJECT
+from repro.core import dqn, env as env_lib, memory
+from repro.core.controller import RAPController
+from repro.data import SyntheticCorpus, batch_iterator
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime import Trainer, TrainerConfig
+
+BENCH_DIR = "experiments/bench"
+SUBJECT_STEPS = 300
+EVAL_REQUEST = (8, 2048)     # (batch, seq): KV-dominated regime
+
+
+def ensure_dirs():
+    os.makedirs(BENCH_DIR, exist_ok=True)
+
+
+def subject() -> Tuple:
+    """(model, trained params, corpus). Trains once, cached on disk."""
+    ensure_dirs()
+    cfg = RAP_SUBJECT
+    model = registry.build(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    ckpt_dir = os.path.join(BENCH_DIR, "subject_ckpt")
+    tr = Trainer(model, adamw.AdamWConfig(lr=1e-3, total_steps=SUBJECT_STEPS,
+                                          warmup_steps=30),
+                 TrainerConfig(total_steps=SUBJECT_STEPS, ckpt_dir=ckpt_dir,
+                               ckpt_every=100, log_every=100,
+                               remat=False, ckpt_async=False))
+    if not tr.maybe_restore() or tr.step < SUBJECT_STEPS:
+        start = tr.step
+        print(f"[common] training subject model {start}→{SUBJECT_STEPS}")
+        tr.run(batch_iterator(corpus, 16, 128, start=start))
+    return model, tr.params, corpus
+
+
+def calib_batch(corpus, n=4, seq=128) -> Dict:
+    return {k: jnp.asarray(v) for k, v in
+            corpus.batch(n, seq, split="calib").items()}
+
+
+def eval_batches(corpus, n_batches=4, bs=8, seq=128):
+    return [{k: jnp.asarray(v) for k, v in
+             corpus.batch(bs, seq, split="eval", index=i).items()}
+            for i in range(n_batches)]
+
+
+def evaluate(model, params, batches, gates=None) -> Dict[str, float]:
+    """Held-out perplexity + next-token top-1 accuracy (downstream proxy)."""
+    tot_nll, tot_correct, tot_tok = 0.0, 0.0, 0
+    for b in batches:
+        lg = model.logits(params, b, gates=gates)
+        lg, labels = lg[:, :-1], b["labels"][:, 1:]
+        viota = jax.lax.broadcasted_iota(jnp.int32, (lg.shape[-1],), 0)
+        lg = jnp.where(viota >= model.cfg.vocab_size, -1e30, lg)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.sum(jnp.where(viota == labels[..., None], lg, 0.0), -1)
+        tot_nll += float(jnp.sum(logz - gold))
+        tot_correct += float(jnp.sum(jnp.argmax(lg, -1) == labels))
+        tot_tok += labels.size
+    return {"ppl": float(np.exp(tot_nll / tot_tok)),
+            "acc": tot_correct / tot_tok}
+
+
+def memory_model(cfg=None) -> memory.MemoryModel:
+    return memory.build_memory_model(cfg or RAP_SUBJECT)
+
+
+def trained_controller(model, params, corpus, *, episodes=6, seed=0,
+                       alpha=1.0, beta=0.3, tag="default",
+                       force=False) -> Tuple[RAPController, dqn.TrainResult]:
+    """DQN policy for the subject model (cached per tag/seed)."""
+    ensure_dirs()
+    mm = memory_model(model.cfg)
+    calib = calib_batch(corpus, n=2, seq=64)   # CPU time box
+    cache = os.path.join(BENCH_DIR, f"qnet_{tag}_s{seed}")
+    env_cfg = env_lib.EnvConfig(alpha=alpha, beta=beta)
+    e = env_lib.PruneEnv(model, params, calib, mm, env_cfg, chunk=16)
+
+    def sampler(rng):
+        bs = int(2 ** rng.integers(0, 4))
+        sql = int(rng.integers(4, 33)) * 64
+        frac = float(rng.uniform(0.55, 0.9))
+        return bs, sql, frac * mm.dense_peak(bs, sql)
+
+    meta_p = cache + ".json"
+    if os.path.exists(meta_p) and not force:
+        with open(meta_p) as f:
+            meta = json.load(f)
+        qp = {k: jnp.asarray(np.asarray(v, np.float32))
+              for k, v in meta["q_params"].items()}
+        tr = dqn.TrainResult(qp, meta["rewards"], meta["fits"], [])
+    else:
+        print(f"[common] training DQN policy ({tag}, seed {seed}, "
+              f"{episodes} eps)")
+        tr = dqn.train(lambda: e, episodes=episodes, seed=seed,
+                       cfg=dqn.DQNConfig(eps_decay_episodes=episodes * 2 // 3),
+                       request_sampler=sampler)
+        with open(meta_p, "w") as f:
+            json.dump({"q_params": {k: np.asarray(v).tolist()
+                                    for k, v in tr.q_params.items()},
+                       "rewards": tr.episode_rewards,
+                       "fits": tr.episode_fits}, f)
+    ctl = RAPController(model, params, calib, mm, tr.q_params,
+                        env_cfg=env_cfg, chunk=16)
+    return ctl, tr
+
+
+def emit(name: str, rows, header=None):
+    """Write JSON + print CSV block for the harness."""
+    ensure_dirs()
+    with open(os.path.join(BENCH_DIR, name + ".json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    if header:
+        print(",".join(header))
+    for r in rows:
+        if isinstance(r, dict):
+            print(",".join(str(r.get(h, "")) for h in (header or r)))
+    print(flush=True)

@@ -1,0 +1,21 @@
+"""§Roofline: three-term table for every (arch × shape) from the dry-run."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.roofline import full_table, render_table, analysis
+
+
+def run() -> list:
+    rows = full_table()
+    live = [r for r in rows if not r.get("skipped")]
+    print(render_table(rows))
+    for r in live:
+        print(f"# {r['arch']}×{r['shape']}: {analysis.suggestion(r)}")
+    common.emit("roofline", rows,
+                header=["arch", "shape", "compute_s", "memory_s",
+                        "collective_s", "dominant", "roofline_frac",
+                        "fit_gb"])
+    if live:
+        n_fit = sum(1 for r in live if r.get("fits_hbm"))
+        print(f"# {len(live)} cells analyzed; {n_fit} fit 16GB/chip HBM")
+    return rows

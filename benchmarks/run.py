@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig9]
+
+Each module prints a CSV block and writes experiments/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("table1", "benchmarks.table1_budgets",
+     "Table 1/3 — methods at 80%/60% unified memory budgets"),
+    ("table2", "benchmarks.table2_ablation",
+     "Table 2 / Fig.8 — RAP vs RAP^-GSI vs RAP^-RL"),
+    ("table4", "benchmarks.table4_prune_ratio",
+     "Table 4 — weight-prune ratio needed per budget"),
+    ("fig3", "benchmarks.fig3_memory_breakdown",
+     "Fig. 3 — param- vs KV-dominated memory"),
+    ("fig4", "benchmarks.fig4_block_sensitivity",
+     "Fig. 4/12 — per-block sensitivity vs request length"),
+    ("fig6", "benchmarks.fig6_gsi_vs_oneshot",
+     "Fig. 6 — GSI vs one-shot block scores"),
+    ("fig9", "benchmarks.fig9_seeds",
+     "Fig. 9 — RL reward across seeds"),
+    ("fig10", "benchmarks.fig10_alpha_beta",
+     "Fig. 10 — α/β penalty sensitivity"),
+    ("fig11", "benchmarks.fig11_overhead",
+     "Fig. 11 — controller overhead"),
+    ("roofline", "benchmarks.roofline",
+     "§Roofline — 3 terms per arch × shape from the dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig9")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, module, desc in BENCHES:
+        if want and name not in want:
+            continue
+        print(f"\n===== {name}: {desc} =====", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(module).run()
+            print(f"===== {name} done in {time.time()-t0:.1f}s =====",
+                  flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"===== {name} FAILED: {type(e).__name__}: {e} =====")
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

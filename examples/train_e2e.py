@@ -1,0 +1,77 @@
+"""End-to-end training driver with full fault-tolerance plumbing.
+
+  PYTHONPATH=src python examples/train_e2e.py --size small --steps 300
+  PYTHONPATH=src python examples/train_e2e.py --size 100m  --steps 300  # real hw
+
+``small`` (~13M params) trains in minutes on this CPU container; ``100m``
+is the same family scaled to ~100M params — the intended shape on a real
+accelerator. Demonstrates: step-indexed data pipeline, async checkpoints,
+crash-resume (kill it mid-run and re-run the same command), straggler
+logging, final held-out evaluation.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.llama2_7b import RAP_SUBJECT
+from repro.data import SyntheticCorpus, batch_iterator
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime import Trainer, TrainerConfig
+
+SIZES = {
+    # ~13M — CPU-friendly
+    "small": RAP_SUBJECT,
+    # ~100M of the same family (24L × 512d), the few-hundred-step target
+    "100m": RAP_SUBJECT.replace(name="subject-100m", n_layers=24,
+                                d_model=512, n_heads=8, n_kv_heads=8,
+                                head_dim=64, d_ff=1536, vocab_size=8192,
+                                vocab_round_to=512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=SIZES, default="small")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/rap_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = SIZES[args.size]
+    model = registry.build(cfg)
+    n = cfg.total_params()
+    print(f"model: {cfg.name}  ~{n/1e6:.1f}M params")
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+
+    trainer = Trainer(
+        model,
+        adamw.AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=30),
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=50, log_every=25),
+        on_log=lambda s, m: print(f"step {s:5d}  loss {m['loss']:.4f}  "
+                                  f"ppl {m['ppl']:8.2f}  lr {m['lr']:.2e}",
+                                  flush=True),
+        on_straggler=lambda s, dt: print(f"  !! straggler at step {s}: "
+                                         f"{dt:.2f}s"))
+    resumed = trainer.maybe_restore()
+    if resumed:
+        print(f"resuming from step {trainer.step}")
+    batches = batch_iterator(corpus, args.batch, args.seq,
+                             start=trainer.step)
+    summary = trainer.run(batches)
+
+    # held-out evaluation
+    ev = {k: jnp.asarray(v) for k, v in corpus.batch(
+        8, args.seq, split="eval").items()}
+    loss, aux = model.loss(trainer.params, ev)
+    print(f"\nfinal: step {summary['final_step']}  "
+          f"held-out ppl {float(aux['ppl']):.2f}  "
+          f"stragglers {len(summary['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, keep-N.
+
+Layout:  <dir>/step_<n>/
+            manifest.json      # treedef, leaf paths, shapes, dtypes, step
+            <leaf-key>.npy     # one file per pytree leaf
+
+Atomicity: leaves are written into ``step_<n>.tmp`` and the directory is
+``os.rename``d into place — a crash mid-save never corrupts the latest
+checkpoint, and ``latest_step`` only trusts directories with a manifest
+(rename is the commit point). Restore reshards onto the *current* mesh via
+``jax.device_put(leaf, sharding)``, which is what makes elastic re-mesh
+(device count changed between runs) work: the checkpoint stores plain host
+arrays, placement is decided at load time.
+
+Async: ``save(..., blocking=False)`` snapshots leaves to host memory
+synchronously (cheap) and writes files on a background thread, overlapping
+I/O with the next training steps — the standard production trick for
+large-model checkpointing cadence.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_pytree(tree, directory: str, step: int, *,
+                extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic synchronous save. Returns the committed path."""
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for key, arr in leaves.items():
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {"file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)   # commit point
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            s = int(m.group(1))
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore_pytree(template, directory: str, step: Optional[int] = None, *,
+                   shardings=None):
+    """Restore into ``template``'s structure. ``shardings`` (same structure,
+    or None) controls device placement — pass mesh-specific shardings to
+    reshard onto a different device count than the one that saved."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    new_leaves = []
+    for (keypath, leaf), shard in zip(flat, shard_flat):
+        key = "/".join(_path_str(p) for p in keypath)
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        new_leaves.append(jax.device_put(arr, shard) if shard is not None
+                          else jax.device_put(arr))
+    return treedef.unflatten(new_leaves), manifest
+
+
+class CheckpointManager:
+    """keep-N rotation + async background writes."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, tree, step: int, *, extra=None, blocking: bool = True):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+        if blocking:
+            self._write(host_tree, step, extra)
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(host_tree, step, extra),
+                daemon=True)
+            self._thread.start()
+
+    def _write_guarded(self, tree, step, extra):
+        try:
+            self._write(tree, step, extra)
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def _write(self, tree, step, extra):
+        save_pytree(tree, self.directory, step, extra=extra)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d+)", n)
+             for n in os.listdir(self.directory)) if m)
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    def restore(self, template, *, step=None, shardings=None):
+        self.wait()
+        return restore_pytree(template, self.directory, step,
+                              shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)

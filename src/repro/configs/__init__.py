@@ -1,0 +1,56 @@
+"""Config registry: ``get_config(name)``, ``get_smoke_config(name)``.
+
+The ten assigned architectures plus the paper's own subject model. Every
+config is selectable from launchers via ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_shape
+
+_MODULES = {
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "llama2-7b": "repro.configs.llama2_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "llama2-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {k: get_config(k) for k in _MODULES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Cell-applicability rules from the assignment."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return False  # pure full-attention archs skip long-context decode
+    return True
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "get_shape", "get_config",
+    "get_smoke_config", "all_configs", "ASSIGNED_ARCHS", "shape_applicable",
+]

@@ -1,0 +1,279 @@
+"""Static structured-pruning baselines the paper compares against (§5.1).
+
+All baselines emit a boolean keep-mask over the 2L blocks (mixer blocks
+first, FFN blocks second — the convention of ``repro.core.memory``) and are
+evaluated under the paper's protocol: prune until the *unified memory
+budget* (params + KV cache for the request shape) is met, then measure
+perplexity / task accuracy. ``SliceGPT`` is width-slicing rather than
+block-dropping, so it returns modified (params, cfg) instead of a mask.
+
+Fidelity notes (recorded per DESIGN.md §7):
+ * ShortGPT  — Block-Influence score = 1 − cos(h_in, h_out) per *layer*;
+   lowest-influence layers removed first.            [Men et al. 2024]
+ * MHA-Drop  — same cosine criterion per *attention block* only.
+                                                     [He et al. 2024]
+ * FFN-Skip  — cosine criterion per *FFN block* only. [Jaiswal et al. 2024]
+ * LLMPruner — first-order Taylor saliency |g ⊙ w| summed per block (the
+   gradient-based criterion; coupled-structure bookkeeping is subsumed by
+   our block granularity).                           [Ma et al. 2023]
+ * SliceGPT  — our TPU-native stand-in slices the lowest-L2 d_ff channels
+   and attention heads to a uniform width ratio (PCA rotation replaced by
+   magnitude ranking — the *width-reduction* mechanism is faithful, the
+   rotation is not; noted honestly in EXPERIMENTS.md).
+ * Random-Drop — uniform random blocks (the paper's RAP^-RL ablation).
+ * One-shot PPL — dense-model Δppl scores without re-evaluation (RAP^-GSI).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gsi as gsi_lib
+from repro.core import masks as masks_lib
+from repro.core.memory import MemoryModel
+from repro.models import decoder, layers
+
+
+# ----------------------------------------------------------- cosine probes
+def block_cosines(model, params, batch) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-block residual influence: 1 − cos(h, h + out).
+
+    Returns (mixer_scores [L], ffn_scores [L]); low score = redundant.
+    """
+    cfg = model.cfg
+    layout = decoder.default_layout(cfg)
+    h = decoder._embed(params, cfg, jnp.asarray(batch["tokens"]), None)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def cos(a, b):
+        a = a.astype(jnp.float32).reshape(-1, a.shape[-1])
+        b = b.astype(jnp.float32).reshape(-1, b.shape[-1])
+        num = jnp.sum(a * b, -1)
+        den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-9
+        return jnp.mean(num / den)
+
+    mix_s, ffn_s = [], []
+    for slot in layout:
+        if slot.mixer is not None:
+            mk = "attn" if slot.mixer == "local_attn" else slot.mixer
+            pm = decoder.tree_slice(params["stacks"][mk], slot.mixer_idx)
+            out, _ = decoder._apply_mixer(slot.mixer, pm, cfg, h, positions,
+                                          impl="xla")
+            h2 = h + out
+            mix_s.append(1.0 - float(cos(h, h2)))
+            h = h2
+        else:
+            mix_s.append(np.inf)
+        if slot.ffn is not None:
+            pf = decoder.tree_slice(params["stacks"][slot.ffn], slot.ffn_idx)
+            out = decoder._apply_ffn(slot.ffn, pf, cfg, h, impl="xla")
+            h2 = h + out
+            ffn_s.append(1.0 - float(cos(h, h2)))
+            h = h2
+        else:
+            ffn_s.append(np.inf)
+    return np.asarray(mix_s), np.asarray(ffn_s)
+
+
+def taylor_saliency(model, params, batch) -> np.ndarray:
+    """LLMPruner-style |g ⊙ w| per block → [2L] (∞ where block missing)."""
+    cfg = model.cfg
+    L = cfg.n_layers
+
+    def loss_fn(p):
+        l, _ = model.loss(p, batch)
+        return l
+
+    grads = jax.grad(loss_fn)(params)
+    layout = decoder.default_layout(cfg)
+    sal = np.full(2 * L, np.inf)
+    for i, slot in enumerate(layout):
+        if slot.mixer is not None:
+            mk = "attn" if slot.mixer == "local_attn" else slot.mixer
+            gw = jax.tree.map(
+                lambda g, w: jnp.sum(jnp.abs(g[slot.mixer_idx].astype(jnp.float32)
+                                             * w[slot.mixer_idx].astype(jnp.float32))),
+                grads["stacks"][mk], params["stacks"][mk])
+            sal[i] = float(sum(jax.tree.leaves(gw)))
+        if slot.ffn is not None:
+            gw = jax.tree.map(
+                lambda g, w: jnp.sum(jnp.abs(g[slot.ffn_idx].astype(jnp.float32)
+                                             * w[slot.ffn_idx].astype(jnp.float32))),
+                grads["stacks"][slot.ffn], params["stacks"][slot.ffn])
+            sal[L + i] = float(sum(jax.tree.leaves(gw)))
+    return sal
+
+
+# ----------------------------------------------------- mask-based baselines
+def _prune_by_order(order, mm: MemoryModel, bs, sql, budget,
+                    allowed: Optional[np.ndarray] = None) -> np.ndarray:
+    """Remove blocks in ``order`` (most-redundant first) until budget fits."""
+    L = mm.n_layers
+    mask = masks_lib.full_mask(L)
+    for b in order:
+        if mm.peak_bytes(mask, bs, sql) <= budget:
+            break
+        if allowed is not None and not allowed[b]:
+            continue
+        mask[b] = False
+    return mask
+
+
+def shortgpt_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
+    """Layer-level: removes (mixer, ffn) pairs by combined cosine influence."""
+    mix_s, ffn_s = block_cosines(model, params, batch)
+    L = mm.n_layers
+    layer_score = np.where(np.isfinite(mix_s), mix_s, 0) + \
+        np.where(np.isfinite(ffn_s), ffn_s, 0)
+    order_layers = np.argsort(layer_score)
+    order = []
+    for i in order_layers:       # drop the whole layer (both blocks)
+        order += [int(i), int(L + i)]
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+def mha_drop_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
+    mix_s, _ = block_cosines(model, params, batch)
+    order = [int(i) for i in np.argsort(mix_s) if np.isfinite(mix_s[i])]
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+def ffn_skip_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
+    _, ffn_s = block_cosines(model, params, batch)
+    L = mm.n_layers
+    order = [int(L + i) for i in np.argsort(ffn_s) if np.isfinite(ffn_s[i])]
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+def random_drop_mask(model, mm, bs, sql, budget, seed=0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    layout = decoder.default_layout(model.cfg)
+    L = mm.n_layers
+    present = np.array([s.mixer is not None for s in layout]
+                       + [s.ffn is not None for s in layout])
+    order = rng.permutation(np.nonzero(present)[0]).tolist()
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+def oneshot_ppl_mask(model, params, batch, mm, bs, sql, budget,
+                     chunk: int = 8) -> np.ndarray:
+    """RAP^-GSI: dense-model one-shot Δppl scores, no re-evaluation."""
+    scores = gsi_lib.oneshot_rank(model, params, batch, chunk=chunk)
+    order = [int(i) for i in np.argsort(scores) if np.isfinite(scores[i])]
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+def llmpruner_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
+    sal = taylor_saliency(model, params, batch)
+    order = [int(i) for i in np.argsort(sal) if np.isfinite(sal[i])]
+    return _prune_by_order(order, mm, bs, sql, budget)
+
+
+# ------------------------------------------------------- SliceGPT stand-in
+def slicegpt_slice(model, params, ratio: float):
+    """Uniform width slicing to ``ratio``: keeps the top-|L2| d_ff channels
+    and the top-|L2| whole query-head groups (KV heads and their G query
+    heads slice together so GQA stays consistent). Returns (params', cfg')
+    evaluable exactly like any other model."""
+    cfg = model.cfg
+    keep_f = max(8, int(round(cfg.d_ff * ratio)))
+    kv_keep = max(1, int(round(cfg.n_kv_heads * ratio)))
+    G = cfg.n_heads // max(cfg.n_kv_heads, 1)
+    new_cfg = cfg.replace(d_ff=keep_f, n_kv_heads=kv_keep,
+                          n_heads=kv_keep * G, head_dim=cfg.dh)
+
+    p = jax.tree.map(lambda x: x, params)  # shallow copy
+    st = dict(p["stacks"])
+
+    if "dense" in st:
+        def slice_ffn(tree):
+            wi, wo = tree["wi"], tree["wo"]          # [L,D,2F], [L,F,D]
+            F = cfg.d_ff
+            gate, up = wi[..., :F], wi[..., F:]
+            norm = (jnp.linalg.norm(gate.astype(jnp.float32), axis=1)
+                    + jnp.linalg.norm(up.astype(jnp.float32), axis=1)
+                    + jnp.linalg.norm(wo.astype(jnp.float32), axis=2))  # [L,F]
+            idx = jnp.argsort(-norm, axis=1)[:, :keep_f]                # [L,f]
+            take = jax.vmap(lambda m, i: m[:, i], in_axes=(0, 0))
+            new = dict(tree)
+            if cfg.activation in ("swiglu", "geglu"):
+                new["wi"] = jnp.concatenate(
+                    [take(gate, idx), take(up, idx)], axis=-1)
+            else:
+                new["wi"] = take(wi, idx)
+            new["wo"] = jax.vmap(lambda m, i: m[i, :], in_axes=(0, 0))(wo, idx)
+            return new
+        st["dense"] = slice_ffn(st["dense"])
+
+    if "attn" in st and cfg.n_kv_heads > 0:
+        def slice_attn(tree):
+            dh, K = cfg.dh, cfg.n_kv_heads
+            wk = tree["wk"].reshape(cfg.n_layers, cfg.d_model, K, dh)
+            norm = jnp.linalg.norm(
+                wk.astype(jnp.float32), axis=(1, 3))                    # [L,K]
+            kidx = jnp.argsort(-norm, axis=1)[:, :kv_keep]              # [L,k]
+            def take_kv(m):
+                mr = m.reshape(cfg.n_layers, cfg.d_model, K, dh)
+                return jax.vmap(lambda x, i: x[:, i], in_axes=(0, 0))(
+                    mr, kidx).reshape(cfg.n_layers, cfg.d_model, kv_keep * dh)
+            def take_q(m):
+                mr = m.reshape(cfg.n_layers, cfg.d_model, K, G, dh)
+                return jax.vmap(lambda x, i: x[:, i], in_axes=(0, 0))(
+                    mr, kidx).reshape(cfg.n_layers, cfg.d_model,
+                                      kv_keep * G * dh)
+            def take_o(m):
+                mr = m.reshape(cfg.n_layers, K, G, dh, cfg.d_model)
+                return jax.vmap(lambda x, i: x[i], in_axes=(0, 0))(
+                    mr, kidx).reshape(cfg.n_layers, kv_keep * G * dh,
+                                      cfg.d_model)
+            new = dict(tree)
+            new["wq"] = take_q(tree["wq"])
+            new["wk"] = take_kv(tree["wk"])
+            new["wv"] = take_kv(tree["wv"])
+            new["wo"] = take_o(tree["wo"])
+            if cfg.qkv_bias:
+                def take_bkv(b):
+                    br = b.reshape(cfg.n_layers, K, dh)
+                    return jax.vmap(lambda x, i: x[i], in_axes=(0, 0))(
+                        br, kidx).reshape(cfg.n_layers, kv_keep * dh)
+                def take_bq(b):
+                    br = b.reshape(cfg.n_layers, K, G, dh)
+                    return jax.vmap(lambda x, i: x[i], in_axes=(0, 0))(
+                        br, kidx).reshape(cfg.n_layers, kv_keep * G * dh)
+                new["bq"] = take_bq(tree["bq"])
+                new["bk"] = take_bkv(tree["bk"])
+                new["bv"] = take_bkv(tree["bv"])
+            return new
+        st["attn"] = slice_attn(st["attn"])
+
+    p = dict(p)
+    p["stacks"] = st
+    return p, new_cfg
+
+
+def slicegpt_fit_ratio(cfg, mm: MemoryModel, bs, sql, budget,
+                       tol: float = 1e-3) -> float:
+    """Bisect the width ratio whose (params+KV) footprint meets the budget.
+    Width slicing scales block params ~ratio and KV cache ~ratio."""
+    lo, hi = 0.05, 1.0
+    L = cfg.n_layers
+    full = masks_lib.full_mask(L)
+    embed = mm.embed_bytes
+    blocks = mm.param_bytes(full) - embed
+    state = mm.state_bytes(full, bs, sql)
+    while hi - lo > tol:
+        mid = 0.5 * (lo + hi)
+        peak = embed + blocks * mid + state * mid
+        if peak <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+BASELINES = ("shortgpt", "mha_drop", "ffn_skip", "random", "oneshot",
+             "llmpruner", "slicegpt")

@@ -1,0 +1,99 @@
+"""RAP online controller — paper Algorithm 3.
+
+Given the trained Q-network, an incoming request (batch, seq_len) and the
+measured memory budget, greedily removes blocks (masked argmax over Q) until
+the analytical peak fits. Produces a block mask; the serving runtime turns
+it into gates (masked mode) or a compacted executable (structural mode,
+cached per bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dqn as dqn_lib
+from repro.core import gsi as gsi_lib
+from repro.core import masks as masks_lib
+from repro.core.env import EnvConfig
+from repro.core.memory import MemoryModel
+
+
+@dataclasses.dataclass
+class Decision:
+    mask: np.ndarray
+    steps: int
+    peak_bytes: float
+    fits: bool
+    latency_s: float
+
+
+class RAPController:
+    """Holds (Q-params, GSI scorer, memory model) for one served model."""
+
+    def __init__(self, model, params, calib_batch, mm: MemoryModel,
+                 q_params: dict, env_cfg: EnvConfig = EnvConfig(),
+                 chunk: int = 8, recompute_scores: bool = True):
+        self.model = model
+        self.params = params
+        self.mm = mm
+        self.q_params = q_params
+        self.env_cfg = env_cfg
+        self.L = model.cfg.n_layers
+        self.recompute = recompute_scores
+        self._scorer = gsi_lib.make_candidate_scorer(model, calib_batch,
+                                                     chunk=chunk)
+        self._ppl = gsi_lib.make_ppl_fn(model, calib_batch)
+        self._dense_cache: Optional[np.ndarray] = None
+
+    def _importance(self, mask: np.ndarray) -> np.ndarray:
+        if not self.recompute and self._dense_cache is not None:
+            return self._dense_cache
+        cur = float(self._ppl(self.params, jnp.asarray(mask, jnp.float32)))
+        raw = np.asarray(self._scorer(self.params,
+                                      jnp.asarray(mask, jnp.float32)))
+        imp = gsi_lib.importance_scores(raw, cur)
+        if self._dense_cache is None:
+            self._dense_cache = imp
+        return imp
+
+    def _obs(self, mask, imp, bs, sql, budget) -> np.ndarray:
+        peak = self.mm.peak_bytes(mask, bs, sql)
+        dense = self.mm.dense_peak(bs, sql)
+        c = self.env_cfg
+        return np.concatenate([
+            [bs / c.bs_norm, sql / c.sql_norm],
+            imp[: self.L] / c.imp_norm, imp[self.L:] / c.imp_norm,
+            [budget / dense, peak / dense],
+        ]).astype(np.float32)
+
+    def decide(self, bs: int, sql: int, budget_bytes: float) -> Decision:
+        """Algorithm 3: prune until Mem_peak ≤ B (or STOP / exhaustion)."""
+        t0 = time.perf_counter()
+        mask = masks_lib.full_mask(self.L)
+        imp = self._importance(mask)
+        steps = 0
+        while (self.mm.peak_bytes(mask, bs, sql) > budget_bytes
+               and steps < 2 * self.L):
+            s = self._obs(mask, imp, bs, sql, budget_bytes)
+            q = np.array(dqn_lib.q_apply(self.q_params, jnp.asarray(s)))
+            # memory-aware action mask: while over budget, STOP is invalid
+            stop_ok = (not self.env_cfg.mask_stop_until_fit) or not mask.any()
+            valid = np.concatenate([[stop_ok], mask])
+            if not valid.any():
+                break
+            q[~valid] = dqn_lib.NEG
+            a = int(np.argmax(q))
+            if a == 0:
+                break
+            mask = masks_lib.remove_block(mask, a - 1)
+            steps += 1
+            if self.recompute:
+                imp = self._importance(mask)
+        peak = self.mm.peak_bytes(mask, bs, sql)
+        return Decision(mask=mask, steps=steps, peak_bytes=peak,
+                        fits=peak <= budget_bytes,
+                        latency_s=time.perf_counter() - t0)

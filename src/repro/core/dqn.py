@@ -1,0 +1,165 @@
+"""Masked DQN controller — paper Appendix A.3/A.4 (Algorithm 2).
+
+Pure-JAX Q-network (the paper's compact 2-layer MLP, ~18K params at
+Llama2-7B scale), masked ε-greedy behaviour policy, uniform replay, soft
+target updates, Adam. The jitted pieces are the Q forward and the TD update;
+the environment loop stays in Python (it calls the GSI scorer, itself a
+jitted batched forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+
+NEG = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    hidden: int = 64
+    lr: float = 1e-3
+    gamma: float = 0.99
+    tau: float = 0.01            # soft target update
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_episodes: int = 60
+    buffer_size: int = 20000
+    batch_size: int = 64
+    train_iters_per_step: int = 1
+
+
+def init_qnet(rng, state_dim: int, n_actions: int, hidden: int):
+    k1, k2 = jax.random.split(rng)
+    s1 = 1.0 / np.sqrt(state_dim)
+    s2 = 1.0 / np.sqrt(hidden)
+    return {
+        "w1": jax.random.normal(k1, (state_dim, hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, n_actions), jnp.float32) * s2,
+        "b2": jnp.zeros((n_actions,), jnp.float32),
+    }
+
+
+def q_apply(params, s):
+    h = jnp.tanh(s @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def n_params(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+class Replay:
+    def __init__(self, size: int, state_dim: int, n_actions: int):
+        self.size, self.ptr, self.full = size, 0, False
+        self.s = np.zeros((size, state_dim), np.float32)
+        self.a = np.zeros((size,), np.int32)
+        self.r = np.zeros((size,), np.float32)
+        self.s2 = np.zeros((size, state_dim), np.float32)
+        self.d = np.zeros((size,), np.float32)
+        self.valid2 = np.zeros((size, n_actions), bool)
+
+    def add(self, s, a, r, s2, d, valid2):
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.d[i], self.valid2[i] = s2, d, valid2
+        self.ptr = (i + 1) % self.size
+        self.full = self.full or self.ptr == 0
+
+    def __len__(self):
+        return self.size if self.full else self.ptr
+
+    def sample(self, rng: np.random.Generator, n: int):
+        idx = rng.integers(0, len(self), size=n)
+        return (self.s[idx], self.a[idx], self.r[idx], self.s2[idx],
+                self.d[idx], self.valid2[idx])
+
+
+@functools.partial(jax.jit, static_argnames=("gamma",))
+def td_update(qp, tp, opt_state, batch, gamma: float, opt_cfg_lr: float):
+    s, a, r, s2, d, valid2 = batch
+
+    def loss_fn(qp):
+        q = q_apply(qp, s)
+        qa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+        q2 = q_apply(tp, s2)
+        q2 = jnp.where(valid2, q2, NEG)
+        target = r + gamma * (1.0 - d) * jnp.max(q2, axis=1)
+        return jnp.mean(jnp.square(qa - jax.lax.stop_gradient(target)))
+
+    loss, grads = jax.value_and_grad(loss_fn)(qp)
+    cfg = adamw.AdamWConfig(lr=opt_cfg_lr, weight_decay=0.0, clip_norm=1.0,
+                            warmup_steps=0, schedule="constant")
+    qp, opt_state, _ = adamw.apply(cfg, qp, grads, opt_state)
+    return qp, opt_state, loss
+
+
+@jax.jit
+def soft_update(tp, qp, tau: float):
+    return jax.tree.map(lambda t, q: (1 - tau) * t + tau * q, tp, qp)
+
+
+def select_action(qp, s, valid: np.ndarray, eps: float,
+                  rng: np.random.Generator) -> int:
+    if rng.random() < eps:
+        return int(rng.choice(np.nonzero(valid)[0]))
+    q = np.array(q_apply(qp, jnp.asarray(s)))
+    q[~valid] = NEG
+    return int(np.argmax(q))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    q_params: dict
+    episode_rewards: List[float]
+    episode_fits: List[bool]
+    losses: List[float]
+
+
+def train(env_factory: Callable[[], tuple], *, episodes: int,
+          cfg: DQNConfig = DQNConfig(), seed: int = 0,
+          request_sampler: Optional[Callable] = None) -> TrainResult:
+    """Algorithm 2. ``env_factory() → env``; ``request_sampler(rng) →
+    (bs, sql, budget_bytes)`` samples the per-episode workload."""
+    rng = np.random.default_rng(seed)
+    env = env_factory()
+    qp = init_qnet(jax.random.key(seed), env.state_dim, env.n_actions,
+                   cfg.hidden)
+    tp = jax.tree.map(jnp.copy, qp)
+    opt_state = adamw.init(qp)
+    buf = Replay(cfg.buffer_size, env.state_dim, env.n_actions)
+
+    rewards, fits, losses = [], [], []
+    for ep in range(episodes):
+        eps = max(cfg.eps_end,
+                  cfg.eps_start - (cfg.eps_start - cfg.eps_end)
+                  * ep / max(cfg.eps_decay_episodes, 1))
+        bs, sql, budget = request_sampler(rng)
+        s = env.reset(bs, sql, budget)
+        total, done = 0.0, False
+        while not done:
+            valid = env.valid_actions()
+            a = select_action(qp, s, valid, eps, rng)
+            s2, r, done, info = env.step(a)
+            buf.add(s, a, r, s2, float(done), env.valid_actions())
+            s = s2
+            total += r
+            if len(buf) >= cfg.batch_size:
+                for _ in range(cfg.train_iters_per_step):
+                    batch = buf.sample(rng, cfg.batch_size)
+                    qp, opt_state, loss = td_update(
+                        qp, tp, opt_state,
+                        tuple(jnp.asarray(x) for x in batch),
+                        cfg.gamma, cfg.lr)
+                    losses.append(float(loss))
+                tp = soft_update(tp, qp, cfg.tau)
+        rewards.append(total)
+        fits.append(bool(info["fits"]))
+    return TrainResult(qp, rewards, fits, losses)

@@ -1,0 +1,110 @@
+"""Block masks ↔ gates ↔ structural compaction.
+
+A *mask* is a boolean [2L] vector (True = keep), indexed per
+``repro.core.memory``. Two execution forms:
+
+* masked mode   — ``mask_to_gates`` produces the runtime 0/1 gate inputs for
+                  the single compiled executable (no memory savings);
+* structural    — ``compact_params`` gathers the per-kind parameter stacks
+                  along the layer axis, yielding genuinely smaller params, a
+                  new layout, and a smaller KV cache. Executables are cached
+                  per ``bucket_key`` (the retained-layout signature), vLLM
+                  shape-bucket style.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.decoder import LayerSlot, default_layout, layout_counts
+
+
+def full_mask(n_layers: int) -> np.ndarray:
+    return np.ones(2 * n_layers, bool)
+
+
+def mask_to_gates(mask) -> Dict[str, jnp.ndarray]:
+    m = jnp.asarray(mask)
+    L = m.shape[0] // 2
+    return {"mixer": m[:L].astype(jnp.float32),
+            "ffn": m[L:].astype(jnp.float32)}
+
+
+def remove_block(mask: np.ndarray, block: int) -> np.ndarray:
+    out = np.array(mask, copy=True)
+    out[block] = False
+    return out
+
+
+def active_blocks(mask: np.ndarray) -> np.ndarray:
+    return np.nonzero(np.asarray(mask))[0]
+
+
+def compact_layout(cfg, mask: np.ndarray) -> Tuple[Tuple[LayerSlot, ...], Dict]:
+    """Retained layout: drop layers where both blocks are pruned; keep gate
+    info for half-pruned layers. Returns (layout, per-kind gather indices)."""
+    base = default_layout(cfg)
+    L = len(base)
+    m = np.asarray(mask)
+    keep_rows = [i for i in range(L) if m[i] or m[L + i]]
+    gather: Dict[str, list] = {}
+    slots = []
+    counters: Dict[str, int] = {}
+    for i in keep_rows:
+        s = base[i]
+        mixer = s.mixer if m[i] else None
+        f = s.ffn if m[L + i] else None
+        mi = fi = 0
+        if mixer is not None:
+            mk = "attn" if mixer == "local_attn" else mixer
+            gather.setdefault(mk, []).append(s.mixer_idx)
+            mi = counters.get(mk, 0)
+            counters[mk] = mi + 1
+        if f is not None:
+            gather.setdefault(f, []).append(s.ffn_idx)
+            fi = counters.get(f, 0)
+            counters[f] = fi + 1
+        slots.append(LayerSlot(mixer, mi, f, fi))
+    return tuple(slots), gather
+
+
+def compact_params(params: dict, cfg, mask: np.ndarray):
+    """Gather stacks per the mask. Returns (small_params, layout, gates).
+
+    ``gates`` are all-ones over the compacted layout (masking became
+    structure); callers pass them (or None) to forward/decode.
+    """
+    layout, gather = compact_layout(cfg, mask)
+    new_stacks = {}
+    for kind, idxs in gather.items():
+        idx = jnp.asarray(idxs, jnp.int32)
+        new_stacks[kind] = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                        params["stacks"][kind])
+    small = dict(params)
+    small["stacks"] = new_stacks
+    return small, layout
+
+
+def bucket_key(cfg, mask: np.ndarray) -> Tuple:
+    """Executable-cache key: the retained layout signature (kinds sequence).
+
+    Whole-layer drops on uniform architectures collapse by count — any mask
+    removing k full layers maps to the same (L-k)-layer signature, so those
+    masks share one compiled program (vLLM-shape-bucket-style). Half-layer
+    drops keep their position (the block sequence differs structurally).
+    """
+    layout, _ = compact_layout(cfg, mask)
+    return tuple((s.mixer, s.ffn) for s in layout)
+
+
+def mask_param_fraction(cfg, mask: np.ndarray) -> float:
+    """Fraction of block params retained (excludes embeddings) — Table 4."""
+    mix, ffn = cfg.block_param_counts()
+    L = cfg.n_layers
+    m = np.asarray(mask)
+    tot = float(np.sum(mix) + np.sum(ffn))
+    kept = float(np.asarray(mix) @ m[:L] + np.asarray(ffn) @ m[L:])
+    return kept / max(tot, 1.0)

@@ -1,0 +1,88 @@
+"""Synthetic serving workload + memory-availability traces (paper Fig. 2/5).
+
+Models the two runtime-variance sources the paper identifies:
+ * input-driven — request mix: bursty arrivals, bimodal prompt lengths
+   (short conversational turns + long-form documents), diurnal modulation,
+   batch sizes from queue depth  (Azure LLM-trace-like, Stojkovic 2025);
+ * system-level — available-memory trace: base capacity minus co-running
+   application interference (OU random walk + occasional spikes).
+
+Everything is deterministic in the seed so experiments replay exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    t: float                 # arrival time (s)
+    batch: int
+    seq_len: int
+    budget_frac: float       # available memory / dense peak at this instant
+
+
+@dataclasses.dataclass
+class WorkloadConfig:
+    seed: int = 0
+    horizon_s: float = 600.0
+    base_rate: float = 0.5           # requests/s baseline
+    burst_rate: float = 4.0          # requests/s during bursts
+    burst_prob: float = 0.08
+    short_len: Tuple[int, int] = (64, 512)
+    long_len: Tuple[int, int] = (1024, 4096)
+    long_frac: float = 0.25
+    max_batch: int = 32
+    mem_base: float = 1.0            # fraction of dense peak available
+    mem_walk_sigma: float = 0.04
+    mem_spike_prob: float = 0.03
+    mem_spike_depth: Tuple[float, float] = (0.2, 0.5)
+    mem_floor: float = 0.45
+    round_len_to: int = 64
+
+
+def generate(cfg: WorkloadConfig) -> List[Request]:
+    rng = np.random.default_rng(cfg.seed)
+    out: List[Request] = []
+    t = 0.0
+    mem = cfg.mem_base
+    while t < cfg.horizon_s:
+        diurnal = 1.0 + 0.5 * np.sin(2 * np.pi * t / cfg.horizon_s)
+        rate = (cfg.burst_rate if rng.random() < cfg.burst_prob
+                else cfg.base_rate) * diurnal
+        t += float(rng.exponential(1.0 / max(rate, 1e-6)))
+        # memory availability: mean-reverting walk + interference spikes
+        mem += (rng.normal(0.0, cfg.mem_walk_sigma)
+                + 0.1 * (cfg.mem_base - mem))
+        if rng.random() < cfg.mem_spike_prob:
+            mem -= rng.uniform(*cfg.mem_spike_depth)
+        mem = float(np.clip(mem, cfg.mem_floor, 1.0))
+        if rng.random() < cfg.long_frac:
+            sql = int(rng.integers(*cfg.long_len))
+        else:
+            sql = int(rng.integers(*cfg.short_len))
+        sql = max(cfg.round_len_to,
+                  (sql // cfg.round_len_to) * cfg.round_len_to)
+        bs = int(2 ** rng.integers(0, int(np.log2(cfg.max_batch)) + 1))
+        out.append(Request(t=t, batch=bs, seq_len=sql, budget_frac=mem))
+    return out
+
+
+def request_sampler(cfg: WorkloadConfig, mm, *,
+                    budget_range: Tuple[float, float] = (0.55, 0.95)):
+    """Adapter for ``repro.core.dqn.train``: samples (bs, sql, budget_bytes)
+    per episode from the workload distributions."""
+    wl_rng = np.random.default_rng(cfg.seed + 77)
+    reqs = generate(cfg)
+
+    def sample(rng: np.random.Generator):
+        r = reqs[int(rng.integers(0, len(reqs)))]
+        frac = float(np.clip(r.budget_frac, *budget_range))
+        budget = frac * mm.dense_peak(r.batch, r.seq_len)
+        return r.batch, r.seq_len, budget
+
+    del wl_rng
+    return sample

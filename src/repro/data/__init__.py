@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticCorpus, batch_iterator
+
+__all__ = ["SyntheticCorpus", "batch_iterator"]

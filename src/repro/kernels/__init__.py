@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for RAP's data-plane hot spots.
+
+Each kernel ships three pieces: ``<name>.py`` (``pl.pallas_call`` +
+BlockSpec tiling), a jitted wrapper in ``ops.py``, and a pure-jnp oracle in
+``ref.py``. Kernels cover exactly the two block families RAP prunes —
+attention (KV-dominated: flash prefill + flash decode) and FFN
+(parameter-dominated: fused GLU) — plus the SSM/hybrid mixers of the
+assigned architectures (SSD chunk scan, RG-LRU blocked recurrence).
+"""

@@ -1,0 +1,60 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container)
+they execute in ``interpret=True`` mode, which runs the kernel body in
+Python on CPU — bit-accurate validation of the same tiling/control flow
+the TPU lowers. ``impl='pallas'`` paths throughout ``repro.models`` land
+here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru as _rg
+from repro.kernels import ssd as _ssd
+from repro.kernels import swiglu as _glu
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_k"))
+def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
+                     block_k: int = 512):
+    return _dec.decode_attention(q, k, v, valid, softcap=softcap,
+                                 block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_t",
+                                             "block_f"))
+def fused_glu(h, activation: str = "swiglu", *, block_t: int = 256,
+              block_f: int = 512):
+    return _glu.fused_glu(h, activation, block_t=block_t, block_f=block_f,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(xh, log_a, Bm, Cm, chunk: int = 256):
+    return _ssd.ssd(xh, log_a, Bm, Cm, chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w"))
+def rglru(a, b, *, block_t: int = 256, block_w: int = 512):
+    return _rg.rglru(a, b, block_t=block_t, block_w=block_w,
+                     interpret=_interpret())

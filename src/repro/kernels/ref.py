@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is an *independent*, simple implementation of the kernel's
+contract (naive masked softmax, naive sequential recurrences). Tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _maybe_softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0.0 else x
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: [B,Sq,H,D]; k,v: [B,Skv,K,D] (H % K == 0). Returns [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(D))
+    s = _maybe_softcap(s, softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid, *, softcap: float = 0.0):
+    """q: [B,1,H,D]; k,v: [B,S,K,D]; valid: [S] bool. Returns [B,1,H,D]."""
+    B, _, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(D))
+    s = _maybe_softcap(s, softcap)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    return out.astype(q.dtype)
+
+
+def glu_ref(h, activation: str = "swiglu"):
+    """h: [..., 2F] fused (gate, up) → [..., F]."""
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate) if activation == "swiglu" else \
+        jax.nn.gelu(gate, approximate=True)
+    return (act * up).astype(h.dtype)
+
+
+def ssd_ref(xh, log_a, Bm, Cm):
+    """Naive sequential SSD recurrence (exact linear form).
+
+    xh: [B,T,H,P] (dt already folded in); log_a: [B,T,H]; Bm/Cm: [B,T,N].
+    state_t = exp(log_a_t)·state_{t-1} + xh_t ⊗ B_t;  y_t = state_t · C_t.
+    Returns (y [B,T,H,P] f32, final_state [B,H,P,N] f32).
+    """
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    xh = xh.astype(jnp.float32)
+    log_a = log_a.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    def step(state, inputs):
+        x_t, la_t, b_t, c_t = inputs      # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(la_t)[:, :, None, None]
+        state = state * a + x_t[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+        return state, y
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(log_a, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def rglru_ref(a, b):
+    """Naive linear recurrence h_t = a_t·h_{t-1} + b_t, h_0 = b_0 (zero init).
+
+    a, b: [B,T,W] f32. Returns h [B,T,W] f32.
+    """
+    def step(h, inputs):
+        a_t, b_t = inputs
+        h = a_t * h + b_t
+        return h, h
+
+    init = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, init, (jnp.moveaxis(a, 1, 0),
+                                      jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod AOT dry-run: ``lower().compile()`` every (arch × shape × mesh).
+
+This is the scale proof for the whole framework: 512 placeholder host
+devices stand in for 2 TPU v5e pods, GSPMD partitions every step function
+under the production sharding rules, and the compiled artifact yields
+  * ``memory_analysis()``  — per-device bytes (proves the cell fits HBM),
+  * ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+  * the optimized HLO      — parsed for per-device collective wire bytes.
+
+One JSON per cell lands in ``experiments/dryrun/`` and feeds
+``repro.roofline`` / ``benchmarks.roofline``.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs 4]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------- policies
+def cell_policy(arch: str, shape) -> Dict[str, Any]:
+    """Per-cell sharding/numerics choices (recorded in the cell JSON).
+
+    * fsdp      — ZeRO-3 weight sharding over "data"; required where params
+                  + optimizer exceed per-device HBM (all train shapes, and
+                  the 132B/32B archs everywhere).
+    * kv_int8   — quantized KV cache; required where the bf16 cache exceeds
+                  pod HBM (qwen1.5-32b decode_32k: 5.5 TB bf16 > 4 TB pod).
+    * shard_seq — batch=1 long-context: shard sequence/state dims over the
+                  batch axes instead (sequence parallelism).
+    """
+    fsdp = (shape.kind == "train") or arch in ("dbrx-132b", "qwen1.5-32b")
+    kv_int8 = arch == "qwen1.5-32b" and shape.kind == "decode"
+    shard_seq = shape.global_batch == 1
+    micro = {"dbrx-132b": 4, "qwen1.5-32b": 4, "qwen3-14b": 2,
+             "glm4-9b": 2, "recurrentgemma-9b": 2}.get(arch, 1) \
+        if shape.kind == "train" else 1
+    return {"fsdp": fsdp, "kv_int8": kv_int8, "shard_seq": shard_seq,
+            "microbatches": micro}
+
+
+# ------------------------------------------------------------- collectives
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2,16,128]' → bytes. Tuple shapes handled by caller."""
+    import re as _re
+    m = _re.match(r"([a-z0-9]+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    nbytes = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+              "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+              "f64": 8, "c64": 8, "u1": 1, "s1": 1}.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def parse_collectives(hlo: str) -> Dict[str, Any]:
+    """Per-device collective wire bytes from optimized (post-SPMD) HLO.
+
+    Shapes in partitioned HLO are per-device. Ring-algorithm wire factors:
+      all-gather        (g-1)/g × output
+      all-reduce        2(g-1)/g × operand
+      reduce-scatter    (g-1) × output      (input = g × output)
+      all-to-all        (g-1)/g × operand
+      collective-permute  1 × operand
+    """
+    import re as _re
+    out = {k: {"count": 0, "bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLLECTIVES}
+    group_re = _re.compile(r"replica_groups=\{\{([\d,]+)\}")
+    iota_re = _re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+    for line in hlo.splitlines():
+        ls = line.lstrip()
+        m = _re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[a-z0-9]+\[)", ls)
+        if m is None:
+            continue
+        op = None
+        for k in _COLLECTIVES:
+            if f"= {k}" in ls.replace("(", " (") or f" {k}(" in ls \
+                    or _re.search(rf"=\s*\(?\s*[a-z0-9]+\[[^\]]*\][^=]*\s{k}\(", ls):
+                op = k
+                break
+        if op is None:
+            # robust fallback: opcode appears right after the shape
+            mm = _re.search(rf"\)?\s({'|'.join(_COLLECTIVES)})(-start|-done)?\(",
+                            ls)
+            if mm is None:
+                continue
+            op = mm.group(1)
+            if mm.group(2) == "-done":
+                continue  # count -start only, not its completion
+        if f"{op}-done" in ls:
+            continue
+        # result shape(s): everything before the opcode
+        shapes = _re.findall(r"[a-z0-9]+\[[\d,]*\]", ls.split("(")[0])
+        nbytes = sum(_shape_bytes(s) for s in shapes)
+        g = 1
+        mg = group_re.search(ls)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = iota_re.search(ls)
+            if mi:
+                g = int(mi.group(2))
+        if op == "collective-permute":
+            factor = 1.0          # point-to-point: sends its whole tensor
+        elif g <= 1:
+            factor = 0.0
+        elif op == "all-gather":
+            factor = (g - 1) / g
+        elif op == "all-reduce":
+            factor = 2 * (g - 1) / g
+        elif op == "reduce-scatter":
+            factor = float(g - 1)
+        else:  # all-to-all
+            factor = (g - 1) / g
+        out[op]["count"] += 1
+        out[op]["bytes"] += float(nbytes)
+        out[op]["wire_bytes"] += float(nbytes) * factor
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    return out
+
+
+# ------------------------------------------------------------------ lower
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy_override: Optional[Dict] = None,
+               unroll: bool = False) -> Dict[str, Any]:
+    if unroll:   # exact per-op HLO accounting (see decoder.force_unroll)
+        os.environ["REPRO_UNROLL"] = "1"
+    else:
+        os.environ.pop("REPRO_UNROLL", None)
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_shape, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import registry
+    from repro.optim import adamw
+    from repro.parallel import (batch_pspecs, cache_pspecs, param_pspecs,
+                                shardings_for)
+    from repro.parallel import activation as act
+    from repro.runtime import steps as steps_lib
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch skips long_500k"}
+
+    policy = cell_policy(arch, shape)
+    if policy_override:
+        policy.update(policy_override)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = registry.build(cfg)
+    t0 = time.time()
+
+    act_ctx = act.use(mesh, shard_seq=policy["shard_seq"],
+                      fsdp=policy["fsdp"])
+    act_ctx.__enter__()
+    try:
+        return _lower_cell_inner(arch, shape_name, multi_pod, policy, mesh,
+                                 model, shape, cfg, unroll, t0)
+    finally:
+        act_ctx.__exit__(None, None, None)
+
+
+def _lower_cell_inner(arch, shape_name, multi_pod, policy, mesh, model,
+                      shape, cfg, unroll, t0):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.optim import adamw
+    from repro.parallel import (batch_pspecs, cache_pspecs, param_pspecs,
+                                shardings_for)
+    from repro.runtime import steps as steps_lib
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspec = param_pspecs(params_shape, mesh, fsdp=policy["fsdp"])
+    psh = shardings_for(pspec, mesh)
+    specs = model.input_specs(shape)
+    bsh = shardings_for(
+        batch_pspecs(specs, mesh, shard_seq=policy["shard_seq"]), mesh)
+    kv_dtype = jnp.int8 if policy["kv_int8"] else None
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_shape = jax.eval_shape(adamw.init, params_shape)
+        osh = adamw.AdamWState(
+            step=NamedSharding(mesh, P()), mu=psh,
+            nu=jax.tree.map(lambda s: s, psh))
+        fn = steps_lib.make_train_step(
+            model, opt_cfg, remat=True,
+            microbatches=policy.get("microbatches", 1))
+        jfn = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                      out_shardings=(psh, osh, None),
+                      donate_argnums=(0, 1))
+        lowered = jfn.lower(params_shape, opt_shape, specs)
+    elif shape.kind == "prefill":
+        fn = steps_lib.make_prefill_step(model, shape.seq_len,
+                                         kv_dtype=kv_dtype)
+        out_shape = jax.eval_shape(fn, params_shape, specs)
+        csh = shardings_for(
+            cache_pspecs(out_shape[1], mesh, batch=shape.global_batch,
+                         shard_seq=policy["shard_seq"]), mesh)
+        jfn = jax.jit(fn, in_shardings=(psh, bsh),
+                      out_shardings=(None, csh))
+        lowered = jfn.lower(params_shape, specs)
+    else:  # decode
+        nv = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch,
+                                     shape.seq_len + nv,
+                                     kv_dtype=kv_dtype))
+        csh = shardings_for(
+            cache_pspecs(cache_shape, mesh, batch=shape.global_batch,
+                         shard_seq=policy["shard_seq"]), mesh)
+        fn = steps_lib.make_decode_step(model)
+        jfn = jax.jit(fn, in_shardings=(psh, csh, bsh["tokens"]),
+                      out_shardings=(None, csh), donate_argnums=(1,))
+        lowered = jfn.lower(params_shape, cache_shape, specs["tokens"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "unroll": unroll,
+        "multi_pod": multi_pod, "n_devices": n_dev,
+        "mesh": dict(mesh.shape), "policy": policy, "skipped": False,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "real_bytes": int(getattr(mem, "argument_size_in_bytes", 0)
+                              + getattr(mem, "temp_size_in_bytes", 0)
+                              + getattr(mem, "output_size_in_bytes", 0)
+                              - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "cost": {"flops": float(cost.get("flops", 0.0)),
+                 "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "collectives": coll,
+        "model_params": int(cfg.total_params()),
+        "model_params_active": int(cfg.active_params()),
+    }
+    return result
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, unroll: bool = False) -> Dict[str, Any]:
+    tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}"
+    if unroll:
+        tag += "_unroll"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    try:
+        result = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                            unroll=unroll)
+    except Exception as e:
+        result = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                  "skipped": False, "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-3000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,
+                               shape_applicable)
+
+    if args.all:
+        cells = [(a, s.name) for a in ASSIGNED_ARCHS for s in SHAPES
+                 if shape_applicable(get_config(a), s)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    failures = 0
+    for arch, shp in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shp}_{'pod2' if mp else 'pod1'}"
+            if args.unroll:
+                tag += "_unroll"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    prev = json.load(f)
+                if "error" not in prev:
+                    print(f"SKIP {tag} (cached)")
+                    continue
+            r = run_cell(arch, shp, mp, args.out, unroll=args.unroll)
+            if r.get("error"):
+                failures += 1
+                print(f"FAIL {tag}: {r['error']}", flush=True)
+            elif r.get("skipped"):
+                print(f"N/A  {tag}: {r['reason']}", flush=True)
+            else:
+                mem_gb = r["memory"]["real_bytes"] / 1e9
+                print(f"OK   {tag}: compile={r['compile_s']}s "
+                      f"mem/dev={mem_gb:.2f}GB "
+                      f"GFLOP={r['cost']['flops']/1e9:.1f} "
+                      f"wire={r['collectives']['total_wire_bytes']/1e6:.1f}MB",
+                      flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

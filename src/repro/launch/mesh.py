@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state — meshes are built
+inside functions only, so the 512-placeholder-device XLA flag (set by
+``dryrun.py`` before any jax import) and real-TPU runs both work.
+
+Topology: one v5e pod = 16×16 = 256 chips → mesh ("data", "model").
+Multi-pod adds a leading "pod" axis (DCN-connected): batch shards over
+("pod", "data"); "model" (TP/EP) stays inside a pod where ICI is fast.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import AxisType
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[: int(np.prod(shape))])
+
+
+def make_host_mesh(shape: Tuple[int, ...] = None, axes=None):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    import jax
+    from jax.sharding import AxisType
+
+    n = len(jax.devices())
+    if shape is None:
+        shape, axes = (n, 1), ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=jax.devices()[: int(np.prod(shape))])
+
+
+# Hardware constants for the roofline (TPU v5e per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,112 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""RAP-at-scale sweep: lower the decode step for structurally pruned
+variants of an architecture and report how the roofline terms move.
+
+Decode is memory-bound (params + KV cache streamed once per token), so the
+paper's co-pruning of MHA blocks (KV bytes) and FFN blocks (param bytes) is
+*directly* a roofline lever: the dominant memory term scales with the
+retained blocks. This script quantifies that at production scale — the
+systems-level counterpart of the paper's Table 1.
+
+  python -m repro.launch.rap_sweep --arch qwen3-14b --shape decode_32k
+"""
+import argparse
+import json
+
+
+def lower_pruned_decode(arch: str, shape_name: str, keep_frac: float,
+                        out_dir: str):
+    """Lower decode for a layer-bucket pruned variant (keep_frac of layer
+    pairs — the dominant structural-compaction bucket)."""
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_config, get_shape
+    from repro.launch.dryrun import cell_policy, parse_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import registry
+    from repro.parallel import (batch_pspecs, cache_pspecs, param_pspecs,
+                                shardings_for)
+    from repro.parallel import activation as act
+    from repro.runtime import steps as steps_lib
+
+    base = get_config(arch)
+    L = max(2, int(round(base.n_layers * keep_frac)))
+    cfg = base.replace(n_layers=L)
+    shape = get_shape(shape_name)
+    policy = cell_policy(arch, shape)
+    mesh = make_production_mesh()
+    model = registry.build(cfg)
+
+    with act.use(mesh, shard_seq=policy["shard_seq"], fsdp=policy["fsdp"]):
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        psh = shardings_for(param_pspecs(params_shape, mesh,
+                                         fsdp=policy["fsdp"]), mesh)
+        specs = model.input_specs(shape)
+        bsh = shardings_for(batch_pspecs(specs, mesh), mesh)
+        kv_dtype = jax.numpy.int8 if policy["kv_int8"] else None
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     kv_dtype=kv_dtype))
+        csh = shardings_for(cache_pspecs(cache_shape, mesh,
+                                         batch=shape.global_batch,
+                                         shard_seq=policy["shard_seq"]),
+                            mesh)
+        fn = steps_lib.make_decode_step(model)
+        jfn = jax.jit(fn, in_shardings=(psh, csh, bsh["tokens"]),
+                      out_shardings=(None, csh), donate_argnums=(1,))
+        lowered = jfn.lower(params_shape, cache_shape, specs["tokens"])
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = parse_collectives(compiled.as_text())
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    flops, byts = float(cost.get("flops", 0)), float(
+        cost.get("bytes accessed", 0))
+    result = {
+        "arch": arch, "shape": shape_name, "keep_frac": keep_frac,
+        "n_layers": L,
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": byts / HBM_BW,
+        "collective_s": coll["total_wire_bytes"] / ICI_BW,
+        "hlo_flops": flops, "hlo_bytes": byts,
+        "real_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                    + mem.output_size_in_bytes
+                    - mem.alias_size_in_bytes) / 1e9,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"rap_{arch}_{shape_name}_keep{int(keep_frac*100)}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--fracs", default="1.0,0.8,0.6")
+    ap.add_argument("--out", default="experiments/rap_sweep")
+    args = ap.parse_args()
+
+    print(f"{'keep':>5} {'layers':>6} {'mem_s':>9} {'comp_s':>9} "
+          f"{'coll_s':>9} {'fit_GB':>7}")
+    rows = []
+    for frac in [float(x) for x in args.fracs.split(",")]:
+        r = lower_pruned_decode(args.arch, args.shape, frac, args.out)
+        rows.append(r)
+        print(f"{frac:5.2f} {r['n_layers']:6d} {r['memory_s']:9.5f} "
+              f"{r['compute_s']:9.5f} {r['collective_s']:9.5f} "
+              f"{r['real_gb']:7.2f}", flush=True)
+    base = rows[0]
+    for r in rows[1:]:
+        print(f"# keep={r['keep_frac']}: step-time bound "
+              f"{max(r['memory_s'], r['compute_s'], r['collective_s'])/max(base['memory_s'], base['compute_s'], base['collective_s']):.3f}×"
+              f" of dense")
+
+
+if __name__ == "__main__":
+    main()

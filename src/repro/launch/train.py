@@ -1,0 +1,77 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-7b --smoke \
+      --steps 200 --ckpt-dir /tmp/ckpt
+
+``--smoke`` selects the reduced config of the same family (CPU-trainable);
+omit it on real hardware for the full config. The trainer resumes from the
+latest checkpoint automatically — rerunning the same command after a crash
+continues the run (fault-tolerance path exercised by tests).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", action="store_true",
+                    help="build a mesh over available devices")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import SyntheticCorpus, batch_iterator
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import registry
+    from repro.optim import adamw
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = registry.build(cfg)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
+
+    extra = None
+    if cfg.family == "vlm":
+        import jax.numpy as jnp
+        extra = {"vision_embeds": jnp.zeros(
+            (args.batch, cfg.n_vision_tokens, cfg.d_model), cfg.jnp_dtype())}
+    if cfg.is_encoder_decoder:
+        import jax.numpy as jnp
+        extra = {"frames": jnp.zeros(
+            (args.batch, cfg.n_audio_frames, cfg.d_model), cfg.jnp_dtype())}
+
+    trainer = Trainer(
+        model,
+        adamw.AdamWConfig(lr=args.lr, total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, seed=args.seed,
+                      log_every=max(args.steps // 20, 1)),
+        mesh=make_host_mesh() if args.mesh else None,
+        on_log=lambda s, m: print(
+            f"step {s:5d}  loss {m['loss']:.4f}  ppl {m['ppl']:.2f}  "
+            f"gnorm {m['grad_norm']:.3f}", flush=True),
+    )
+    start = trainer.step if trainer.maybe_restore() else 0
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    batches = batch_iterator(corpus, args.batch, args.seq, start=start,
+                             extra=extra)
+    summary = trainer.run(batches)
+    print(f"done at step {summary['final_step']}; "
+          f"stragglers observed: {len(summary['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

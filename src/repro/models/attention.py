@@ -1,0 +1,261 @@
+"""GQA/MQA/MHA attention with RoPE, qk-norm, qkv-bias, local windows, caching.
+
+Two data paths:
+  * prefill/train — full-sequence causal (optionally banded) attention;
+  * decode       — one query token against a pre-allocated KV cache.
+
+The XLA path is the default (and the dry-run path); ``impl='pallas'`` routes
+through the Pallas flash-attention kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -2.0e38
+
+
+def init_attn_params(rng, cfg) -> dict:
+    """Separate wq/wk/wv (not fused): the fused [D, q+2kv] layout puts the
+    q|k|v split boundaries off the 16-way TP shard grid for most assigned
+    head counts, forcing per-layer reshards. Separate projections shard
+    their own feature dims cleanly (MaxText-style)."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    pd = cfg.jnp_param_dtype()
+    p = {
+        "wq": layers.dense_init(k1, cfg.d_model, cfg.q_dim, pd),
+        "wk": layers.dense_init(k2, cfg.d_model, cfg.kv_dim, pd),
+        "wv": layers.dense_init(k3, cfg.d_model, cfg.kv_dim, pd),
+        "wo": layers.dense_init(k4, cfg.q_dim, cfg.d_model, pd,
+                                scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), pd)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), pd)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.dh,), pd)
+        p["k_norm"] = jnp.zeros((cfg.dh,), pd)
+    return p
+
+
+def _project_qkv(params, cfg, x):
+    """x: [B, S, D] → q [B,S,H,Dh], k/v [B,S,K,Dh]."""
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, cfg.n_heads, cfg.dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, mask):
+    """q [B,Sq,H,Dh], k/v [B,Skv,K,Dh], mask broadcastable [B,1,Sq,Skv]."""
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K  # queries per kv head
+    q = q.reshape(B, Sq, K, G, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = layers.softcap(logits, cfg.logit_softcap)
+    logits = jnp.where(mask[:, :, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def _causal_mask(Sq: int, Skv: int, window: int, q_offset: int = 0):
+    """[1, 1, Sq, Skv] causal (banded if window>0) mask."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None, None, :, :]
+
+
+# --------------------------------------------------- chunked (long-context)
+_CHUNK_MIN_SEQ = 4096        # plain path below this — probs fit comfortably
+_CHUNK_BYTE_BUDGET = 16e9    # global bytes for one chunk's f32 probs
+
+
+def _pick_chunk(B, K, G, Skv, Sq):
+    cq = 1024
+    while cq > 64 and B * K * G * cq * Skv * 4 > _CHUNK_BYTE_BUDGET:
+        cq //= 2
+    while cq > 1 and Sq % cq:
+        cq //= 2
+    return cq
+
+
+def _sdpa_chunked(cfg, q, k, v, *, window: int = 0, q_offset: int = 0,
+                  causal: bool = True):
+    """Memory-efficient exact causal attention: ``lax.map`` over query
+    chunks, each chunk rematerialized (`jax.checkpoint`) so neither forward
+    nor backward ever holds more than one chunk's [B,K,G,cq,Skv] probs —
+    the XLA-native flash-attention dataflow (the Pallas kernel is the
+    TPU-tiled version of the same thing). Banded (local) attention
+    additionally slices KV to the ``window+cq`` live band, making local
+    layers O(S·w) instead of O(S²)."""
+    B, Sq, H, Dh = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    banded = window > 0 and window + 1024 <= Skv
+    eff_kv = (window + 1024) if banded else Skv
+    cq = _pick_chunk(B, K, G, eff_kv, Sq)
+    if cq < 16:
+        return _sdpa(cfg, q, k, v, _causal_mask(Sq, Skv, window, q_offset))
+    nq = Sq // cq
+    Wk = min(Skv, window + cq) if banded else Skv
+
+    def chunk(qi):
+        q_start = qi * cq
+        qc = jax.lax.dynamic_slice_in_dim(q, q_start, cq, axis=1)
+        if banded:
+            k_start = jnp.clip(q_start + q_offset - window + 1, 0, Skv - Wk)
+        else:
+            k_start = 0
+        kc = jax.lax.dynamic_slice_in_dim(k, k_start, Wk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, k_start, Wk, axis=1)
+        qpos = q_start + q_offset + jnp.arange(cq)[:, None]
+        kpos = k_start + jnp.arange(Wk)[None, :]
+        m = (kpos <= qpos) if causal else \
+            jnp.ones((cq, Wk), bool) & (kpos >= 0)
+        if window > 0:
+            m = m & (kpos > qpos - window)
+        return _sdpa(cfg, qc, kc, vc, m[None, None])
+
+    out = jax.lax.map(jax.checkpoint(chunk), jnp.arange(nq))  # [nq,B,cq,H,Dh]
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh)
+
+
+def attention(params, cfg, x, positions, *, window: int = 0,
+              impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence causal attention. Returns (out [B,S,D], kv dict)."""
+    from repro.parallel import activation as act
+
+    q, k, v = _project_qkv(params, cfg, x)
+    if cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = act.heads(q), act.heads(k), act.heads(v)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window,
+                                   softcap=cfg.logit_softcap)
+    elif q.shape[1] >= _CHUNK_MIN_SEQ:
+        out = _sdpa_chunked(cfg, q, k, v, window=window)
+    else:
+        mask = _causal_mask(q.shape[1], k.shape[1], window)
+        out = _sdpa(cfg, q, k, v, mask)
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(*out.shape[:2], -1),
+                   params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+def cross_attention(params, cfg, x, kv: dict) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V (no mask)."""
+    q, _, _ = _project_qkv(params, cfg, x)  # k,v projections unused on this path
+    k, v = kv["k"], kv["v"]
+    B, Sq = q.shape[:2]
+    mask = jnp.ones((1, 1, Sq, k.shape[1]), dtype=bool)
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bsq,qm->bsm", out.reshape(B, Sq, -1),
+                      params["wo"].astype(x.dtype))
+
+
+def kv_quant(x):
+    """Per-(token, head) symmetric int8 quantization. x: [..., Dh]."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int, dtype=None):
+    """Cache entry dict. bf16/f32 mode: {k, v}. int8 mode adds per-(token,
+    head) scales {ks, vs} — the production KV-quantization that halves the
+    decode-cache HBM footprint (e.g. qwen1.5-32b × decode_32k does not fit
+    a 256-chip pod at bf16)."""
+    dt = dtype or cfg.jnp_dtype()
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if jnp.dtype(dt) == jnp.int8:
+        sshape = shape[:-1] + (1,)
+        cache["ks"] = jnp.zeros(sshape, jnp.float32)
+        cache["vs"] = jnp.zeros(sshape, jnp.float32)
+    return cache
+
+
+def store_kv(entry: dict, k, v) -> dict:
+    """Encode (k, v) [..., K, Dh] into the entry's storage dtype. Returns the
+    leaf dict matching ``init_kv_cache`` structure (no layer axis)."""
+    if "ks" in entry:
+        kq, ks = kv_quant(k)
+        vq, vs = kv_quant(v)
+        return {"k": kq, "v": vq, "ks": ks, "vs": vs}
+    return {"k": k.astype(entry["k"].dtype), "v": v.astype(entry["v"].dtype)}
+
+
+def load_kv(entry: dict, dtype):
+    if "ks" in entry:
+        k = (entry["k"].astype(jnp.float32) * entry["ks"]).astype(dtype)
+        v = (entry["v"].astype(jnp.float32) * entry["vs"]).astype(dtype)
+        return k, v
+    return entry["k"].astype(dtype), entry["v"].astype(dtype)
+
+
+def decode_attention(params, cfg, x, kv: dict, pos, *, window: int = 0,
+                     impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x: [B,1,D]; kv: cache entry (no layer axis), leaves
+    [B, S_max, K, Dh] (+ scales); pos scalar. Returns (out [B,1,D], kv')."""
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    if window > 0:
+        # ring-buffer write for banded caches
+        slot = jnp.mod(pos, kv["k"].shape[1])
+    else:
+        slot = pos
+    new = store_kv(kv, k, v)
+    kv = dict(kv)
+    for key, val in new.items():
+        kv[key] = jax.lax.dynamic_update_slice(
+            kv[key], val, (0, slot) + (0,) * (kv[key].ndim - 2))
+    S = kv["k"].shape[1]
+    kpos = jnp.arange(S)
+    if window > 0:
+        # valid = within the last `window` tokens (ring semantics)
+        age = jnp.mod(pos - kpos, S)
+        valid = (age < jnp.minimum(pos + 1, window))
+    else:
+        valid = kpos <= pos
+    ck, cv = load_kv(kv, q.dtype)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, ck, cv, valid,
+                                    softcap=cfg.logit_softcap)
+    else:
+        mask = valid[None, None, None, :]
+        out = _sdpa(cfg, q, ck, cv, mask)
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(x.shape[0], 1, -1),
+                   params["wo"].astype(x.dtype))
+    return y, kv

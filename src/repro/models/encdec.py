@@ -1,0 +1,304 @@
+"""Whisper-style encoder-decoder [arXiv:2212.04356].
+
+The conv frontend is a STUB per the assignment: the encoder consumes
+precomputed mel-frame embeddings ``frames [B, n_audio_frames, d_model]``
+(provided by ``input_specs``), adds learned positions, and runs bidirectional
+attention. The decoder is causal with per-layer self-attn KV cache plus
+cross-attn KV computed once at prefill.
+
+Adaptation note (recorded in DESIGN.md): Whisper's learned decoder positions
+are replaced with sinusoidal ones so parameters stay independent of the
+assigned decode lengths (up to 32k ≫ Whisper's native 448).
+
+RAP mapping: the (self-attn + cross-attn) pair is the prunable "MHA" unit —
+it owns the growing self-KV cache; FFN is the parameter unit. Encoder layers
+run once per request and are not pruned online.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ffn as ffn_mod, layers
+from repro.models.decoder import _ones_gates, force_unroll, tree_slice
+from repro.parallel import activation as act
+
+
+def _sinusoid(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_params(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 8)
+    pd = cfg.jnp_param_dtype()
+
+    def stack(key, n, init_fn):
+        keys = jax.random.split(key, n)
+        trees = [dict(norm=layers.init_norm(cfg), **init_fn(keys[i], cfg))
+                 for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    return {
+        "embed": layers.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, pd),
+        "enc_pos": (jax.random.normal(ks[1], (cfg.n_audio_frames, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(pd),
+        "final_norm": layers.init_norm(cfg),
+        "enc_final_norm": layers.init_norm(cfg),
+        "stacks": {
+            "enc_attn": stack(ks[2], cfg.n_encoder_layers,
+                              attention.init_attn_params),
+            "enc_ffn": stack(ks[3], cfg.n_encoder_layers,
+                             ffn_mod.init_ffn_params),
+            "attn": stack(ks[4], cfg.n_layers, attention.init_attn_params),
+            "cross": stack(ks[5], cfg.n_layers, attention.init_attn_params),
+            "ffn": stack(ks[6], cfg.n_layers, ffn_mod.init_ffn_params),
+        },
+    }
+
+
+def _bidir_attend(cfg, q, k, v):
+    """Unmasked attention, chunked over queries when long (memory bound)."""
+    if q.shape[1] >= 2048:
+        return attention._sdpa_chunked(cfg, q, k, v, causal=False)
+    mask = jnp.ones((1, 1, q.shape[1], k.shape[1]), bool)
+    return attention._sdpa(cfg, q, k, v, mask)
+
+
+def encode(params, cfg, frames, *, impl: str = "xla", remat: bool = False):
+    """frames: [B, T_enc, D] (stub frontend output) → [B, T_enc, D]."""
+    h = frames.astype(cfg.jnp_dtype()) + params["enc_pos"][None].astype(cfg.jnp_dtype())
+
+    def body(h, xs):
+        pa, pf = xs
+        h = act.hidden(h)
+        hn = layers.apply_norm(cfg, pa["norm"], h)
+        q, k, v = attention._project_qkv(pa, cfg, hn)
+        out = _bidir_attend(cfg, q, k, v)
+        out = jnp.einsum("bsq,qm->bsm", out.reshape(*out.shape[:2], -1),
+                         pa["wo"].astype(h.dtype))
+        h = h + out
+        hn = layers.apply_norm(cfg, pf["norm"], h)
+        h = h + ffn_mod.ffn(pf, cfg, hn, impl=impl)
+        return h, None
+
+    if remat:
+        # prevent_cse=False is only safe inside scan bodies (see decoder)
+        body = (jax.checkpoint(body) if force_unroll()
+                else jax.checkpoint(body, prevent_cse=False))
+    if force_unroll():
+        for i in range(cfg.n_encoder_layers):
+            h, _ = body(h, (tree_slice(params["stacks"]["enc_attn"], i),
+                            tree_slice(params["stacks"]["enc_ffn"], i)))
+    else:
+        h, _ = jax.lax.scan(body, h, (params["stacks"]["enc_attn"],
+                                      params["stacks"]["enc_ffn"]))
+    return layers.apply_norm(cfg, params["enc_final_norm"], h)
+
+
+def _cross_kv(params_cross_stack, cfg, enc_h):
+    """Precompute per-decoder-layer cross K/V: [Ld, B, T_enc, K, Dh]."""
+    def body(_, pc):
+        _, k, v = attention._project_qkv(pc, cfg, enc_h)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params_cross_stack)
+    return ks, vs
+
+
+def _decoder_pass(params, cfg, h, positions, enc_h, gates, *, impl,
+                  remat: bool = False):
+    """Teacher-forced decoder over a full sequence (train / scoring)."""
+    def body(h, xs):
+        pa, pc, pf, gm, gf = xs
+        h = act.hidden(h)
+        hn = layers.apply_norm(cfg, pa["norm"], h)
+        out, _ = attention.attention(pa, cfg, hn, positions, impl=impl)
+        h = h + gm.astype(h.dtype) * out
+        hn = layers.apply_norm(cfg, pc["norm"], h)
+        _, ck, cv = attention._project_qkv(pc, cfg, enc_h)
+        B, Sq = hn.shape[:2]
+        q, _, _ = attention._project_qkv(pc, cfg, hn)
+        xout = _bidir_attend(cfg, q, ck, cv)
+        xout = jnp.einsum("bsq,qm->bsm", xout.reshape(B, Sq, -1),
+                          pc["wo"].astype(h.dtype))
+        h = h + gm.astype(h.dtype) * xout
+        hn = layers.apply_norm(cfg, pf["norm"], h)
+        h = h + gf.astype(h.dtype) * ffn_mod.ffn(pf, cfg, hn, impl=impl)
+        return h, None
+
+    if remat:
+        # prevent_cse=False is only safe inside scan bodies (see decoder)
+        body = (jax.checkpoint(body) if force_unroll()
+                else jax.checkpoint(body, prevent_cse=False))
+    if force_unroll():
+        for i in range(cfg.n_layers):
+            h, _ = body(h, (tree_slice(params["stacks"]["attn"], i),
+                            tree_slice(params["stacks"]["cross"], i),
+                            tree_slice(params["stacks"]["ffn"], i),
+                            gates["mixer"][i], gates["ffn"][i]))
+    else:
+        h, _ = jax.lax.scan(body, h, (params["stacks"]["attn"],
+                                      params["stacks"]["cross"],
+                                      params["stacks"]["ffn"],
+                                      gates["mixer"], gates["ffn"]))
+    return h
+
+
+def _embed_tokens(params, cfg, tokens, offset):
+    h = params["embed"][tokens].astype(cfg.jnp_dtype())
+    pos = jnp.arange(tokens.shape[1]) + offset
+    return h + _sinusoid(pos, cfg.d_model)[None].astype(h.dtype), pos[None]
+
+
+def forward(params, cfg, tokens, frames, *, gates=None, impl: str = "xla",
+            remat: bool = False, unembed: bool = True):
+    """Teacher-forced logits [B, S, Vp] (f32); ``unembed=False`` returns the
+    pre-final-norm hidden state (chunked-CE path)."""
+    gates = gates or _ones_gates(cfg.n_layers)
+    enc_h = encode(params, cfg, frames, impl=impl, remat=remat)
+    h, positions = _embed_tokens(params, cfg, tokens, 0)
+    h = _decoder_pass(params, cfg, h, positions, enc_h, gates, impl=impl,
+                      remat=remat)
+    if not unembed:
+        return h
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    return act.logits(
+        jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype),
+                   preferred_element_type=jnp.float32))
+
+
+def unembed(params, cfg, h):
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    return act.logits(
+        jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype),
+                   preferred_element_type=jnp.float32))
+
+
+def init_cache(cfg, batch: int, max_len: int, kv_dtype=None) -> dict:
+    """Self-attn cache honours kv_dtype (incl. int8 quantized); cross-attn
+    KV is fixed-size (encoder length) and stays in activation dtype."""
+    dt = cfg.jnp_dtype()
+    Ld = cfg.n_layers
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "attn": attention.init_kv_cache(cfg, batch, max_len, Ld, kv_dtype),
+        "cross": {"k": jnp.zeros((Ld, batch, cfg.n_audio_frames,
+                                  cfg.n_kv_heads, cfg.dh), dt),
+                  "v": jnp.zeros((Ld, batch, cfg.n_audio_frames,
+                                  cfg.n_kv_heads, cfg.dh), dt)},
+    }
+
+
+def prefill(params, cfg, tokens, frames, max_len: int, *, gates=None,
+            impl: str = "xla", kv_dtype=None) -> Tuple[jnp.ndarray, dict]:
+    """Encode audio + consume the decoder prompt. Returns (last logits, cache)."""
+    gates = gates or _ones_gates(cfg.n_layers)
+    B, S = tokens.shape
+    enc_h = encode(params, cfg, frames, impl=impl)
+    cache = init_cache(cfg, B, max_len, kv_dtype)
+    ck, cv = _cross_kv(params["stacks"]["cross"], cfg, enc_h)
+    cache["cross"]["k"] = ck.astype(cache["cross"]["k"].dtype)
+    cache["cross"]["v"] = cv.astype(cache["cross"]["v"].dtype)
+
+    h, positions = _embed_tokens(params, cfg, tokens, 0)
+
+    def body(h, xs):
+        pa, pc, pf, gm, gf, xk, xv = xs
+        hn = layers.apply_norm(cfg, pa["norm"], h)
+        out, kv = attention.attention(pa, cfg, hn, positions, impl=impl)
+        h = h + gm.astype(h.dtype) * out
+        hn = layers.apply_norm(cfg, pc["norm"], h)
+        q, _, _ = attention._project_qkv(pc, cfg, hn)
+        mask = jnp.ones((1, 1, h.shape[1], xk.shape[1]), bool)
+        xout = attention._sdpa(cfg, q, xk.astype(h.dtype),
+                               xv.astype(h.dtype), mask)
+        xout = jnp.einsum("bsq,qm->bsm", xout.reshape(*h.shape[:2], -1),
+                          pc["wo"].astype(h.dtype))
+        h = h + gm.astype(h.dtype) * xout
+        hn = layers.apply_norm(cfg, pf["norm"], h)
+        h = h + gf.astype(h.dtype) * ffn_mod.ffn(pf, cfg, hn, impl=impl)
+        return h, kv
+
+    if force_unroll():
+        kv_list = []
+        for i in range(cfg.n_layers):
+            h, kv_i = body(h, (tree_slice(params["stacks"]["attn"], i),
+                               tree_slice(params["stacks"]["cross"], i),
+                               tree_slice(params["stacks"]["ffn"], i),
+                               gates["mixer"][i], gates["ffn"][i],
+                               cache["cross"]["k"][i], cache["cross"]["v"][i]))
+            kv_list.append(kv_i)
+        kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+    else:
+        h, kvs = jax.lax.scan(body, h, (params["stacks"]["attn"],
+                                        params["stacks"]["cross"],
+                                        params["stacks"]["ffn"],
+                                        gates["mixer"], gates["ffn"],
+                                        cache["cross"]["k"],
+                                        cache["cross"]["v"]))
+    stored = attention.store_kv(cache["attn"], kvs["k"], kvs["v"])
+    for key, val in stored.items():
+        cache["attn"][key] = jax.lax.dynamic_update_slice(
+            cache["attn"][key], val, (0,) * cache["attn"][key].ndim)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    h = layers.apply_norm(cfg, params["final_norm"], h[:, -1:, :])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens, *, gates=None,
+                impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    gates = gates or _ones_gates(cfg.n_layers)
+    pos = cache["pos"]
+    h, _ = _embed_tokens(params, cfg, tokens, pos)
+
+    def body(h, xs):
+        pa, pc, pf, gm, gf, kv, xk, xv = xs
+        hn = layers.apply_norm(cfg, pa["norm"], h)
+        out, kv = attention.decode_attention(pa, cfg, hn, kv, pos, impl=impl)
+        h = h + gm.astype(h.dtype) * out
+        hn = layers.apply_norm(cfg, pc["norm"], h)
+        q, _, _ = attention._project_qkv(pc, cfg, hn)
+        mask = jnp.ones((1, 1, 1, xk.shape[1]), bool)
+        xout = attention._sdpa(cfg, q, xk.astype(h.dtype),
+                               xv.astype(h.dtype), mask)
+        xout = jnp.einsum("bsq,qm->bsm", xout.reshape(h.shape[0], 1, -1),
+                          pc["wo"].astype(h.dtype))
+        h = h + gm.astype(h.dtype) * xout
+        hn = layers.apply_norm(cfg, pf["norm"], h)
+        h = h + gf.astype(h.dtype) * ffn_mod.ffn(pf, cfg, hn, impl=impl)
+        return h, kv
+
+    if force_unroll():
+        kv_list = []
+        for i in range(cfg.n_layers):
+            h, kv_i = body(h, (tree_slice(params["stacks"]["attn"], i),
+                               tree_slice(params["stacks"]["cross"], i),
+                               tree_slice(params["stacks"]["ffn"], i),
+                               gates["mixer"][i], gates["ffn"][i],
+                               jax.tree.map(lambda x: x[i], cache["attn"]),
+                               cache["cross"]["k"][i], cache["cross"]["v"][i]))
+            kv_list.append(kv_i)
+        kv_new = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+    else:
+        h, kv_new = jax.lax.scan(body, h, (params["stacks"]["attn"],
+                                           params["stacks"]["cross"],
+                                           params["stacks"]["ffn"],
+                                           gates["mixer"], gates["ffn"],
+                                           cache["attn"],
+                                           cache["cross"]["k"],
+                                           cache["cross"]["v"]))
+    cache["attn"] = kv_new
+    cache["pos"] = pos + 1
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, cache

@@ -1,0 +1,40 @@
+"""Dense feed-forward blocks: SwiGLU / GeGLU / GELU."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ffn_params(rng, cfg) -> dict:
+    k1, k2 = jax.random.split(rng)
+    pd = cfg.jnp_param_dtype()
+    if cfg.activation in ("swiglu", "geglu"):
+        wi = layers.dense_init(k1, cfg.d_model, 2 * cfg.d_ff, pd)
+    else:
+        wi = layers.dense_init(k1, cfg.d_model, cfg.d_ff, pd)
+    wo = layers.dense_init(k2, cfg.d_ff, cfg.d_model, pd,
+                           scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1)))
+    return {"wi": wi, "wo": wo}
+
+
+def glu_activate(h, activation: str, impl: str = "xla"):
+    """h: [..., 2F] fused (gate, up) → [..., F]."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.fused_glu(h, activation)
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = layers.silu(gate) if activation == "swiglu" else layers.gelu(gate)
+    return act * up
+
+
+def ffn(params, cfg, x, *, impl: str = "xla"):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if cfg.activation in ("swiglu", "geglu"):
+        h = glu_activate(h, cfg.activation, impl)
+    else:
+        h = layers.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(x.dtype))

@@ -1,0 +1,90 @@
+"""Primitive layers: initializers, norms, embeddings, RoPE.
+
+Everything is pure-functional: ``init_*`` returns a pytree of arrays,
+``apply``-style functions take (params, inputs). No module framework — params
+flow through ``jax.jit``/``pjit`` directly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- initializers
+def dense_init(rng, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (production default)."""
+    std = scale / math.sqrt(in_dim)
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, (in_dim, out_dim), jnp.float32) * std
+    return w.astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype):
+    w = jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02
+    return w.astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg, rng=None) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.zeros((cfg.d_model,), cfg.jnp_param_dtype()),
+                "bias": jnp.zeros((cfg.d_model,), cfg.jnp_param_dtype())}
+    return {"scale": jnp.zeros((cfg.d_model,), cfg.jnp_param_dtype())}
+
+
+def apply_norm(cfg, params: dict, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rms_norm(x, params["scale"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim//2]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    angles = angles[..., None, :]                       # [..., S, 1, dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- activations
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def softcap(x, cap: float):
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)

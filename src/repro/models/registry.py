@@ -1,0 +1,230 @@
+"""Uniform model API over every architecture family.
+
+``build(cfg)`` returns a ``Model`` namespace with:
+  init(rng)                          → params
+  loss(params, batch, gates=None)    → (scalar loss, aux)  [teacher-forced LM]
+  logits(params, batch, gates=None)  → [B, S, Vp] f32
+  prefill(params, batch, max_len)    → (last_logits, cache)
+  decode(params, cache, tokens)      → (logits [B,1,Vp], cache)
+  input_specs(shape_cfg)             → dict of ShapeDtypeStructs per step kind
+
+Batches are dicts: tokens/labels always; ``vision_embeds`` for vlm;
+``frames`` for audio.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder, encdec
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable
+    loss: Callable
+    logits: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+CHUNKED_CE_MIN_SEQ = 2048
+
+
+def _nll_terms(logits, labels, vocab_size: int):
+    viota = jax.lax.broadcasted_iota(jnp.int32, (logits.shape[-1],), 0)
+    if logits.shape[-1] > vocab_size:
+        logits = jnp.where(viota >= vocab_size, jnp.float32(-1e30), logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(jnp.where(viota == labels[..., None], logits, 0.0), -1)
+    return logz - gold
+
+
+def chunked_cross_entropy(unembed_fn, h, labels, vocab_size: int,
+                          mask=None, chunk: int = 512):
+    """CE without materializing [B,S,V] logits: ``lax.map`` over seq
+    chunks, each rematerialized — peak holds one [B,chunk,V] block. At
+    train_4k × 152k-vocab shapes the full-logit tensor plus its gradient is
+    ~5 GB/device; this caps it at ~0.3 GB.
+
+    h: [B,S,D] pre-final-norm hidden; unembed_fn(h_chunk) → logits chunk.
+    Positions predict labels shifted by one; the final position is masked.
+    """
+    B, S, D = h.shape
+    labels_next = jnp.concatenate(
+        [labels[:, 1:], jnp.zeros((B, 1), labels.dtype)], axis=1)
+    w = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+    if mask is not None:
+        m = jnp.concatenate(
+            [mask[:, 1:].astype(jnp.float32), jnp.zeros((B, 1))], axis=1)
+        w = w * m
+    cs = chunk
+    while cs > 1 and S % cs:
+        cs //= 2
+
+    def one(ci):
+        c0 = ci * cs
+        h_c = jax.lax.dynamic_slice(h, (0, c0, 0), (B, cs, D))
+        l_c = jax.lax.dynamic_slice(labels_next, (0, c0), (B, cs))
+        w_c = jax.lax.dynamic_slice(w, (0, c0), (B, cs))
+        nll = _nll_terms(unembed_fn(h_c), l_c, vocab_size)
+        return jnp.sum(nll * w_c), jnp.sum(w_c)
+
+    nlls, cnts = jax.lax.map(jax.checkpoint(one), jnp.arange(S // cs))
+    return jnp.sum(nlls) / jnp.maximum(jnp.sum(cnts), 1.0)
+
+
+def cross_entropy(logits, labels, vocab_size: int, mask=None):
+    """Mean next-token CE; padded-vocab entries are excluded from Z.
+
+    Sharding-aware formulation: the vocab axis is model-sharded at scale, so
+    everything here is elementwise + reductions — no take_along_axis /
+    scatter, whose GSPMD partitioning would all-gather the full [B,S,V]
+    logits (hundreds of GB at train_4k shapes)."""
+    nll = _nll_terms(logits, labels, vocab_size)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _lm_build(cfg) -> Model:
+    is_vlm = cfg.family == "vlm"
+
+    def init(rng):
+        return decoder.init_params(rng, cfg)
+
+    def logits(params, batch, gates=None, impl="xla", remat=False, layout=None):
+        extra = batch.get("vision_embeds") if is_vlm else None
+        out, _ = decoder.forward(params, cfg, batch["tokens"], gates=gates,
+                                 extra_embeds=extra, impl=impl, remat=remat,
+                                 layout=layout)
+        return out
+
+    def loss(params, batch, gates=None, impl="xla", remat=False, layout=None):
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if labels.shape[1] >= CHUNKED_CE_MIN_SEQ:
+            extra = batch.get("vision_embeds") if is_vlm else None
+            h, _ = decoder.forward(params, cfg, batch["tokens"], gates=gates,
+                                   extra_embeds=extra, impl=impl,
+                                   remat=remat, layout=layout, unembed=False)
+            if is_vlm:
+                h = h[:, -labels.shape[1]:, :]
+            l = chunked_cross_entropy(
+                lambda hc: decoder._unembed(params, cfg, hc), h, labels,
+                cfg.vocab_size, mask)
+            return l, {"loss": l, "ppl": jnp.exp(l)}
+        lg = logits(params, batch, gates, impl, remat, layout)
+        if is_vlm:  # loss only on text positions
+            lg = lg[:, -labels.shape[1]:, :]
+        lg, labels = lg[:, :-1], labels[:, 1:]
+        if mask is not None:
+            mask = mask[:, 1:]
+        l = cross_entropy(lg, labels, cfg.vocab_size, mask)
+        return l, {"loss": l, "ppl": jnp.exp(l)}
+
+    def prefill(params, batch, max_len, gates=None, impl="xla", layout=None,
+                kv_dtype=None):
+        extra = batch.get("vision_embeds") if is_vlm else None
+        return decoder.prefill(params, cfg, batch["tokens"], max_len,
+                               gates=gates, extra_embeds=extra, impl=impl,
+                               layout=layout, kv_dtype=kv_dtype)
+
+    def decode(params, cache, tokens, gates=None, impl="xla", layout=None):
+        return decoder.decode_step(params, cfg, cache, tokens, gates=gates,
+                                   impl=impl, layout=layout)
+
+    def init_cache(batch_size, max_len, layout=None, kv_dtype=None):
+        return decoder.init_cache(cfg, batch_size, max_len, layout, kv_dtype)
+
+    def input_specs(shape_cfg) -> Dict[str, Any]:
+        B, S = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        specs: Dict[str, Any] = {}
+        nv = cfg.n_vision_tokens if is_vlm else 0
+        tok_len = S - nv
+        if shape_cfg.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+        elif shape_cfg.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+        else:  # decode: one new token against a seq_len cache
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        if is_vlm and shape_cfg.kind != "decode":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, nv, cfg.d_model), cfg.jnp_dtype())
+        return specs
+
+    return Model(cfg, init, loss, logits, prefill, decode, init_cache,
+                 input_specs)
+
+
+def _encdec_build(cfg) -> Model:
+    def init(rng):
+        return encdec.init_params(rng, cfg)
+
+    def logits(params, batch, gates=None, impl="xla", remat=False, layout=None):
+        return encdec.forward(params, cfg, batch["tokens"], batch["frames"],
+                              gates=gates, impl=impl, remat=remat)
+
+    def loss(params, batch, gates=None, impl="xla", remat=False, layout=None):
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if labels.shape[1] >= CHUNKED_CE_MIN_SEQ:
+            h = encdec.forward(params, cfg, batch["tokens"], batch["frames"],
+                               gates=gates, impl=impl, remat=remat,
+                               unembed=False)
+            l = chunked_cross_entropy(
+                lambda hc: encdec.unembed(params, cfg, hc), h, labels,
+                cfg.vocab_size, mask)
+            return l, {"loss": l, "ppl": jnp.exp(l)}
+        lg = logits(params, batch, gates, impl, remat)
+        lg, labels = lg[:, :-1], labels[:, 1:]
+        if mask is not None:
+            mask = mask[:, 1:]
+        l = cross_entropy(lg, labels, cfg.vocab_size, mask)
+        return l, {"loss": l, "ppl": jnp.exp(l)}
+
+    def prefill(params, batch, max_len, gates=None, impl="xla", layout=None,
+                kv_dtype=None):
+        return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
+                              max_len, gates=gates, impl=impl,
+                              kv_dtype=kv_dtype)
+
+    def decode(params, cache, tokens, gates=None, impl="xla", layout=None):
+        return encdec.decode_step(params, cfg, cache, tokens, gates=gates,
+                                  impl=impl)
+
+    def init_cache(batch_size, max_len, layout=None, kv_dtype=None):
+        return encdec.init_cache(cfg, batch_size, max_len, kv_dtype)
+
+    def input_specs(shape_cfg) -> Dict[str, Any]:
+        B, S = shape_cfg.global_batch, shape_cfg.seq_len
+        i32 = jnp.int32
+        specs: Dict[str, Any] = {}
+        if shape_cfg.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        elif shape_cfg.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        else:  # decode: the encoder ran at prefill; cache holds cross-KV
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        if shape_cfg.kind in ("train", "prefill"):
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_audio_frames, cfg.d_model), cfg.jnp_dtype())
+        return specs
+
+    return Model(cfg, init, loss, logits, prefill, decode, init_cache,
+                 input_specs)
+
+
+def build(cfg) -> Model:
+    if cfg.is_encoder_decoder:
+        return _encdec_build(cfg)
+    return _lm_build(cfg)

@@ -1,0 +1,153 @@
+"""Griffin RG-LRU recurrent block [arXiv:2402.19427] (RecurrentGemma).
+
+Block:  y = W_out( GeLU(W_gate x) ⊙ RG-LRU( conv1d_4(W_x x) ) )
+RG-LRU: r_t = σ(W_a u_t + b_a);  i_t = σ(W_i u_t + b_i)
+        log a_t = -c · softplus(Λ) · r_t            (c = 8)
+        h_t = a_t · h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ u_t)
+
+W_a / W_i are block-diagonal (n_blocks = n_heads) per the paper. The sequence
+pass uses ``lax.associative_scan`` over (a, b) pairs — the TPU-native form of
+the recurrence; the Pallas kernel in ``repro.kernels.rglru`` provides the
+blocked fused alternative.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+_C = 8.0
+_CONV_W = 4
+
+
+def _n_blocks(cfg) -> int:
+    nb = max(cfg.n_heads, 1)
+    w = cfg.rnn_width or cfg.d_model
+    while w % nb != 0:
+        nb //= 2
+    return max(nb, 1)
+
+
+def init_rglru_params(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 7)
+    pd = cfg.jnp_param_dtype()
+    D = cfg.d_model
+    W = cfg.rnn_width or cfg.d_model
+    nb = _n_blocks(cfg)
+    bw = W // nb
+    blk = lambda k: (jax.random.normal(k, (nb, bw, bw), jnp.float32)
+                     / math.sqrt(bw)).astype(pd)
+    # Λ init so that a^c ∈ (0.9, 0.999) roughly (paper's stable range)
+    lam = jax.random.uniform(ks[4], (W,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # softplus^-1(-log(a_max)/c)
+    return {
+        "wx": layers.dense_init(ks[0], D, W, pd),
+        "w_gate": layers.dense_init(ks[1], D, W, pd),
+        "conv_w": (jax.random.normal(ks[2], (_CONV_W, W), jnp.float32)
+                   / math.sqrt(_CONV_W)).astype(pd),
+        "conv_b": jnp.zeros((W,), pd),
+        "wa": blk(ks[3]), "ba": jnp.zeros((W,), pd),
+        "wi": blk(ks[5]), "bi": jnp.zeros((W,), pd),
+        "lam": lam,
+        "wo": layers.dense_init(ks[6], W, D, pd,
+                                scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _block_diag_proj(u, w, b):
+    """u: [..., W]; w: [nb, bw, bw] → [..., W]."""
+    nb, bw, _ = w.shape
+    ub = u.reshape(*u.shape[:-1], nb, bw)
+    out = jnp.einsum("...nb,nbc->...nc", ub, w.astype(u.dtype))
+    return out.reshape(*u.shape) + b.astype(u.dtype)
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(_block_diag_proj(u, params["wa"], params["ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_proj(u, params["wi"], params["bi"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r        # [..., W] f32
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1
+    b_scale = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a, b_scale * (i * u.astype(jnp.float32))
+
+
+def rglru_mixer(params, cfg, x, *, impl: str = "xla") -> jnp.ndarray:
+    """Full-sequence Griffin block. x: [B,T,D] → [B,T,D]."""
+    from repro.parallel import activation as act
+    u = act.width(jnp.einsum("btd,dw->btw", x, params["wx"].astype(x.dtype)))
+    g = act.width(jnp.einsum("btd,dw->btw", x,
+                             params["w_gate"].astype(x.dtype)))
+    # causal depthwise conv width 4
+    K = params["conv_w"].shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    u = sum(up[:, i:i + u.shape[1], :] * params["conv_w"].astype(u.dtype)[i][None, None]
+            for i in range(K)) + params["conv_b"].astype(u.dtype)
+    a, b = _gates(params, u)                                # [B,T,W] f32
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h = kops.rglru(a, b)
+    else:
+        h = blocked_scan(a, b)
+    y = (h.astype(x.dtype) * layers.gelu(g))
+    return jnp.einsum("btw,wd->btd", y, params["wo"].astype(x.dtype))
+
+
+def _combine(p, q):
+    a1, b1 = p
+    a2, b2 = q
+    return a1 * a2, a2 * b1 + b2
+
+
+def blocked_scan(a, b, block: int = 256):
+    """h_t = a_t·h_{t-1} + b_t via lax.scan over time blocks with an
+    in-block associative scan — the XLA mirror of the Pallas kernel's
+    carry-stitch. O(T) residual memory (a full-sequence associative_scan
+    keeps O(T·log T) tree levels alive through the backward pass, which at
+    [B,32k,4096] f32 is tens of GB/device)."""
+    B, T, W = a.shape
+    bt = min(block, T)
+    while bt > 1 and T % bt:
+        bt //= 2
+    if bt < 8:
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        return h
+    nT = T // bt
+    ar = jnp.moveaxis(a.reshape(B, nT, bt, W), 1, 0)
+    br = jnp.moveaxis(b.reshape(B, nT, bt, W), 1, 0)
+
+    def step(h, ab):
+        a_blk, b_blk = ab                       # [B, bt, W]
+        A, Bs = jax.lax.associative_scan(_combine, (a_blk, b_blk), axis=1)
+        out = Bs + A * h[:, None, :]
+        return out[:, -1], out
+
+    _, outs = jax.lax.scan(step, jnp.zeros((B, W), a.dtype), (ar, br))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, W)
+
+
+def init_rglru_cache(cfg, batch: int, n_layers: int, dtype=jnp.float32) -> dict:
+    W = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, W), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, _CONV_W - 1, W), dtype),
+    }
+
+
+def rglru_decode_step(params, cfg, x, h_prev, conv_buf):
+    """One token. x: [B,1,D]; h_prev: [B,W]; conv_buf: [B,3,W]."""
+    u = jnp.einsum("btd,dw->btw", x, params["wx"].astype(x.dtype))
+    g = jnp.einsum("btd,dw->btw", x, params["w_gate"].astype(x.dtype))
+    full = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)  # [B,4,W]
+    u_t = jnp.einsum("bkw,kw->bw", full, params["conv_w"].astype(u.dtype))
+    u_t = u_t + params["conv_b"].astype(u.dtype)
+    conv_buf = full[:, 1:, :]
+    a, b = _gates(params, u_t)                              # [B,W]
+    h = a * h_prev + b
+    y = (h.astype(x.dtype) * layers.gelu(g[:, 0]))[:, None, :]
+    return (jnp.einsum("btw,wd->btd", y, params["wo"].astype(x.dtype)),
+            h, conv_buf)

@@ -1,0 +1,202 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+TPU adaptation: the chunked SSD algorithm is already matmul-dominant (MXU
+friendly). We keep the chunk-local quadratic term as einsums and run the
+inter-chunk recurrence as a ``lax.scan`` (linear in chunks) instead of the
+paper listing's quadratic chunk-decay matmul. The Pallas kernel in
+``repro.kernels.ssd`` fuses the chunk-local part into VMEM tiles.
+
+Layout (n_groups=1):
+  in_proj:  x [B,T,D] → z (gate, d_inner) | xc (d_inner) | B (N) | C (N) | dt (H)
+  conv1d:   causal depthwise width-4 over (xc|B|C) channels
+  SSD:      heads H = d_inner / P, scalar decay per head
+  out:      gated RMSNorm → out_proj
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_ssd_params(rng, cfg) -> dict:
+    ks = jax.random.split(rng, 5)
+    pd = cfg.jnp_param_dtype()
+    D, DI, N, H = cfg.d_model, cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = DI + 2 * N
+    p = {
+        "in_proj": layers.dense_init(ks[0], D, 2 * DI + 2 * N + H, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.ssm_conv_width))).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[2], (H,), jnp.float32,
+            math.log(1e-3), math.log(1e-1))))).astype(jnp.float32),
+        "norm_scale": jnp.zeros((DI,), pd),
+        "out_proj": layers.dense_init(ks[3], DI, D, pd,
+                                      scale=1.0 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,T,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _split_proj(params, cfg, x):
+    DI, N, H = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt = jnp.split(zxbcdt, [DI, 2 * DI + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _ssd_scan(xh, log_a, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD. xh:[B,T,H,P] (dt-folded), log_a:[B,T,H], Bm/Cm:[B,T,N].
+
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    T_orig = T
+    if T % Q != 0:
+        # pad with (x=0, log_a=0): decay 1, zero contribution → state-neutral
+        pad = Q - T % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    NC = T // Q
+    csh = lambda t, tail: t.reshape(B, NC, Q, *tail)
+    xh, log_a = csh(xh, (H, P)), csh(log_a, (H,))
+    Bm, Cm = csh(Bm, (N,)), csh(Cm, (N,))
+
+    la = log_a.astype(jnp.float32)
+    a_cum = jnp.cumsum(la, axis=2)                         # [B,NC,Q,H]
+    causal = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None]
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cm, Bm,
+                        preferred_element_type=jnp.float32)  # [B,NC,Q,Q]
+
+    # Intra-chunk decay L[q,s,h] = exp(a_cum[q,h]-a_cum[s,h]) (s<=q) is
+    # [B,NC,Q,Q,H] — at production shapes that intermediate is GBs. Process
+    # heads in groups of ≤4 under lax.map so only [B,NC,Q,Q,g] is ever live
+    # (the Pallas `ssd` kernel removes the intermediate entirely on TPU).
+    hg = 4
+    pad_h = (-H) % hg
+    a_cum_p = jnp.pad(a_cum, ((0, 0),) * 3 + ((0, pad_h),))
+    xh_p = jnp.pad(xh.astype(jnp.float32),
+                   ((0, 0),) * 3 + ((0, pad_h), (0, 0)))
+
+    def diag_group(args):
+        ac_g, xh_g = args                                  # [B,NC,Q,g], [B,NC,Q,g,P]
+        seg = ac_g[:, :, :, None, :] - ac_g[:, :, None, :, :]
+        L = jnp.exp(jnp.where(causal[..., None], seg, -jnp.inf))
+        return jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", scores, L, xh_g)
+
+    n_g = (H + pad_h) // hg
+    ac_g = jnp.moveaxis(a_cum_p.reshape(*a_cum_p.shape[:3], n_g, hg), 3, 0)
+    xh_g = jnp.moveaxis(xh_p.reshape(*xh_p.shape[:3], n_g, hg, P), 3, 0)
+    y_diag = jax.lax.map(diag_group, (ac_g, xh_g))         # [n_g,B,NC,Q,hg,P]
+    y_diag = jnp.moveaxis(y_diag, 0, 3).reshape(
+        B, NC, Q, n_g * hg, P)[:, :, :, :H]
+
+    # right factors: per-chunk input→state contribution
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)     # [B,NC,Q,H]
+    chunk_states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                              Bm.astype(jnp.float32), decay_states,
+                              xh.astype(jnp.float32))       # [B,NC,H,P,N]
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])               # [B,NC,H]
+
+    init = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        c_state, c_decay = inputs                           # [B,H,P,N], [B,H]
+        prev = state
+        state = state * c_decay[:, :, None, None] + c_state
+        return state, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # [B,NC,H,P,N]
+
+    state_decay = jnp.exp(a_cum)                            # [B,NC,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cm.astype(jnp.float32), prev_states, state_decay)
+    y = (y_diag + y_off).reshape(B, T, H, P)[:, :T_orig]
+    return y, final_state
+
+
+def ssd_mixer(params, cfg, x, *, impl: str = "xla") -> jnp.ndarray:
+    """Full-sequence Mamba-2 mixer. x: [B,T,D] → [B,T,D]."""
+    DI, N, H, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(params, cfg, x)
+    xBC = layers.silu(_causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                                   params["conv_b"].astype(x.dtype)))
+    xc, Bm, Cm = jnp.split(xBC, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(params["A_log"])                                     # [H]
+    log_a = dt * A                                                    # [B,T,H]
+    xh = xc.reshape(*xc.shape[:2], H, P)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xh_dt, log_a, Bm.astype(jnp.float32),
+                        Cm.astype(jnp.float32), cfg.ssm_chunk)
+    else:
+        y, _ = _ssd_scan(xh_dt, log_a, Bm.astype(jnp.float32),
+                         Cm.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], DI).astype(x.dtype)
+    # gated RMSNorm then out projection
+    y = layers.rms_norm(y * layers.silu(z), params["norm_scale"], cfg.norm_eps)
+    return jnp.einsum("btf,fd->btd", y, params["out_proj"].astype(x.dtype))
+
+
+def init_ssd_cache(cfg, batch: int, n_layers: int, dtype=jnp.float32) -> dict:
+    DI, N = cfg.ssm_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, N),
+                           jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, DI + 2 * N),
+                          dtype),
+    }
+
+
+def ssd_decode_step(params, cfg, x, state, conv_buf):
+    """One token. x: [B,1,D]; state: [B,H,P,N]; conv_buf: [B,K-1,C].
+
+    Returns (y [B,1,D], state, conv_buf).
+    """
+    DI, N, H, P = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(params, cfg, x)                # [B,1,*]
+    full = jnp.concatenate([conv_buf, xBC.astype(conv_buf.dtype)], axis=1)  # [B,K,C]
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", full.astype(x.dtype), w) + params["conv_b"].astype(x.dtype)
+    xBC_t = layers.silu(conv_out)[:, None, :]               # [B,1,C]
+    conv_buf = full[:, 1:, :]
+    xc, Bm, Cm = jnp.split(xBC_t, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                     # [B,H]
+    xh = xc[:, 0].reshape(-1, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, 0].astype(jnp.float32), xh, dt)
+    state = state * a[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, DI).astype(x.dtype)
+    y = layers.rms_norm(y * layers.silu(z), params["norm_scale"], cfg.norm_eps)
+    return (jnp.einsum("btf,fd->btd", y, params["out_proj"].astype(x.dtype)),
+            state, conv_buf)

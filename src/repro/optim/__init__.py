@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, apply, init, global_norm, schedule_lr  # noqa: F401

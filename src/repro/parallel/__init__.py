@@ -1,0 +1,4 @@
+from repro.parallel.sharding import (batch_pspecs, cache_pspecs,
+                                     param_pspecs, shardings_for)
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "shardings_for"]

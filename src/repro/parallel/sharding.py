@@ -1,0 +1,223 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for any mesh.
+
+Axes: ``"data"`` (+ ``"pod"`` when multi-pod) carry the batch; ``"model"``
+carries tensor parallelism (feature dims), expert parallelism (MoE expert
+dim) and vocab sharding. Rules are *name+rank* patterns over the pytree and
+every rule checks divisibility — a dim that does not divide its mesh axis
+falls back to replicated instead of producing a GSPMD error, so the same
+rules serve full production configs and tiny smoke configs.
+
+TP placement summary (16-way "model"):
+  embed [V,D]            → (model, ∅)      vocab-sharded; V padded to 512·k
+  lm_head [D,V]          → (∅, model)
+  attn  wq/wk/wv [L,D,E] → (∅, ∅, model)   feature out-dim (n_heads·d_head)
+        wo [L,E,D]       → (∅, model, ∅)   contracting in-dim → one AR/layer
+  ffn   wi [L,D,2F]      → (∅, ∅, model)   gate|up halves stay shard-aligned
+        wo [L,F,D]       → (∅, model, ∅)
+  moe   wi/wo [L,E,..]   → (∅, model, ∅, ∅) expert-parallel
+  rglru wx/w_gate/wa/wi  → width / block axis over model
+  ssd                    → replicated (370M params; TP overhead ≫ gain)
+  norms, biases, scalars → replicated
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def _fits(shape, spec: P, mesh: Mesh) -> bool:
+    for dim, axis in zip(shape, spec):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            return False
+    return True
+
+
+def _pick(shape, mesh: Mesh, *candidates: P) -> P:
+    """First candidate whose sharded dims divide evenly; else replicated."""
+    for spec in candidates:
+        if _fits(shape, spec, mesh):
+            return spec
+    return P()
+
+
+# ------------------------------------------------------------------ params
+def _param_rule(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    r = len(shape)
+    mdl = "model"
+
+    if re.search(r"(^|/)embed$", path):
+        return _pick(shape, mesh, P(mdl, None))
+    if re.search(r"(^|/)lm_head$", path):
+        return _pick(shape, mesh, P(None, mdl))
+    if re.search(r"(^|/)enc_pos$", path):
+        return P()
+
+    # ssd mixer: replicated wholesale (see module docstring)
+    if "/ssd/" in path:
+        return P()
+
+    # rglru: width dims over model
+    if "/rglru/" in path:
+        if re.search(r"/(wx|w_gate)$", path) and r == 3:
+            return _pick(shape, mesh, P(None, None, mdl))
+        if re.search(r"/wo$", path) and r == 3:
+            return _pick(shape, mesh, P(None, mdl, None))
+        if re.search(r"/(wa|wi)$", path) and r == 4:   # block-diag [L,nb,bw,bw]
+            return _pick(shape, mesh, P(None, mdl, None, None))
+        if re.search(r"/(conv_w)$", path) and r == 3:
+            return _pick(shape, mesh, P(None, None, mdl))
+        if re.search(r"/(conv_b|ba|bi|lam)$", path) and r == 2:
+            return _pick(shape, mesh, P(None, mdl))
+        return P()
+
+    # MoE: expert-parallel over model
+    if "/moe/" in path:
+        if re.search(r"/(wi|wo)$", path) and r == 4:
+            return _pick(shape, mesh, P(None, mdl, None, None))
+        return P()   # router replicated (tiny, read by every token)
+
+    # attention (incl. enc_attn / cross): [L, D, E] out-features over model
+    if re.search(r"/(wq|wk|wv)$", path) and r == 3:
+        return _pick(shape, mesh, P(None, None, mdl))
+    if re.search(r"/wo$", path) and r == 3:
+        return _pick(shape, mesh, P(None, mdl, None))
+    if re.search(r"/(bq|bk|bv)$", path) and r == 2:
+        return _pick(shape, mesh, P(None, mdl))
+
+    # dense FFN: [L, D, 2F] / [L, F, D]
+    if re.search(r"/wi$", path) and r == 3:
+        return _pick(shape, mesh, P(None, None, mdl))
+
+    return P()   # norms, scalar gates, etc.
+
+
+def _leaf_paths(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def _add_fsdp(spec: P, path: str, shape, mesh: Mesh) -> P:
+    """Layer a ZeRO-3/FSDP shard over the "data" axis onto an unsharded dim.
+
+    Skips the leading stack axis of per-layer stacks (sharding layers breaks
+    the scan) and any dim that does not divide. Picks the largest eligible
+    dim — for weight matrices that is the feature-in dim, reproducing the
+    MaxText fsdp axis placement."""
+    nd = _axis_size(mesh, "data")
+    if nd <= 1:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    start = 1 if ("stacks" in path and len(shape) >= 2) else 0
+    best, best_dim = -1, None
+    for i in range(start, len(shape)):
+        if dims[i] is None and shape[i] % nd == 0 and shape[i] > best:
+            best, best_dim = shape[i], i
+    if best_dim is None or best < nd * 8:   # too small to matter
+        return spec
+    dims[best_dim] = "data"
+    return P(*dims)
+
+
+def param_pspecs(params_shape_tree, mesh: Mesh, *, fsdp: bool = False):
+    """Same-structure tree of PartitionSpec for a params pytree (arrays or
+    ShapeDtypeStructs). ``fsdp=True`` additionally shards each leaf over the
+    "data" axis (weights gathered on use — ZeRO-3), which is what lets
+    132B-param configs and f32 optimizer moments fit per-device HBM."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape_tree)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        spec = _param_rule(key, tuple(leaf.shape), mesh)
+        if fsdp:
+            spec = _add_fsdp(spec, key, tuple(leaf.shape), mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------------- batch
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape) or None
+
+
+def batch_pspecs(batch_tree, mesh: Mesh, *, shard_seq: bool = False):
+    """Batch dict → PartitionSpecs. Batch axis over (pod, data); if the
+    batch does not divide (e.g. long_500k batch=1) and ``shard_seq``, the
+    sequence axis shards instead (sequence parallelism)."""
+    dp = _dp_axes(mesh)
+    ndp = _axis_size(mesh, dp)
+
+    def rule(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return P()
+        if shape[0] % ndp == 0 and shape[0] >= ndp:
+            return P(dp, *([None] * (len(shape) - 1)))
+        if shard_seq and len(shape) >= 2 and shape[1] % ndp == 0:
+            return P(None, dp, *([None] * (len(shape) - 2)))
+        return P()
+
+    return jax.tree.map(rule, batch_tree)
+
+
+# ------------------------------------------------------------------- cache
+def cache_pspecs(cache_tree, mesh: Mesh, *, batch: int,
+                 shard_seq: bool = False):
+    """Decode-state shardings. Attention KV [L,B,S,K,Dh]: batch over
+    (pod,data) and — for rank-5 KV leaves — sequence over "model"
+    (flash-decode's split-KV dimension; KV heads stay replicated since
+    tp > n_kv_heads for every assigned arch). When the batch cannot shard
+    (long_500k), the sequence / state axes shard over (pod,data) instead."""
+    dp = _dp_axes(mesh)
+    ndp = _axis_size(mesh, dp)
+    nm = _axis_size(mesh, "model")
+
+    def rule(path_key: str, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return P()
+        if len(shape) >= 2 and shape[1] == batch and batch % ndp == 0:
+            rest = [None] * (len(shape) - 2)
+            # rank-5 KV (+scale) leaves: also split the seq axis over model
+            if len(shape) == 5 and shape[2] % nm == 0 and shape[2] >= nm * 64:
+                rest[0] = "model"
+            return P(None, dp, *rest)
+        if shard_seq and len(shape) >= 3:
+            # [L, B, S, ...] or [L, B, H, ...]: shard the 3rd axis
+            if shape[2] % ndp == 0:
+                return P(None, None, dp, *([None] * (len(shape) - 3)))
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        specs.append(rule(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------------ helper
+def shardings_for(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

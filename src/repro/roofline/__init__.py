@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (analyze_cell, full_table,
+                                     model_flops_per_device, render_table)
+
+__all__ = ["analyze_cell", "full_table", "model_flops_per_device",
+           "render_table"]

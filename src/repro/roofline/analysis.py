@@ -1,0 +1,175 @@
+"""Three-term roofline from the dry-run artifacts.
+
+Per (arch × shape) on the single-pod mesh:
+
+    compute_s    = HLO_FLOPs/device ÷ 197 TF/s   (bf16 MXU peak)
+    memory_s     = HLO_bytes/device ÷ 819 GB/s   (HBM)
+    collective_s = wire_bytes/device ÷ 50 GB/s   (ICI link)
+
+Sources: the *unrolled* dry-run JSON supplies FLOPs / bytes / collective
+wire bytes (XLA's cost_analysis counts a ``scan`` body once regardless of
+trip count, so the roofline lowering unrolls the layer loop — exact per-op
+accounting); the scan-mode JSON supplies the per-device memory fit (its
+buffer assignment reflects the production double-buffered loop).
+
+MODEL_FLOPS uses the standard accounting: train 6·N·T (fwd 2 + bwd 4),
+prefill 2·N·T, decode 2·N·B — with N_active for MoE — plus attention
+O(S²·H·Dh) terms. The ratio MODEL_FLOPS/HLO_FLOPs exposes remat recompute
+and dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, get_shape,
+                           shape_applicable)
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = "experiments/dryrun"
+HBM_PER_CHIP = 16e9   # v5e
+
+
+def _load(tag: str) -> Optional[Dict]:
+    p = os.path.join(DRYRUN_DIR, tag + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        d = json.load(f)
+    return None if d.get("error") or d.get("skipped") else d
+
+
+def model_flops_per_device(arch: str, shape_name: str,
+                           n_devices: int = 256) -> float:
+    """Analytic MODEL_FLOPS per device (the 'useful compute' yardstick)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.active_params()
+    B, S = shape.global_batch, shape.seq_len
+    window = cfg.attn_window
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        mult = 3.0   # fwd + 2×bwd for the attention term too
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        mult = 1.0
+    else:  # decode: one token per sequence
+        tokens = B
+        flops = 2.0 * n_active * tokens
+        mult = 1.0
+    # attention score+combine FLOPs (not in the 6ND param accounting)
+    if cfg.n_heads > 0 and shape.kind != "decode":
+        for mixer in cfg.mixer_kinds():
+            if mixer == "attn":
+                eff = S
+            elif mixer == "local_attn":
+                eff = min(window, S) if window else S
+            else:
+                continue
+            # causal: ~S·eff/2 scores; 2 matmuls (QK^T and PV), 2 FLOP/MAC
+            flops += mult * B * cfg.n_heads * cfg.dh * S * eff * 2.0
+    if shape.kind == "decode" and cfg.n_heads > 0:
+        for mixer in cfg.mixer_kinds():
+            if mixer == "attn":
+                eff = S
+            elif mixer == "local_attn":
+                eff = min(window, S) if window else S
+            else:
+                continue
+            flops += B * cfg.n_heads * cfg.dh * eff * 2.0 * 2.0
+    return flops / n_devices
+
+
+def analyze_cell(arch: str, shape_name: str) -> Optional[Dict]:
+    scan = _load(f"{arch}_{shape_name}_pod1")
+    unroll = _load(f"{arch}_{shape_name}_pod1_unroll") or scan
+    if scan is None and unroll is None:
+        return None
+    src = unroll
+    exact = bool(src.get("unroll", False))
+    flops = src["cost"]["flops"]
+    bytes_acc = src["cost"]["bytes_accessed"]
+    wire = src["collectives"]["total_wire_bytes"]
+    mf = model_flops_per_device(arch, shape_name,
+                                src.get("n_devices", 256))
+    # scan-lowered artifacts undercount loop bodies (counted once): fall
+    # back to the analytic compute term and flag memory/collective as
+    # lower bounds until the unrolled artifact exists.
+    compute_s = (flops if exact else max(flops, mf)) / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    coll_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mem_fit = (scan or src)["memory"].get(
+        "real_bytes", (scan or src)["memory"]["argument_bytes"])
+    return {
+        "arch": arch, "shape": shape_name,
+        "kind": src["kind"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "hlo_flops": flops, "model_flops": mf,
+        "useful_ratio": (mf / flops) if (flops and exact) else None,
+        "roofline_frac": min((mf / PEAK_FLOPS_BF16) / bound, 1.0)
+            if bound else 0.0,
+        "fit_gb": mem_fit / 1e9, "fits_hbm": mem_fit <= HBM_PER_CHIP,
+        "unrolled": exact,
+        "policy": src.get("policy", {}),
+    }
+
+
+_SUGGEST = {
+    "compute": ("dominant term is MXU compute — already near the useful "
+                "work floor; gains come from cutting remat recompute "
+                "(useful_ratio < 1) or int8 matmuls"),
+    "memory": ("dominant term is HBM traffic — fuse/eliminate materialized "
+               "intermediates (attention probs, MoE dispatch buffers), "
+               "shrink KV via int8, or re-block kernels"),
+    "collective": ("dominant term is ICI wire — reduce per-layer "
+                   "all-gathers (better weight/activation sharding "
+                   "alignment), fold reduce-scatter into matmul consumers, "
+                   "or compress gradients"),
+}
+
+
+def suggestion(row: Dict) -> str:
+    return _SUGGEST[row["dominant"]]
+
+
+def full_table() -> List[Dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if not shape_applicable(cfg, shape):
+                rows.append({"arch": arch, "shape": shape.name,
+                             "skipped": True})
+                continue
+            r = analyze_cell(arch, shape.name)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def render_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL/HLO | roofline_frac | fit GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | n/a "
+                       "(full-attn skips long_500k) | — | — | — |")
+            continue
+        ge = "" if r["unrolled"] else "≥"
+        ur = (f"{r['useful_ratio']:.2f}" if r["useful_ratio"] is not None
+              else "—")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {ge}{r['memory_s']:.4f} | {ge}{r['collective_s']:.4f} "
+            f"| {r['dominant']} | {ur} "
+            f"| {r['roofline_frac']:.3f} | {r['fit_gb']:.2f} |")
+    return "\n".join(out)

@@ -1,0 +1,5 @@
+from repro.runtime import steps
+from repro.runtime.server import RAPServer
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+__all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer"]

@@ -1,0 +1,145 @@
+"""RAP serving runtime — paper Algorithm 3 embedded in a batched server.
+
+Per request the flow is the paper's online loop:
+  ① observe (batch, seq_len, available-memory budget)
+  ② RAPController.decide() → block keep-mask (masked-argmax over Q until
+     the analytical peak fits)
+  ③ execute pruned inference
+  ④ report memory / quality stats
+
+XLA adaptation of "execute pruned" (see DESIGN.md §2) — two modes:
+  * ``masked``     — the mask becomes runtime 0/1 gate inputs to one shared
+    executable: zero recompiles, instant policy switches, but no real
+    memory savings (GSI scoring and latency-critical paths use this);
+  * ``structural`` — parameter stacks are gathered along the layer axis
+    into a genuinely smaller pytree + smaller KV cache, and the
+    (prefill, decode) executables are cached per *bucket* (the retained
+    layout signature). Uniform architectures collapse many masks into one
+    bucket, so compiles amortize exactly like vLLM's shape buckets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+from repro.core.controller import RAPController
+from repro.models import decoder
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: np.ndarray           # [B, generated]
+    mask: np.ndarray
+    peak_bytes: float
+    budget_bytes: float
+    fits: bool
+    decide_s: float
+    infer_s: float
+    bucket: Tuple
+    compiled_new: bool
+
+
+class RAPServer:
+    def __init__(self, model, params, controller: RAPController, *,
+                 mode: str = "structural", max_new_tokens: int = 16,
+                 kv_dtype=None):
+        assert mode in ("structural", "masked")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.controller = controller
+        self.mode = mode
+        self.max_new = max_new_tokens
+        self.kv_dtype = kv_dtype
+        self._bucket_cache: Dict[Tuple, Dict[str, Any]] = {}
+        self._masked_exec: Dict[Tuple[int, int], Dict[str, Any]] = {}
+
+    # ------------------------------------------------------------ executors
+    def _structural_entry(self, mask: np.ndarray, prompt_shape):
+        key = (masks_lib.bucket_key(self.cfg, mask), prompt_shape)
+        new = key not in self._bucket_cache
+        if new:
+            small, layout = masks_lib.compact_params(self.params, self.cfg,
+                                                     mask)
+            max_len = prompt_shape[1] + self.max_new
+            cfg = self.cfg
+
+            @jax.jit
+            def prefill(p, tokens):
+                return decoder.prefill(p, cfg, tokens, max_len,
+                                       layout=layout, kv_dtype=self.kv_dtype)
+
+            @jax.jit
+            def decode(p, cache, tok):
+                return decoder.decode_step(p, cfg, cache, tok, layout=layout)
+
+            self._bucket_cache[key] = {
+                "params": small, "prefill": prefill, "decode": decode,
+            }
+        return key, self._bucket_cache[key], new
+
+    def _masked_entry(self, prompt_shape):
+        key = prompt_shape
+        new = key not in self._masked_exec
+        if new:
+            cfg = self.cfg
+            max_len = prompt_shape[1] + self.max_new
+
+            @jax.jit
+            def prefill(p, tokens, gates):
+                return decoder.prefill(p, cfg, tokens, max_len, gates=gates,
+                                       kv_dtype=self.kv_dtype)
+
+            @jax.jit
+            def decode(p, cache, tok, gates):
+                return decoder.decode_step(p, cfg, cache, tok, gates=gates)
+
+            self._masked_exec[key] = {"prefill": prefill, "decode": decode}
+        return key, self._masked_exec[key], new
+
+    # --------------------------------------------------------------- serve
+    def serve(self, prompt_tokens: np.ndarray, budget_bytes: float,
+              *, greedy: bool = True) -> ServeResult:
+        B, S = prompt_tokens.shape
+        total_len = S + self.max_new
+        d = self.controller.decide(B, total_len, budget_bytes)
+        tokens = jnp.asarray(prompt_tokens, jnp.int32)
+
+        t0 = time.perf_counter()
+        if self.mode == "structural":
+            key, entry, new = self._structural_entry(d.mask, (B, S))
+            params = entry["params"]
+            logits, cache = entry["prefill"](params, tokens)
+            step_args = ()
+        else:
+            key, entry, new = self._masked_entry((B, S))
+            params = self.params
+            gates = masks_lib.mask_to_gates(d.mask)
+            logits, cache = entry["prefill"](params, tokens, gates)
+            step_args = (gates,)
+
+        out = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        for _ in range(self.max_new - 1):
+            lg, cache = entry["decode"](params, cache, tok, *step_args)
+            tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+        infer_s = time.perf_counter() - t0
+
+        return ServeResult(
+            tokens=gen, mask=d.mask, peak_bytes=d.peak_bytes,
+            budget_bytes=budget_bytes, fits=d.fits, decide_s=d.latency_s,
+            infer_s=infer_s, bucket=key if self.mode == "structural" else (),
+            compiled_new=new)
+
+    def stats(self) -> Dict[str, int]:
+        return {"structural_buckets": len(self._bucket_cache),
+                "masked_executables": len(self._masked_exec)}

@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only the dry-run uses placeholder devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticCorpus
+from repro.models import registry
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    """4-layer llama-family model + params + calibration batch."""
+    cfg = get_smoke_config("llama2-7b").replace(n_layers=4)
+    model = registry.build(cfg)
+    params = model.init(jax.random.key(0))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=7)
+    batch = {k: jnp.asarray(v) for k, v in corpus.batch(2, 32,
+                                                        split="calib").items()}
+    return model, params, batch
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

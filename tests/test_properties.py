@@ -1,0 +1,120 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs import get_smoke_config
+from repro.core import masks, memory
+from repro.data import SyntheticCorpus
+from repro.kernels import ref
+from repro.optim import adamw
+
+CFG = get_smoke_config("llama2-7b").replace(n_layers=4)
+MM = memory.build_memory_model(CFG)
+L = CFG.n_layers
+
+mask_strategy = st.lists(st.booleans(), min_size=2 * L, max_size=2 * L)
+
+
+@settings(max_examples=50, deadline=None)
+@given(mask=mask_strategy, bs=st.integers(1, 64), sql=st.integers(1, 8192))
+def test_memory_model_monotone(mask, bs, sql):
+    """Peak memory is monotone: removing any block never increases it, and
+    every peak is ≥ the embedding floor."""
+    m = np.asarray(mask, bool)
+    peak = MM.peak_bytes(m, bs, sql)
+    assert peak >= MM.embed_bytes - 1e-6
+    live = np.nonzero(m)[0]
+    if len(live):
+        m2 = masks.remove_block(m, int(live[0]))
+        assert MM.peak_bytes(m2, bs, sql) <= peak + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(bs=st.integers(1, 32), s1=st.integers(1, 2048), s2=st.integers(1, 2048))
+def test_kv_linear_in_seq(bs, s1, s2):
+    """Eq. (1): KV state is linear in seq_len (dense full mask)."""
+    full = masks.full_mask(L)
+    a = MM.state_bytes(full, bs, s1)
+    b = MM.state_bytes(full, bs, s2)
+    c = MM.state_bytes(full, bs, s1 + s2)
+    assert abs((a + b) - c) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(mask=mask_strategy)
+def test_compact_layout_consistent(mask):
+    """Compacted layout has exactly the retained blocks, in order."""
+    m = np.asarray(mask, bool)
+    layout, gather = masks.compact_layout(CFG, m)
+    n_mixers = sum(1 for s in layout if s.mixer is not None)
+    n_ffns = sum(1 for s in layout if s.ffn is not None)
+    assert n_mixers == int(m[:L].sum())
+    assert n_ffns == int(m[L:].sum())
+    # gather indices are strictly increasing per kind (order preserved)
+    for kind, idxs in gather.items():
+        assert idxs == sorted(idxs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 4),
+       seq=st.integers(2, 64))
+def test_corpus_deterministic_and_in_range(seed, batch, seq):
+    c = SyntheticCorpus(128, seed=seed)
+    b1 = c.batch(batch, seq)
+    b2 = c.batch(batch, seq)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 128
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 40), w=st.integers(1, 8))
+def test_rglru_ref_contraction(t, w):
+    """|h_t| stays bounded when |a|<1 and |b| bounded (stability)."""
+    rng = np.random.default_rng(t * 100 + w)
+    a = jnp.asarray(rng.uniform(0.0, 0.99, (1, t, w)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(-1, 1, (1, t, w)).astype(np.float32))
+    h = ref.rglru_ref(a, b)
+    assert np.abs(np.asarray(h)).max() <= 1.0 / (1 - 0.99) + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(steps=st.integers(1, 5))
+def test_adamw_descends_quadratic(steps):
+    """AdamW reduces a convex quadratic within a few steps."""
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            schedule="constant", clip_norm=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    l0 = float(loss(params))
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply(cfg, params, g, state)
+    assert float(loss(params)) < l0
+
+
+@settings(max_examples=15, deadline=None)
+@given(frac=st.floats(0.3, 1.0), bs=st.integers(1, 16),
+       sql=st.integers(64, 4096))
+def test_budget_fraction_semantics(frac, bs, sql):
+    b = memory.budget_bytes(MM, bs, sql, frac)
+    assert abs(b - frac * MM.dense_peak(bs, sql)) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=st.lists(st.floats(-50, 50), min_size=4, max_size=64))
+def test_int8_kv_quant_roundtrip(x):
+    """Quantize→dequantize error bounded by scale/2 per element."""
+    from repro.models.attention import kv_quant
+    arr = jnp.asarray(np.asarray(x, np.float32).reshape(1, -1))
+    q, scale = kv_quant(arr)
+    deq = q.astype(jnp.float32) * scale
+    err = np.abs(np.asarray(deq - arr))
+    assert err.max() <= float(scale.max()) * 0.51 + 1e-6
