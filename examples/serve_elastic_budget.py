@@ -63,6 +63,35 @@ def main():
               f"{'compile' if r.compiled_new else 'cached'}")
     print("\nexecutable buckets compiled:", server.stats())
 
+    # ---- phase 2: the same contention made REAL — a burst of concurrent
+    # requests competing for one shared KV pool through the engine
+    # (DESIGN.md §3). Admission control queues what the pool cannot hold;
+    # the controller prunes deeper as the pool fills.
+    from repro.core import masks
+    from repro.runtime import EngineConfig, EngineRequest, RAPEngine
+
+    full = masks.full_mask(cfg.n_layers)
+    max_total = 256 + 8
+    pool_budget = (mm.param_bytes(full)
+                   + 2.0 * mm.state_bytes(full, 1, max_total))
+    engine = RAPEngine(model, params, ctl, EngineConfig(
+        mode="structural", max_new_tokens=8, max_active=4,
+        max_len=max_total, budget_bytes=pool_budget))
+    burst = [EngineRequest(rid=f"burst{i}",
+                           prompt=corpus.sample_tokens(rng, 1, 256),
+                           arrival_t=0.0)
+             for i in range(8)]
+    print(f"\nburst: 8 concurrent requests into a shared pool sized for "
+          f"~2 dense requests ({pool_budget/1e6:.1f}MB total budget)")
+    rep = engine.run(burst)
+    for r in rep.results:
+        print(f"  {r.rid}: kept {int(r.mask.sum()):2d}/{len(r.mask)}  "
+              f"queued {r.queue_delay_s*1e3:5.0f}ms  fits={r.fits}")
+    print(f"engine: {rep.tokens_per_s:.1f} tok/s, pool peak "
+          f"{rep.pool['peak_reserved_bytes']/1e6:.2f}MB of "
+          f"{rep.pool['capacity_bytes']/1e6:.2f}MB "
+          f"(never exceeded), frag {rep.pool['fragmentation']:.2f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,45 @@
+"""Version-skew shims for the jax APIs this codebase spells the modern way.
+
+The code targets current jax, but containers may carry an older release
+(0.4.x/0.5.x) where a few names live elsewhere or take different kwargs:
+
+  * ``jax.shard_map``            → ``jax.experimental.shard_map.shard_map``
+    (and ``check_vma=`` was called ``check_rep=``);
+  * ``jax.sharding.AxisType``    → absent (explicit-sharding meshes landed
+    later; plain meshes behave identically for our uses);
+  * ``pallas.tpu.CompilerParams`` → named ``TPUCompilerParams`` before the
+    rename.
+
+Call sites keep the modern spelling through these shims.
+"""
+from __future__ import annotations
+
+
+def tpu_compiler_params():
+    """The pallas-TPU CompilerParams class under either of its names."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    try:
+        from jax import shard_map as _sm               # jax >= 0.6
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+
+
+def make_mesh(shape, axes, devices=None):
+    import jax
+
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes),
+                             devices=devices)
+    except ImportError:
+        return jax.make_mesh(shape, axes, devices=devices)

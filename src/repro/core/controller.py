@@ -29,6 +29,7 @@ class Decision:
     peak_bytes: float
     fits: bool
     latency_s: float
+    cached: bool = False      # served from the (bucket, shape) memo table
 
 
 class RAPController:
@@ -48,6 +49,7 @@ class RAPController:
                                                      chunk=chunk)
         self._ppl = gsi_lib.make_ppl_fn(model, calib_batch)
         self._dense_cache: Optional[np.ndarray] = None
+        self._memo: Dict[Tuple, Decision] = {}
 
     def _importance(self, mask: np.ndarray) -> np.ndarray:
         if not self.recompute and self._dense_cache is not None:
@@ -70,9 +72,34 @@ class RAPController:
             [budget / dense, peak / dense],
         ]).astype(np.float32)
 
-    def decide(self, bs: int, sql: int, budget_bytes: float) -> Decision:
-        """Algorithm 3: prune until Mem_peak ≤ B (or STOP / exhaustion)."""
+    def decide(self, bs: int, sql: int, budget_bytes: float, *,
+               reserved_bytes: float = 0.0, memo: bool = True) -> Decision:
+        """Algorithm 3: prune until Mem_peak ≤ B (or STOP / exhaustion).
+
+        Batch-aware form for the continuous-batching engine:
+        ``reserved_bytes`` is the dynamic state already resident for other
+        in-flight requests (the KV pool's reserved bytes) — this request must
+        fit in what remains of the shared device budget, so the effective
+        budget is ``budget_bytes - reserved_bytes``.
+
+        Decisions are memoized by (bucket, shape): the key quantizes the
+        effective-budget/dense-peak ratio to 0.1% so the engine's
+        continuously drifting pool level collapses onto a small table and
+        steady-state admission skips the greedy Q-rollout entirely.
+        """
         t0 = time.perf_counter()
+        budget_bytes = budget_bytes - reserved_bytes
+        key = (int(bs), int(sql),
+               round(budget_bytes / max(self.mm.dense_peak(bs, sql), 1.0), 3))
+        if memo and key in self._memo:
+            d = self._memo[key]
+            # fits is re-derived against THIS call's budget: the memo cell
+            # quantizes to 0.1% of dense, so a cached fits could straddle
+            # the boundary for a slightly smaller budget in the same cell
+            return dataclasses.replace(
+                d, mask=d.mask.copy(), cached=True,
+                fits=d.peak_bytes <= budget_bytes,
+                latency_s=time.perf_counter() - t0)
         mask = masks_lib.full_mask(self.L)
         imp = self._importance(mask)
         steps = 0
@@ -94,6 +121,9 @@ class RAPController:
             if self.recompute:
                 imp = self._importance(mask)
         peak = self.mm.peak_bytes(mask, bs, sql)
-        return Decision(mask=mask, steps=steps, peak_bytes=peak,
-                        fits=peak <= budget_bytes,
-                        latency_s=time.perf_counter() - t0)
+        d = Decision(mask=mask, steps=steps, peak_bytes=peak,
+                     fits=peak <= budget_bytes,
+                     latency_s=time.perf_counter() - t0)
+        if memo:
+            self._memo[key] = dataclasses.replace(d, mask=mask.copy())
+        return d

@@ -43,6 +43,7 @@ class MemoryModel:
 
     def state_bytes(self, mask: np.ndarray, batch: int, seq: int) -> float:
         m = np.asarray(mask)[: self.n_layers]
+        batch, seq = max(int(batch), 0), max(int(seq), 0)
         per_tok = float(self.mixer_state_unit @ m) * batch * seq
         fixed = float(self.mixer_state_fixed @ m) * batch
         return per_tok + fixed
@@ -55,8 +56,16 @@ class MemoryModel:
         return self.peak_bytes(np.ones(2 * self.n_layers, bool), batch, seq)
 
     def block_bytes(self, batch: int, seq: int) -> np.ndarray:
-        """Per-block total footprint [2L] (params + state) for the reward."""
+        """Per-block total footprint [2L] (params + state) for the reward.
+
+        Guarded against degenerate request shapes: callers occasionally pass
+        seq=0 (decode-only accounting) or negative deltas; the per-token term
+        must vanish then while the seq-independent ``mixer_state_fixed``
+        component (recurrent/conv/window state) is still charged per batch
+        element.
+        """
         L = self.n_layers
+        batch, seq = max(int(batch), 0), max(int(seq), 0)
         out = np.zeros(2 * L)
         out[:L] = (self.mixer_param_bytes
                    + self.mixer_state_unit * batch * seq
@@ -110,3 +119,73 @@ def build_memory_model(cfg, *, param_bytes_per: Optional[int] = None,
 def budget_bytes(mm: MemoryModel, batch: int, seq: int, fraction: float) -> float:
     """`fraction` of the dense model's peak (the paper's 80%/60% budgets)."""
     return fraction * mm.dense_peak(batch, seq)
+
+
+# ------------------------------------------------------------ pool accounting
+class PoolExhausted(RuntimeError):
+    """Raised when a reservation cannot fit the shared pool budget."""
+
+
+@dataclasses.dataclass
+class PoolAccounting:
+    """Reserved-vs-in-use byte ledger for a shared device pool.
+
+    The KV pool grants memory at *page* granularity, so two numbers
+    describe its pressure at any instant:
+
+      * ``reserved_bytes`` — bytes granted to live allocations (page-rounded;
+        this is what actually occupies the device budget);
+      * ``in_use_bytes``   — exact bytes the requests asked for (the
+        analytical Eq. (3)–(4) state footprint).
+
+    ``reserved - in_use`` is internal fragmentation. The ledger enforces the
+    hard invariant ``reserved_bytes <= capacity_bytes`` unless the caller
+    explicitly overcommits (legacy one-shot serving executes regardless of
+    fit; the engine's strict admission path never does).
+    """
+    capacity_bytes: float
+    reserved_bytes: float = 0.0
+    in_use_bytes: float = 0.0
+    peak_reserved_bytes: float = 0.0
+    peak_in_use_bytes: float = 0.0
+    overcommit_events: int = 0
+
+    @property
+    def available_bytes(self) -> float:
+        return max(self.capacity_bytes - self.reserved_bytes, 0.0)
+
+    def can_reserve(self, reserved: float) -> bool:
+        return self.reserved_bytes + reserved <= self.capacity_bytes
+
+    def reserve(self, reserved: float, in_use: float, *,
+                allow_overcommit: bool = False) -> None:
+        if in_use > reserved + 1e-6:
+            raise ValueError(f"in_use {in_use} exceeds reservation {reserved}")
+        if not self.can_reserve(reserved):
+            if not allow_overcommit:
+                raise PoolExhausted(
+                    f"reserve {reserved:.0f}B > available "
+                    f"{self.available_bytes:.0f}B "
+                    f"(capacity {self.capacity_bytes:.0f}B)")
+            self.overcommit_events += 1
+        self.reserved_bytes += reserved
+        self.in_use_bytes += in_use
+        self.peak_reserved_bytes = max(self.peak_reserved_bytes,
+                                       self.reserved_bytes)
+        self.peak_in_use_bytes = max(self.peak_in_use_bytes,
+                                     self.in_use_bytes)
+
+    def release(self, reserved: float, in_use: float) -> None:
+        self.reserved_bytes = max(self.reserved_bytes - reserved, 0.0)
+        self.in_use_bytes = max(self.in_use_bytes - in_use, 0.0)
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: wasted fraction of reserved bytes."""
+        if self.reserved_bytes <= 0:
+            return 0.0
+        return 1.0 - self.in_use_bytes / self.reserved_bytes
+
+    def occupancy(self) -> float:
+        if self.capacity_bytes <= 0:
+            return 0.0
+        return self.reserved_bytes / self.capacity_bytes

@@ -71,6 +71,58 @@ def generate(cfg: WorkloadConfig) -> List[Request]:
     return out
 
 
+# ------------------------------------------------- engine arrival processes
+@dataclasses.dataclass
+class PoissonConfig:
+    """Homogeneous-Poisson request stream for the continuous-batching engine.
+
+    Unlike :func:`generate` (which models the paper's diurnal/bursty traffic
+    over a long horizon), this produces a fixed-count trace with exponential
+    interarrivals — the standard benchmark arrival process for serving
+    engines — plus the same bimodal prompt-length mix. Budget here is the
+    *shared* pool fraction, not a per-request instantaneous budget.
+    """
+    seed: int = 0
+    n_requests: int = 16
+    rate: float = 4.0                    # mean arrivals per second
+    short_len: Tuple[int, int] = (32, 128)
+    long_len: Tuple[int, int] = (128, 512)
+    long_frac: float = 0.25
+    round_len_to: int = 16
+    budget_frac: float = 0.8             # recorded per request for replay
+    batch: int = 1                       # sequences per request
+
+
+def poisson_requests(cfg: PoissonConfig) -> List[Request]:
+    """Fixed-count Poisson trace with arrival timestamps (t strictly
+    increasing). Deterministic in ``cfg.seed``."""
+    rng = np.random.default_rng(cfg.seed)
+    out: List[Request] = []
+    t = 0.0
+    for _ in range(cfg.n_requests):
+        t += float(rng.exponential(1.0 / max(cfg.rate, 1e-9)))
+        if rng.random() < cfg.long_frac:
+            sql = int(rng.integers(*cfg.long_len))
+        else:
+            sql = int(rng.integers(*cfg.short_len))
+        sql = max(cfg.round_len_to,
+                  (sql // cfg.round_len_to) * cfg.round_len_to)
+        out.append(Request(t=t, batch=cfg.batch, seq_len=sql,
+                           budget_frac=cfg.budget_frac))
+    return out
+
+
+def trace_requests(arrivals, seq_lens, *, batch: int = 1,
+                   budget_frac: float = 0.8) -> List[Request]:
+    """Replay an externally supplied (arrival_time, prompt_len) trace —
+    e.g. Azure LLM-trace timestamps — as engine requests."""
+    if len(arrivals) != len(seq_lens):
+        raise ValueError("arrivals and seq_lens must be the same length")
+    return [Request(t=float(t), batch=batch, seq_len=int(s),
+                    budget_frac=budget_frac)
+            for t, s in zip(arrivals, seq_lens)]
+
+
 def request_sampler(cfg: WorkloadConfig, mm, *,
                     budget_range: Tuple[float, float] = (0.55, 0.95)):
     """Adapter for ``repro.core.dqn.train``: samples (bs, sql, budget_bytes)

@@ -17,26 +17,26 @@ import numpy as np
 
 def make_production_mesh(*, multi_pod: bool = False):
     import jax
-    from jax.sharding import AxisType
+
+    from repro.compat import make_mesh
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[: int(np.prod(shape))])
+    return make_mesh(shape, axes,
+                     devices=jax.devices()[: int(np.prod(shape))])
 
 
 def make_host_mesh(shape: Tuple[int, ...] = None, axes=None):
     """Small mesh over whatever devices exist (tests / local runs)."""
     import jax
-    from jax.sharding import AxisType
+
+    from repro.compat import make_mesh
 
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n, 1), ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=jax.devices()[: int(np.prod(shape))])
+    return make_mesh(shape, axes,
+                     devices=jax.devices()[: int(np.prod(shape))])
 
 
 # Hardware constants for the roofline (TPU v5e per chip).

@@ -4,9 +4,15 @@
       --requests 10 --mode structural
 
 Boots the reduced model, trains the RAP controller briefly (or loads
-``--qnet`` from a checkpoint), then replays an Azure-like workload trace of
-(batch, seq_len, memory-budget) requests through ``RAPServer`` — the full
-online loop of paper Algorithm 3.
+``--qnet`` from a checkpoint), then serves an Azure-like workload trace of
+(batch, seq_len, memory-budget) requests — the full online loop of paper
+Algorithm 3.
+
+Two serving paths (DESIGN.md §3):
+  * default — continuous batching through ``RAPEngine``: one shared KV pool
+    with admission control; all in-flight requests decode together;
+  * ``--serial`` — the historical one-shot ``RAPServer`` replay, each
+    request against its own instantaneous budget.
 """
 from __future__ import annotations
 
@@ -20,8 +26,15 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--mode", choices=("structural", "masked"),
                     default="structural")
+    ap.add_argument("--serial", action="store_true",
+                    help="one-shot RAPServer replay instead of the engine")
     ap.add_argument("--episodes", type=int, default=20)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine decode slots (concurrent requests)")
+    ap.add_argument("--pool-requests", type=float, default=2.5,
+                    help="KV pool sized for this many concurrent dense "
+                         "requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -29,11 +42,11 @@ def main():
     import numpy as np
 
     from repro.configs import get_config, get_smoke_config
-    from repro.core import dqn, env as env_lib, memory, workload
+    from repro.core import dqn, env as env_lib, masks, memory, workload
     from repro.core.controller import RAPController
     from repro.data import SyntheticCorpus
     from repro.models import registry
-    from repro.runtime import RAPServer
+    from repro.runtime import EngineConfig, EngineRequest, RAPEngine, RAPServer
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = registry.build(cfg)
@@ -57,23 +70,68 @@ def main():
           f"fit-rate={np.mean(tr.episode_fits):.2f}")
 
     controller = RAPController(model, params, calib, mm, tr.q_params)
-    server = RAPServer(model, params, controller, mode=args.mode,
-                       max_new_tokens=args.max_new)
-
     reqs = workload.generate(wl)[: args.requests]
     rng = np.random.default_rng(args.seed)
+
+    if args.serial:
+        server = RAPServer(model, params, controller, mode=args.mode,
+                           max_new_tokens=args.max_new)
+        for i, r in enumerate(reqs):
+            sql = min(r.seq_len, 256)
+            prompt = corpus.sample_tokens(rng, r.batch, sql)
+            budget = r.budget_frac * mm.dense_peak(r.batch, sql + args.max_new)
+            res = server.serve(prompt, budget)
+            kept = int(res.mask.sum())
+            print(f"req {i}: bs={r.batch} sql={sql} "
+                  f"budget={r.budget_frac:.2f} "
+                  f"→ kept {kept}/{len(res.mask)} blocks, "
+                  f"peak {res.peak_bytes/1e6:.1f}MB fits={res.fits} "
+                  f"decide {res.decide_s*1e3:.0f}ms infer {res.infer_s:.2f}s "
+                  f"{'(new compile)' if res.compiled_new else '(cached)'}")
+        print("bucket stats:", server.stats())
+        return
+
+    # ------------------------------------------------- continuous batching
+    max_total = 256 + args.max_new
+    full = masks.full_mask(cfg.n_layers)
+    # same workload the serial path serves: requests keep their trace batch
+    # size (each occupies that many cache slots)
+    slots = max(args.slots, *(r.batch for r in reqs))
+    max_b = max(r.batch for r in reqs)
+    budget = (mm.param_bytes(full)
+              + args.pool_requests * mm.state_bytes(full, max_b, max_total))
+    engine = RAPEngine(model, params, controller, EngineConfig(
+        mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
+        max_len=max_total, budget_bytes=budget))
+    ereqs = []
     for i, r in enumerate(reqs):
         sql = min(r.seq_len, 256)
         prompt = corpus.sample_tokens(rng, r.batch, sql)
-        budget = r.budget_frac * mm.dense_peak(r.batch, sql + args.max_new)
-        res = server.serve(prompt, budget)
-        kept = int(res.mask.sum())
-        print(f"req {i}: bs={r.batch} sql={sql} budget={r.budget_frac:.2f} "
-              f"→ kept {kept}/{len(res.mask)} blocks, "
-              f"peak {res.peak_bytes/1e6:.1f}MB fits={res.fits} "
-              f"decide {res.decide_s*1e3:.0f}ms infer {res.infer_s:.2f}s "
-              f"{'(new compile)' if res.compiled_new else '(cached)'}")
-    print("bucket stats:", server.stats())
+        ereqs.append(EngineRequest(rid=f"req{i}", prompt=prompt,
+                                   arrival_t=r.t - reqs[0].t))
+    print(f"engine: {len(ereqs)} requests "
+          f"(batch {min(r.batch for r in reqs)}–{max(r.batch for r in reqs)}),"
+          f" {slots} slots, shared pool {budget/1e6:.1f}MB total budget")
+    rep = engine.run(ereqs)
+    for r in rep.results:
+        if r.status == "done":
+            kept = int(r.mask.sum())
+            print(f"{r.rid}: kept {kept}/{len(r.mask)} blocks  "
+                  f"queue {r.queue_delay_s*1e3:.0f}ms  "
+                  f"decide {r.decide_s*1e3:.0f}ms"
+                  f"{' (memo)' if r.cached_decision else ''}  "
+                  f"fits={r.fits}")
+        else:
+            print(f"{r.rid}: REJECTED ({r.reason})")
+    print(f"engine: {rep.tokens_per_s:.1f} tok/s, "
+          f"{rep.decode_iters} decode iters, "
+          f"mean queue {rep.mean_queue_delay_s*1e3:.0f}ms, "
+          f"fit-rate {rep.budget_fit_rate:.2f}")
+    print(f"pool: peak {rep.pool['peak_reserved_bytes']/1e6:.2f}MB "
+          f"of {rep.pool['capacity_bytes']/1e6:.2f}MB, "
+          f"frag {rep.pool['fragmentation']:.2f}, "
+          f"overcommits {int(rep.pool['overcommit_events'])}")
+    print("engine stats:", engine.stats())
 
 
 if __name__ == "__main__":

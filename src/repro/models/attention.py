@@ -224,38 +224,52 @@ def load_kv(entry: dict, dtype):
 def decode_attention(params, cfg, x, kv: dict, pos, *, window: int = 0,
                      impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x: [B,1,D]; kv: cache entry (no layer axis), leaves
-    [B, S_max, K, Dh] (+ scales); pos scalar. Returns (out [B,1,D], kv')."""
+    [B, S_max, K, Dh] (+ scales). Returns (out [B,1,D], kv').
+
+    ``pos`` is a scalar (whole batch at one position — the one-shot server
+    path) or an int32 [B] vector (continuous batching: each cache slot holds
+    a different request at its own decode offset). The vector path scatters
+    each row's KV at its own slot and builds a per-row validity mask.
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    batched_pos = pos.ndim > 0
     q, k, v = _project_qkv(params, cfg, x)
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     if cfg.use_rope:
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
+    S = kv["k"].shape[1]
     if window > 0:
         # ring-buffer write for banded caches
-        slot = jnp.mod(pos, kv["k"].shape[1])
+        slot = jnp.mod(pos, S)
     else:
         slot = pos
     new = store_kv(kv, k, v)
     kv = dict(kv)
     for key, val in new.items():
-        kv[key] = jax.lax.dynamic_update_slice(
-            kv[key], val, (0, slot) + (0,) * (kv[key].ndim - 2))
-    S = kv["k"].shape[1]
-    kpos = jnp.arange(S)
+        if batched_pos:
+            # per-row scatter: row b writes at its own slot[b]
+            kv[key] = kv[key].at[jnp.arange(B), slot].set(val[:, 0])
+        else:
+            kv[key] = jax.lax.dynamic_update_slice(
+                kv[key], val, (0, slot) + (0,) * (kv[key].ndim - 2))
+    kpos = jnp.arange(S)[None, :]
+    posc = pos.reshape(-1, 1)
     if window > 0:
         # valid = within the last `window` tokens (ring semantics)
-        age = jnp.mod(pos - kpos, S)
-        valid = (age < jnp.minimum(pos + 1, window))
+        age = jnp.mod(posc - kpos, S)
+        valid = (age < jnp.minimum(posc + 1, window))      # [B or 1, S]
     else:
-        valid = kpos <= pos
+        valid = kpos <= posc                               # [B or 1, S]
     ck, cv = load_kv(kv, q.dtype)
-    if impl == "pallas":
+    if impl == "pallas" and not batched_pos:
         from repro.kernels import ops as kops
-        out = kops.decode_attention(q, ck, cv, valid,
+        out = kops.decode_attention(q, ck, cv, valid[0],
                                     softcap=cfg.logit_softcap)
     else:
-        mask = valid[None, None, None, :]
+        mask = valid[:, None, None, :]
         out = _sdpa(cfg, q, ck, cv, mask)
-    y = jnp.einsum("bsq,qm->bsm", out.reshape(x.shape[0], 1, -1),
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(B, 1, -1),
                    params["wo"].astype(x.dtype))
     return y, kv

@@ -165,6 +165,20 @@ def _ones_gates(n_layers: int):
             "ffn": jnp.ones((n_layers,), jnp.float32)}
 
 
+def _bgate(g, ref):
+    """Broadcast one layer's gate against an activation [B, S, D].
+
+    Gates are scalars in one-shot serving ([L] per-layer vectors) and
+    per-request rows in the continuous-batching engine ([L, B]: each cache
+    slot runs its own keep-mask). Scalars broadcast as before; [B] rows gain
+    trailing axes so slot b's residual branch is scaled by its own gate.
+    """
+    g = g.astype(ref.dtype)
+    if g.ndim == 0:
+        return g
+    return g.reshape(g.shape + (1,) * (ref.ndim - g.ndim))
+
+
 # -------------------------------------------------------------------- forward
 def forward(params, cfg, tokens, *, gates=None, extra_embeds=None,
             impl: str = "xla", remat: bool = False, layout=None,
@@ -532,7 +546,13 @@ def _ssd_prefill(pm, cfg, hn):
 # --------------------------------------------------------------------- decode
 def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
                 layout=None) -> Tuple[jnp.ndarray, dict]:
-    """One autoregressive step. tokens: [B,1]. Returns (logits [B,1,Vp], cache)."""
+    """One autoregressive step. tokens: [B,1]. Returns (logits [B,1,Vp], cache).
+
+    Continuous-batching form: ``cache["pos"]`` may be an int32 [B] vector
+    (per-slot decode offsets) and ``gates`` entries may be [L, B] (per-slot
+    keep-masks) — every slot of the engine's shared cache advances one token
+    in a single fused step. Scalar pos / [L] gates remain the one-shot path.
+    """
     layout = layout or default_layout(cfg)
     L = len(layout)
     gates = gates or _ones_gates(L)
@@ -576,10 +596,10 @@ def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
                         state["state"], ss, i, 0),
                     "conv": jax.lax.dynamic_update_index_in_dim(
                         state["conv"], cb, i, 0)}
-            h = h + gm.astype(h.dtype) * out
+            h = h + _bgate(gm, h) * out
             if pf is not None:
-                h = h + gf.astype(h.dtype) * _apply_ffn(layout[0].ffn, pf,
-                                                        cfg, h, impl=impl)
+                h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf,
+                                                   cfg, h, impl=impl)
             return (h, state), None
 
         L_kind = len(layout)
@@ -620,10 +640,10 @@ def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
                     cache["ssd"]["conv"][ci])
                 cache["ssd"]["state"] = cache["ssd"]["state"].at[ci].set(ss)
                 cache["ssd"]["conv"] = cache["ssd"]["conv"].at[ci].set(cb)
-            h = h + gates["mixer"][i].astype(h.dtype) * out
+            h = h + _bgate(gates["mixer"][i], h) * out
         if slot.ffn is not None:
             pf = tree_slice(params["stacks"][slot.ffn], slot.ffn_idx)
-            h = h + gates["ffn"][i].astype(h.dtype) * _apply_ffn(
+            h = h + _bgate(gates["ffn"][i], h) * _apply_ffn(
                 slot.ffn, pf, cfg, h, impl=impl)
 
     logits = _unembed(params, cfg, h)

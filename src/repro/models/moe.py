@@ -156,7 +156,7 @@ def moe_ffn_ep(params, cfg, x, pol):
     FSDP composition: when weights carry an extra "data" shard, the body
     all-gathers them before use (explicit ZeRO-3 gather, visible in HLO).
     """
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.parallel.sharding import _add_fsdp, _param_rule

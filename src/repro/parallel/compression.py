@@ -46,10 +46,9 @@ def compress_allreduce(grads, residuals, axis_names) -> Tuple[Any, Any]:
         deq = q.astype(jnp.float32) * scale
         new_r = v - deq                                   # error feedback
         total = jax.lax.psum(q.astype(jnp.float32) * scale, axis_names)
-        n = 1
-        for a in (axis_names if isinstance(axis_names, tuple)
-                  else (axis_names,)):
-            n *= jax.lax.axis_size(a)
+        # axis size via psum(1): works on every jax release (lax.axis_size
+        # is a recent addition) and folds to a constant under shard_map
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_names)
         return total / n, new_r
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)

@@ -1,5 +1,10 @@
 from repro.runtime import steps
-from repro.runtime.server import RAPServer
+from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
+                                  RAPEngine, RequestResult)
+from repro.runtime.kv_pool import KVPool, PageAllocation, PoolExhausted
+from repro.runtime.server import RAPServer, ServeResult
 from repro.runtime.trainer import Trainer, TrainerConfig
 
-__all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer"]
+__all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer", "ServeResult",
+           "RAPEngine", "EngineConfig", "EngineRequest", "EngineReport",
+           "RequestResult", "KVPool", "PageAllocation", "PoolExhausted"]

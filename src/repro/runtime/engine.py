@@ -1,0 +1,579 @@
+"""Continuous-batching RAP engine — shared-budget serving of concurrent
+requests (the production form of paper Algorithm 3).
+
+``RAPServer`` replays requests one at a time, so each request sees a
+*private* instantaneous budget and "runtime memory variation" is simulated.
+The engine makes the contention real: many in-flight requests compete for
+one device budget, and the controller's keep-mask decision is made against
+whatever the *pool* has left.
+
+Architecture (one iteration of :meth:`RAPEngine._tick`):
+
+  1. **arrivals** — requests become visible at their trace timestamps
+     (virtual clock; idle gaps are skipped, compute time is real);
+  2. **admission control** — FIFO head-of-line: for the oldest waiting
+     request, ``RAPController.decide()`` runs against the *remaining*
+     shared budget (total budget minus the pool's reserved bytes), then the
+     request's analytical KV/state bytes are allocated from the
+     :class:`~repro.runtime.kv_pool.KVPool`. If pages are short the request
+     waits (strict mode) — admission never lets bytes-in-use exceed the
+     budget. ``force`` mode (the one-shot compatibility path) admits
+     regardless and records the overcommit;
+  3. **prefill** — newly admitted requests prefill individually (shapes
+     differ) and their caches are written into free *slots* of the group's
+     shared slot-batched cache;
+  4. **decode** — ALL running requests advance one token in a single fused
+     ``decode_step`` per group: per-slot positions (int32 [B]) and
+     per-slot gates ([L, B]) let one executable serve every resident
+     keep-mask in ``masked`` mode; ``structural`` mode groups requests by
+     bucket (retained-layout signature) with one compacted executable per
+     bucket, vLLM-shape-bucket style.
+
+Completed requests free their pages and slot, unblocking the queue.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+from repro.core.controller import Decision, RAPController
+from repro.models import decoder
+from repro.runtime.kv_pool import KVPool, default_page_bytes
+
+__all__ = ["EngineConfig", "EngineRequest", "RequestResult", "EngineReport",
+           "RAPEngine"]
+
+
+# ------------------------------------------------------------------- config
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "masked"              # masked | structural
+    max_new_tokens: int = 16
+    max_active: int = 8               # cache slots per group (decode batch)
+    max_len: int = 256                # slot cache length (prompt + generated)
+    budget_bytes: float = 0.0         # TOTAL device budget (params + states)
+    page_bytes: int = 0               # 0 → derived from the memory model
+    tokens_per_page: int = 16
+    kv_dtype: Any = None
+    admission: str = "strict"         # strict (queue) | force (overcommit)
+    # Admission quantizes the effective budget DOWN to this fraction of the
+    # request's dense peak before calling decide(). The pool level drifts
+    # continuously; without a quantum every admission sees a fresh budget,
+    # the controller emits a fresh mask, and structural mode compiles a
+    # fresh bucket — quantizing collapses steady-state admissions onto a
+    # handful of memoized decisions/buckets. Safety is unaffected: the page
+    # allocator, not the decision, enforces the byte budget.
+    budget_quantum_frac: float = 0.05
+
+    def __post_init__(self):
+        if self.mode not in ("masked", "structural"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.admission not in ("strict", "force"):
+            raise ValueError(f"unknown admission {self.admission!r}")
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: str                          # unique among in-flight requests
+    prompt: np.ndarray                # int32 [b, S]
+    arrival_t: float = 0.0
+    max_new: Optional[int] = None     # generated tokens (≥1: prefill always
+                                      # yields one); None → engine default
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: str
+    status: str                       # done | rejected
+    tokens: Optional[np.ndarray]      # [b, generated]
+    mask: Optional[np.ndarray]
+    bucket: Tuple
+    arrival_t: float
+    admitted_t: float
+    finished_t: float
+    queue_delay_s: float
+    decide_s: float
+    fits: bool
+    cached_decision: bool
+    peak_bytes: float
+    kv_bytes: float
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class EngineReport:
+    results: List[RequestResult]
+    wall_s: float                     # real compute wall time
+    makespan_s: float                 # virtual: includes skipped arrival gaps
+    generated_tokens: int
+    tokens_per_s: float               # generated / makespan_s
+    mean_queue_delay_s: float
+    budget_fit_rate: float            # admitted requests whose peak fit
+    rejected: int
+    decode_iters: int
+    compile_events: int
+    pool: Dict[str, float]
+
+    def result(self, rid: str) -> RequestResult:
+        for r in self.results:
+            if r.rid == rid:
+                return r
+        raise KeyError(rid)
+
+
+# ------------------------------------------------------------------ groups
+class _Group:
+    """One slot-batched executable family sharing a cache.
+
+    masked mode: a single group over the full params with per-slot gates.
+    structural mode: one group per bucket (compacted params, gates absorbed
+    into structure)."""
+
+    def __init__(self, key, params, layout, cfg_model, n_slots: int,
+                 max_len: int, kv_dtype, gated: bool,
+                 mask: Optional[np.ndarray] = None):
+        self.key = key
+        self.params = params
+        self.layout = layout
+        self.mask = mask              # the keep-mask that minted this bucket
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.gated = gated
+        self.occupants: List[Optional[str]] = [None] * n_slots
+        self.cache = decoder.init_cache(cfg_model, n_slots, max_len,
+                                        layout, kv_dtype)
+        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        if gated:
+            L = cfg_model.n_layers
+            self._gates_np = np.ones((2, L, n_slots), np.float32)
+            self._gates_dev = jnp.asarray(self._gates_np)
+        cfg = cfg_model
+        layout_c = layout
+
+        if gated:
+            @jax.jit
+            def step(p, cache, tok, gm, gf):
+                return decoder.decode_step(p, cfg, cache, tok,
+                                           gates={"mixer": gm, "ffn": gf})
+        else:
+            @jax.jit
+            def step(p, cache, tok):
+                return decoder.decode_step(p, cfg, cache, tok,
+                                           layout=layout_c)
+        self._step = step
+        self.compiled = False        # flips on first decode (trace+compile)
+
+    # ----------------------------------------------------------- occupancy
+    def free_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupants) if o is None]
+
+    def occupied(self) -> bool:
+        return any(o is not None for o in self.occupants)
+
+    def place(self, rid: str, slots: List[int], req_cache: dict,
+              mask: Optional[np.ndarray], prompt_len: int) -> None:
+        """Write a freshly prefilled request cache into ``slots``."""
+        idx = jnp.asarray(slots, jnp.int32)
+        cache = dict(self.cache)
+        for k, v in cache.items():
+            if k == "pos":
+                cache[k] = v.at[idx].set(jnp.asarray(prompt_len, jnp.int32))
+            else:
+                cache[k] = jax.tree.map(
+                    lambda big, small: big.at[:, idx].set(small), v,
+                    req_cache[k])
+        self.cache = cache
+        for s in slots:
+            self.occupants[s] = rid
+        if self.gated and mask is not None:
+            g = masks_lib.mask_to_gates(mask)
+            for s in slots:
+                self._gates_np[0, :, s] = np.asarray(g["mixer"])
+                self._gates_np[1, :, s] = np.asarray(g["ffn"])
+            self._gates_dev = jnp.asarray(self._gates_np)
+
+    def set_tokens(self, slots: List[int], toks: np.ndarray) -> None:
+        idx = jnp.asarray(slots, jnp.int32)
+        self.tokens = self.tokens.at[idx, 0].set(
+            jnp.asarray(toks, jnp.int32))
+
+    def evict(self, slots: List[int]) -> None:
+        for s in slots:
+            self.occupants[s] = None
+
+    # -------------------------------------------------------------- decode
+    def decode_once(self) -> Tuple[np.ndarray, bool]:
+        """Advance every slot one token; returns ([n_slots] next tokens,
+        whether this call compiled a new executable)."""
+        new = not self.compiled
+        self.compiled = True
+        if self.gated:
+            logits, self.cache = self._step(self.params, self.cache,
+                                            self.tokens, self._gates_dev[0],
+                                            self._gates_dev[1])
+        else:
+            logits, self.cache = self._step(self.params, self.cache,
+                                            self.tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.tokens = nxt[:, None]
+        return np.asarray(nxt), new
+
+
+@dataclasses.dataclass
+class _Running:
+    req: EngineRequest
+    decision: Decision
+    group_key: Any
+    slots: List[int]
+    admitted_t: float
+    kv_bytes: float
+    max_new: int
+    out: List[np.ndarray]            # per generated step: [b] tokens
+    bucket: Tuple
+
+
+# ------------------------------------------------------------------- engine
+class RAPEngine:
+    """Continuous-batching serving engine with RAP admission control."""
+
+    def __init__(self, model, params, controller: RAPController,
+                 cfg: EngineConfig):
+        self.model = model
+        self.mcfg = model.cfg
+        if getattr(self.mcfg, "is_encoder_decoder", False):
+            raise NotImplementedError("engine serves decoder-only models")
+        self.params = params
+        self.controller = controller
+        # private copy: ensure_capacity mutates max_len/max_active, and a
+        # caller-shared config would desync another engine's shape checks
+        # from its actual cache sizes
+        self.cfg = dataclasses.replace(cfg)
+        self.mm = controller.mm
+        self._full_mask = masks_lib.full_mask(self.mcfg.n_layers)
+        self.resident_param_bytes = self.mm.param_bytes(self._full_mask)
+        self._groups: Dict[Any, _Group] = {}
+        self._prefill_fns: Dict[Tuple, Any] = {}
+        self.pool: Optional[KVPool] = None
+        # run state
+        self._pending: List[EngineRequest] = []
+        self._waiting: Deque[EngineRequest] = collections.deque()
+        self._running: "collections.OrderedDict[str, _Running]" = \
+            collections.OrderedDict()
+        self._results: List[RequestResult] = []
+        self._decode_iters = 0
+        self._compiles = 0
+        self._t0 = 0.0
+        self._skew = 0.0
+        self._budget = cfg.budget_bytes
+
+    # ------------------------------------------------------------ capacity
+    def ensure_capacity(self, batch: int, total_len: int) -> None:
+        """Grow slot count / cache length; drops compiled groups on change."""
+        grew = False
+        if total_len > self.cfg.max_len:
+            self.cfg.max_len = int(total_len)
+            grew = True
+        if batch > self.cfg.max_active:
+            self.cfg.max_active = int(batch)
+            grew = True
+        if grew:
+            self._groups.clear()
+            self._prefill_fns.clear()
+
+    # ---------------------------------------------------------------- time
+    def _now(self) -> float:
+        return (time.perf_counter() - self._t0) + self._skew
+
+    # ---------------------------------------------------------------- pool
+    def _make_pool(self, budget_bytes: float) -> KVPool:
+        page = self.cfg.page_bytes or default_page_bytes(
+            self.mm, self.cfg.tokens_per_page)
+        cap = budget_bytes - self.resident_param_bytes
+        if cap < page and self.cfg.admission == "strict":
+            raise ValueError(
+                f"budget {budget_bytes:.0f}B leaves no KV pool after "
+                f"resident params ({self.resident_param_bytes:.0f}B)")
+        return KVPool(max(cap, 0.0), page_bytes=page, mm=self.mm)
+
+    # ------------------------------------------------------------- serving
+    def run(self, requests: List[EngineRequest], *,
+            budget_bytes: Optional[float] = None) -> EngineReport:
+        """Serve a trace to completion and report aggregate stats."""
+        budget = self.cfg.budget_bytes if budget_bytes is None else budget_bytes
+        self.pool = self._make_pool(budget)
+        self._budget = budget
+        self._pending = sorted(requests, key=lambda r: r.arrival_t)
+        self._waiting.clear()
+        self._running.clear()
+        self._results = []
+        self._decode_iters = 0
+        self._compiles = 0
+        self._skew = 0.0
+        self._t0 = time.perf_counter()
+        for g in self._groups.values():       # previous run's occupants
+            g.evict([i for i in range(g.n_slots)])
+        while self._pending or self._waiting or self._running:
+            self._tick()
+        # makespan is on the VIRTUAL clock (skipped idle gaps included) —
+        # the same clock request timestamps live on, so throughput is
+        # comparable with any other replay of the same arrival process
+        makespan = self._now()
+        wall = time.perf_counter() - self._t0
+        done = [r for r in self._results if r.status == "done"]
+        gen = sum(r.tokens.size for r in done if r.tokens is not None)
+        delays = [r.queue_delay_s for r in done]
+        return EngineReport(
+            results=self._results,
+            wall_s=wall,
+            makespan_s=makespan,
+            generated_tokens=gen,
+            tokens_per_s=gen / max(makespan, 1e-9),
+            mean_queue_delay_s=float(np.mean(delays)) if delays else 0.0,
+            budget_fit_rate=(float(np.mean([r.fits for r in done]))
+                             if done else 0.0),
+            rejected=sum(1 for r in self._results if r.status == "rejected"),
+            decode_iters=self._decode_iters,
+            compile_events=self._compiles,
+            pool=self.pool.stats())
+
+    # ------------------------------------------------------------ one tick
+    def _tick(self) -> None:
+        now = self._now()
+        while self._pending and self._pending[0].arrival_t <= now:
+            self._waiting.append(self._pending.pop(0))
+        # FIFO admission with head-of-line blocking (completion order stays
+        # arrival order for equal decode lengths)
+        while self._waiting:
+            verdict = self._try_admit(self._waiting[0])
+            if verdict == "defer":
+                break
+            self._waiting.popleft()
+        if not self._running:
+            if self._waiting:
+                # deferred head with an idle engine: nothing will ever free
+                # memory — reject instead of spinning (defensive; strict
+                # capacity misfits are rejected in _try_admit already)
+                self._reject(self._waiting.popleft(),
+                             "deferred with idle engine")
+            elif self._pending:
+                # fast-forward the virtual clock across the idle gap
+                self._skew += self._pending[0].arrival_t - self._now() + 1e-9
+            return
+        self._decode_all()
+
+    # ----------------------------------------------------------- admission
+    def _reject(self, req: EngineRequest, reason: str) -> None:
+        now = self._now()
+        self._results.append(RequestResult(
+            rid=req.rid, status="rejected", tokens=None, mask=None,
+            bucket=(), arrival_t=req.arrival_t, admitted_t=-1.0,
+            finished_t=now, queue_delay_s=now - req.arrival_t,
+            decide_s=0.0, fits=False, cached_decision=False,
+            peak_bytes=0.0, kv_bytes=0.0, reason=reason))
+
+    def _try_admit(self, req: EngineRequest) -> str:
+        """→ 'admitted' | 'defer' | 'rejected' (rejection recorded here)."""
+        b, S = req.prompt.shape
+        max_new = (self.cfg.max_new_tokens if req.max_new is None
+                   else req.max_new)
+        # prefill always yields one token, so the floor is 1 (a max_new=0
+        # request is served as prefill-only next-token prediction)
+        max_new = max(max_new, 1)
+        total = S + max_new
+        if req.rid in self._running:
+            self._reject(req, f"duplicate request id {req.rid!r} "
+                              f"(already in flight)")
+            return "rejected"
+        if total > self.cfg.max_len or b > self.cfg.max_active:
+            if self.cfg.admission != "force":
+                self._reject(req, f"shape (b={b}, prompt+gen={total}) "
+                                  f"exceeds engine capacity "
+                                  f"({self.cfg.max_active} slots × "
+                                  f"{self.cfg.max_len})")
+                return "rejected"
+            if self._running:
+                return "defer"   # growth drops live caches; wait for drain
+            self.ensure_capacity(b, total)
+
+        # keep-mask against the REMAINING shared budget (quantized down so
+        # steady-state admissions hit the controller's memo table)
+        eff = self._budget - self.pool.bytes_reserved
+        quantum = self.cfg.budget_quantum_frac * self.mm.dense_peak(b, total)
+        if quantum > 0 and self.cfg.admission == "strict":
+            # (force mode is the one-shot compatibility path: budgets pass
+            # through exactly so decisions match the historical contract)
+            eff = np.floor(eff / quantum + 1e-9) * quantum
+        d = self._sticky_decision(b, total, eff)
+        if d is None:
+            d = self.controller.decide(b, total, eff)
+        kv_bytes = self.mm.state_bytes(d.mask, b, total)
+        force = self.cfg.admission == "force"
+        if not force:
+            if not self.pool.fits_capacity(kv_bytes):
+                self._reject(req, f"state {kv_bytes:.0f}B can never fit "
+                                  f"pool capacity "
+                                  f"{self.pool.acct.capacity_bytes:.0f}B")
+                return "rejected"
+            if not self.pool.can_alloc(kv_bytes):
+                return "defer"
+
+        group = self._group_for(d.mask)
+        free = group.free_slots()
+        if len(free) < b:
+            return "defer"
+        slots = free[:b]
+        self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
+        first = self._prefill_into(group, slots, req, d)
+        bucket = group.key if self.cfg.mode == "structural" else ()
+        run = _Running(req=req, decision=d, group_key=group.key, slots=slots,
+                       admitted_t=self._now(), kv_bytes=kv_bytes,
+                       max_new=max_new, out=[first], bucket=bucket)
+        self._running[req.rid] = run
+        # the prefill already produced token #1
+        if run.max_new <= len(run.out):
+            self._complete(run)
+        return "admitted"
+
+    def _sticky_decision(self, b: int, total: int,
+                         eff: float) -> Optional[Decision]:
+        """Bucket affinity for structural mode: joining an already-compiled
+        bucket whose keep-mask still fits the remaining budget batches with
+        the requests resident there and skips both the Q-rollout and a fresh
+        compile. Without this, the drifting pool level mints a new bucket
+        per admission and structural serving degenerates into per-request
+        executables (the exact failure one-shot serving has)."""
+        if self.cfg.mode != "structural" or self.cfg.admission != "strict":
+            return None
+        best = None
+        for group in self._groups.values():
+            if group.mask is None or len(group.free_slots()) < b:
+                continue
+            peak = self.mm.peak_bytes(group.mask, b, total)
+            if peak > eff:
+                continue
+            if not self.pool.can_alloc(
+                    self.mm.state_bytes(group.mask, b, total)):
+                continue
+            # prefer the bucket keeping the most blocks (least over-pruned)
+            kept = int(group.mask.sum())
+            if best is None or kept > best[0]:
+                best = (kept, group, peak)
+        if best is None:
+            return None
+        _, group, peak = best
+        return Decision(mask=group.mask.copy(), steps=0, peak_bytes=peak,
+                        fits=True, latency_s=0.0, cached=True)
+
+    # ------------------------------------------------------------ executors
+    def _group_for(self, mask: np.ndarray) -> _Group:
+        if self.cfg.mode == "masked":
+            key = "masked"
+            if key not in self._groups:
+                self._groups[key] = _Group(
+                    key, self.params, None, self.mcfg, self.cfg.max_active,
+                    self.cfg.max_len, self.cfg.kv_dtype, gated=True)
+            return self._groups[key]
+        key = masks_lib.bucket_key(self.mcfg, mask)
+        if key not in self._groups:
+            small, layout = masks_lib.compact_params(self.params, self.mcfg,
+                                                     mask)
+            self._groups[key] = _Group(
+                key, small, layout, self.mcfg, self.cfg.max_active,
+                self.cfg.max_len, self.cfg.kv_dtype, gated=False,
+                mask=np.array(mask, copy=True))
+        return self._groups[key]
+
+    def _prefill_fn(self, group: _Group, b: int, S: int):
+        key = (group.key, b, S)
+        if key not in self._prefill_fns:
+            cfg, max_len = self.mcfg, self.cfg.max_len
+            kv_dtype, layout = self.cfg.kv_dtype, group.layout
+            if group.gated:
+                @jax.jit
+                def fn(p, tokens, gm, gf):
+                    return decoder.prefill(p, cfg, tokens, max_len,
+                                           gates={"mixer": gm, "ffn": gf},
+                                           kv_dtype=kv_dtype)
+            else:
+                @jax.jit
+                def fn(p, tokens):
+                    return decoder.prefill(p, cfg, tokens, max_len,
+                                           layout=layout, kv_dtype=kv_dtype)
+            self._prefill_fns[key] = fn
+            self._compiles += 1
+        return self._prefill_fns[key]
+
+    def _prefill_into(self, group: _Group, slots: List[int],
+                      req: EngineRequest, d: Decision) -> np.ndarray:
+        """Prefill the request and seat it; returns token #1 per row [b]."""
+        b, S = req.prompt.shape
+        tokens = jnp.asarray(req.prompt, jnp.int32)
+        fn = self._prefill_fn(group, b, S)
+        if group.gated:
+            g = masks_lib.mask_to_gates(d.mask)
+            logits, cache = fn(self.params, tokens, g["mixer"], g["ffn"])
+        else:
+            logits, cache = fn(group.params, tokens)
+        cache.pop("pos")
+        group.place(req.rid, slots, cache, d.mask if group.gated else None, S)
+        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        group.set_tokens(slots, first)
+        return first
+
+    # --------------------------------------------------------------- decode
+    def _decode_all(self) -> None:
+        stepped = False
+        for group in self._groups.values():
+            if not group.occupied():
+                continue
+            nxt, compiled = group.decode_once()
+            stepped = True
+            if compiled:
+                self._compiles += 1
+            for run in list(self._running.values()):
+                if run.group_key != group.key:
+                    continue
+                if len(run.out) >= run.max_new:
+                    continue
+                run.out.append(nxt[np.asarray(run.slots)])
+        if stepped:
+            self._decode_iters += 1
+        for run in list(self._running.values()):
+            if len(run.out) >= run.max_new:
+                self._complete(run)
+
+    def _complete(self, run: _Running) -> None:
+        group = self._groups[run.group_key]
+        group.evict(run.slots)
+        self.pool.free(run.req.rid)
+        now = self._now()
+        d = run.decision
+        self._results.append(RequestResult(
+            rid=run.req.rid, status="done",
+            tokens=np.stack(run.out, axis=1),       # [b, generated]
+            mask=d.mask, bucket=run.bucket,
+            arrival_t=run.req.arrival_t, admitted_t=run.admitted_t,
+            finished_t=now, queue_delay_s=run.admitted_t - run.req.arrival_t,
+            decide_s=d.latency_s, fits=d.fits, cached_decision=d.cached,
+            peak_bytes=d.peak_bytes, kv_bytes=run.kv_bytes))
+        del self._running[run.req.rid]
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        return {
+            "groups": len(self._groups),
+            "structural_buckets": sum(1 for k in self._groups
+                                      if k != "masked"),
+            "prefill_executables": len(self._prefill_fns),
+            "masked_prefill_executables": sum(
+                1 for k in self._prefill_fns if k[0] == "masked"),
+            "compile_events": self._compiles,
+        }

@@ -1,0 +1,153 @@
+"""Pooled KV-cache allocator — the shared-budget half of continuous batching.
+
+One-shot serving (``RAPServer``) charges each request against its *own*
+instantaneous budget, so "runtime memory variation" is simulated. The engine
+instead draws every request's dynamic state (KV cache / recurrent state /
+conv buffers — the Eq. (3)–(4) ``state_bytes`` term) from ONE device pool:
+
+  * the pool owns ``capacity_bytes`` split into fixed-size pages
+    (vLLM-block style); an allocation takes ``ceil(bytes / page)`` pages
+    from the free list and returns them on completion;
+  * admission control asks ``can_alloc`` BEFORE the controller's keep-mask
+    is executed, so requests queue instead of OOM-ing when the pool is hot;
+  * a :class:`repro.core.memory.PoolAccounting` ledger tracks reserved
+    (page-rounded) vs in-use (exact analytical) bytes, giving the
+    fragmentation/occupancy stats the scheduler and benchmarks report.
+
+The pool is an *accounting* allocator: JAX owns the physical buffers (the
+engine's slot-batched caches), the pool decides who may occupy them. That
+split keeps the allocator backend-agnostic — the same admission logic will
+gate real paged attention once per-page gather lands (ROADMAP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.memory import MemoryModel, PoolAccounting, PoolExhausted
+
+__all__ = ["KVPool", "PageAllocation", "PoolExhausted", "default_page_bytes"]
+
+
+def default_page_bytes(mm: MemoryModel, tokens_per_page: int = 16,
+                       batch: int = 1) -> int:
+    """Page size holding ``tokens_per_page`` tokens of dense per-token state
+    (all layers kept). Models with only fixed-size state (pure SSM/RNN) have
+    no per-token term; fall back to the fixed footprint so one page holds one
+    request's recurrent state."""
+    full = [True] * (2 * mm.n_layers)
+    per_tok = mm.state_bytes(full, batch, 1) - mm.state_bytes(full, batch, 0)
+    if per_tok <= 0:
+        per_tok = max(mm.state_bytes(full, batch, 0), 1.0)
+        return int(per_tok)
+    return max(int(per_tok * tokens_per_page), 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageAllocation:
+    rid: str
+    pages: tuple            # page ids granted (stable until freed)
+    requested_bytes: float  # exact analytical state bytes
+    page_bytes: int
+
+    @property
+    def reserved_bytes(self) -> float:
+        return float(len(self.pages) * self.page_bytes)
+
+
+class KVPool:
+    """Slot/page-based KV-cache pool over a global byte budget."""
+
+    def __init__(self, capacity_bytes: float, *, page_bytes: int,
+                 mm: Optional[MemoryModel] = None):
+        if page_bytes <= 0:
+            raise ValueError("page_bytes must be positive")
+        self.page_bytes = int(page_bytes)
+        self.n_pages = max(int(capacity_bytes // self.page_bytes), 0)
+        self.mm = mm
+        # capacity is page-quantized: a partial tail page is unusable
+        self.acct = PoolAccounting(
+            capacity_bytes=float(self.n_pages * self.page_bytes))
+        self._free: List[int] = list(range(self.n_pages))
+        self._live: Dict[str, PageAllocation] = {}
+        self._next_overflow_page = self.n_pages  # ids for overcommitted pages
+
+    # ------------------------------------------------------------- queries
+    def pages_needed(self, nbytes: float) -> int:
+        nbytes = max(float(nbytes), 0.0)
+        return max(int(-(-nbytes // self.page_bytes)), 1)  # ceil, min 1 page
+
+    def can_alloc(self, nbytes: float) -> bool:
+        return self.pages_needed(nbytes) <= len(self._free)
+
+    def fits_capacity(self, nbytes: float) -> bool:
+        """Could this request EVER fit (empty pool)?"""
+        return self.pages_needed(nbytes) <= self.n_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def bytes_in_use(self) -> float:
+        return self.acct.in_use_bytes
+
+    @property
+    def bytes_reserved(self) -> float:
+        return self.acct.reserved_bytes
+
+    @property
+    def available_bytes(self) -> float:
+        return float(len(self._free) * self.page_bytes)
+
+    # ----------------------------------------------------------- lifecycle
+    def alloc(self, rid: str, nbytes: float, *,
+              allow_overcommit: bool = False) -> PageAllocation:
+        if rid in self._live:
+            raise ValueError(f"request {rid!r} already holds an allocation")
+        need = self.pages_needed(nbytes)
+        if need > len(self._free) and not allow_overcommit:
+            raise PoolExhausted(
+                f"request {rid!r} needs {need} pages "
+                f"({nbytes:.0f}B), {len(self._free)} free "
+                f"of {self.n_pages} total")
+        pages = [self._free.pop() for _ in range(min(need, len(self._free)))]
+        while len(pages) < need:  # overcommit: synthesize pages past capacity
+            pages.append(self._next_overflow_page)
+            self._next_overflow_page += 1
+        alloc = PageAllocation(rid=rid, pages=tuple(pages),
+                               requested_bytes=float(max(nbytes, 0.0)),
+                               page_bytes=self.page_bytes)
+        self.acct.reserve(alloc.reserved_bytes, alloc.requested_bytes,
+                          allow_overcommit=allow_overcommit)
+        self._live[rid] = alloc
+        return alloc
+
+    def free(self, rid: str) -> float:
+        """Release a request's pages; returns the reserved bytes returned."""
+        alloc = self._live.pop(rid)
+        for p in alloc.pages:
+            if p < self.n_pages:         # overflow pages evaporate
+                self._free.append(p)
+        self.acct.release(alloc.reserved_bytes, alloc.requested_bytes)
+        return alloc.reserved_bytes
+
+    def live_requests(self) -> List[str]:
+        return list(self._live)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        return {
+            "capacity_bytes": self.acct.capacity_bytes,
+            "page_bytes": float(self.page_bytes),
+            "n_pages": float(self.n_pages),
+            "free_pages": float(len(self._free)),
+            "live_requests": float(len(self._live)),
+            "reserved_bytes": self.acct.reserved_bytes,
+            "in_use_bytes": self.acct.in_use_bytes,
+            "peak_reserved_bytes": self.acct.peak_reserved_bytes,
+            "peak_in_use_bytes": self.acct.peak_in_use_bytes,
+            "occupancy": self.acct.occupancy(),
+            "fragmentation": self.acct.fragmentation(),
+            "overcommit_events": float(self.acct.overcommit_events),
+        }

@@ -1,4 +1,4 @@
-"""RAP serving runtime — paper Algorithm 3 embedded in a batched server.
+"""RAP one-shot serving — compatibility wrapper over the batching engine.
 
 Per request the flow is the paper's online loop:
   ① observe (batch, seq_len, available-memory budget)
@@ -16,20 +16,31 @@ XLA adaptation of "execute pruned" (see DESIGN.md §2) — two modes:
     (prefill, decode) executables are cached per *bucket* (the retained
     layout signature). Uniform architectures collapse many masks into one
     bucket, so compiles amortize exactly like vLLM's shape buckets.
+
+Since the continuous-batching refactor (DESIGN.md §3) this class is a thin
+shim: each ``serve()`` call runs a single-request trace through
+:class:`repro.runtime.engine.RAPEngine` in ``force``-admission mode, which
+reproduces the historical contract exactly — one decision per request
+against a private instantaneous budget, executed regardless of fit (the
+engine records the overcommit instead of queueing). New code should talk to
+the engine directly and share one pool across requests.
+
+Known shim tradeoff: the engine sizes slot caches by one monotonically
+growing ``max_len`` (growth drops compiled groups), whereas the legacy
+server kept one right-sized executable per prompt shape. Serving a long
+prompt therefore recompiles and makes subsequent short serves pay the long
+cache length until the server is rebuilt — acceptable for the
+compatibility path; throughput-sensitive callers use the engine.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import masks as masks_lib
 from repro.core.controller import RAPController
-from repro.models import decoder
+from repro.runtime.engine import EngineConfig, EngineRequest, RAPEngine
 
 
 @dataclasses.dataclass
@@ -57,89 +68,29 @@ class RAPServer:
         self.mode = mode
         self.max_new = max_new_tokens
         self.kv_dtype = kv_dtype
-        self._bucket_cache: Dict[Tuple, Dict[str, Any]] = {}
-        self._masked_exec: Dict[Tuple[int, int], Dict[str, Any]] = {}
-
-    # ------------------------------------------------------------ executors
-    def _structural_entry(self, mask: np.ndarray, prompt_shape):
-        key = (masks_lib.bucket_key(self.cfg, mask), prompt_shape)
-        new = key not in self._bucket_cache
-        if new:
-            small, layout = masks_lib.compact_params(self.params, self.cfg,
-                                                     mask)
-            max_len = prompt_shape[1] + self.max_new
-            cfg = self.cfg
-
-            @jax.jit
-            def prefill(p, tokens):
-                return decoder.prefill(p, cfg, tokens, max_len,
-                                       layout=layout, kv_dtype=self.kv_dtype)
-
-            @jax.jit
-            def decode(p, cache, tok):
-                return decoder.decode_step(p, cfg, cache, tok, layout=layout)
-
-            self._bucket_cache[key] = {
-                "params": small, "prefill": prefill, "decode": decode,
-            }
-        return key, self._bucket_cache[key], new
-
-    def _masked_entry(self, prompt_shape):
-        key = prompt_shape
-        new = key not in self._masked_exec
-        if new:
-            cfg = self.cfg
-            max_len = prompt_shape[1] + self.max_new
-
-            @jax.jit
-            def prefill(p, tokens, gates):
-                return decoder.prefill(p, cfg, tokens, max_len, gates=gates,
-                                       kv_dtype=self.kv_dtype)
-
-            @jax.jit
-            def decode(p, cache, tok, gates):
-                return decoder.decode_step(p, cfg, cache, tok, gates=gates)
-
-            self._masked_exec[key] = {"prefill": prefill, "decode": decode}
-        return key, self._masked_exec[key], new
+        self._engine = RAPEngine(model, params, controller, EngineConfig(
+            mode=mode, max_new_tokens=max_new_tokens, max_active=1,
+            max_len=max_new_tokens + 1, kv_dtype=kv_dtype,
+            admission="force"))
+        self._serial = 0
 
     # --------------------------------------------------------------- serve
     def serve(self, prompt_tokens: np.ndarray, budget_bytes: float,
               *, greedy: bool = True) -> ServeResult:
         B, S = prompt_tokens.shape
-        total_len = S + self.max_new
-        d = self.controller.decide(B, total_len, budget_bytes)
-        tokens = jnp.asarray(prompt_tokens, jnp.int32)
-
-        t0 = time.perf_counter()
-        if self.mode == "structural":
-            key, entry, new = self._structural_entry(d.mask, (B, S))
-            params = entry["params"]
-            logits, cache = entry["prefill"](params, tokens)
-            step_args = ()
-        else:
-            key, entry, new = self._masked_entry((B, S))
-            params = self.params
-            gates = masks_lib.mask_to_gates(d.mask)
-            logits, cache = entry["prefill"](params, tokens, gates)
-            step_args = (gates,)
-
-        out = []
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-        for _ in range(self.max_new - 1):
-            lg, cache = entry["decode"](params, cache, tok, *step_args)
-            tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            out.append(tok)
-        gen = np.concatenate([np.asarray(t) for t in out], axis=1)
-        infer_s = time.perf_counter() - t0
-
+        self._engine.ensure_capacity(B, S + self.max_new)
+        self._serial += 1
+        req = EngineRequest(rid=f"serve-{self._serial}",
+                            prompt=np.asarray(prompt_tokens, np.int32))
+        report = self._engine.run([req], budget_bytes=budget_bytes)
+        r = report.result(req.rid)
         return ServeResult(
-            tokens=gen, mask=d.mask, peak_bytes=d.peak_bytes,
-            budget_bytes=budget_bytes, fits=d.fits, decide_s=d.latency_s,
-            infer_s=infer_s, bucket=key if self.mode == "structural" else (),
-            compiled_new=new)
+            tokens=r.tokens, mask=r.mask, peak_bytes=r.peak_bytes,
+            budget_bytes=budget_bytes, fits=r.fits, decide_s=r.decide_s,
+            infer_s=max(report.wall_s - r.decide_s, 0.0),
+            bucket=r.bucket, compiled_new=report.compile_events > 0)
 
     def stats(self) -> Dict[str, int]:
-        return {"structural_buckets": len(self._bucket_cache),
-                "masked_executables": len(self._masked_exec)}
+        st = self._engine.stats()
+        return {"structural_buckets": st["structural_buckets"],
+                "masked_executables": st["masked_prefill_executables"]}

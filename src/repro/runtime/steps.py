@@ -77,7 +77,7 @@ def make_compressed_train_step(model, opt_cfg: adamw.AdamWConfig, mesh, *,
 
     (params, opt_state, residuals, batch) → (params', opt', residuals', m).
     """
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

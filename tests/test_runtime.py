@@ -154,7 +154,7 @@ def test_server_bucket_cache_reuse(tiny_model):
 def test_int8_error_feedback_allreduce():
     """Inside shard_map on a 1-device mesh: quantized mean ≈ true mean and
     the residual carries the quantization error."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import make_host_mesh
 

@@ -97,7 +97,7 @@ def test_microbatched_train_step_matches_full():
     assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
-                                   np.asarray(b, np.float32), atol=2e-5)
+                                   np.asarray(b, np.float32), atol=5e-4)
 
 
 def test_roofline_model_flops():
