@@ -5,16 +5,19 @@ Replays the SAME ≥16-request Poisson arrival trace two ways per mode
 
   * **engine** — continuous batching through ``RAPEngine``: one shared
     KV pool (admission-controlled), slot-batched decode over all running
-    requests;
+    requests, under the chosen pruning policy and scheduler;
   * **serial** — the historical one-shot path: ``RAPServer.serve()`` per
     request, each against its own instantaneous budget.
 
 Reports aggregate tokens/sec, mean queue delay, budget-fit rate, and the
-pool's reserved/in-use peaks. The pool-never-exceeds-budget invariant is
-asserted in ``tests/test_engine.py``; this script is the measurement rig.
+pool's reserved/in-use peaks, and writes a machine-readable
+``experiments/bench/BENCH_engine.json`` (schema below) so the perf
+trajectory is tracked across PRs. The pool-never-exceeds-budget invariant
+is asserted in ``tests/test_engine.py``; this script is the measurement
+rig.
 
   PYTHONPATH=src python benchmarks/bench_engine_throughput.py \
-      --requests 16 --rate 50 --max-new 8
+      --requests 16 --rate 50 --max-new 8 --policy rl --scheduler fifo
 """
 from __future__ import annotations
 
@@ -42,10 +45,15 @@ def main():
                     help="pool sized for this many concurrent dense requests")
     ap.add_argument("--modes", nargs="+",
                     default=["masked", "structural"])
+    ap.add_argument("--policy", default="rl",
+                    help="pruning policy (rl or any registered baseline)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "sjf", "priority"))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the compile warm-up replay (reports cold "
                          "numbers dominated by XLA compile latency)")
+    ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args()
 
     import jax
@@ -54,6 +62,7 @@ def main():
     from repro.configs import get_smoke_config
     from repro.core import dqn, masks, memory
     from repro.core.controller import RAPController
+    from repro.core.policy import make_policy
     from repro.core.workload import PoissonConfig, poisson_requests
     from repro.data import SyntheticCorpus
     from repro.models import registry
@@ -67,9 +76,14 @@ def main():
     calib = {k: jax.numpy.asarray(v)
              for k, v in corpus.batch(2, 64, split="calib").items()}
     mm = memory.build_memory_model(cfg)
-    qp = dqn.init_qnet(jax.random.key(args.seed), 2 * cfg.n_layers + 4,
-                       2 * cfg.n_layers + 1, 32)
-    controller = RAPController(model, params, calib, mm, qp)
+    if args.policy == "rl":
+        qp = dqn.init_qnet(jax.random.key(args.seed), 2 * cfg.n_layers + 4,
+                           2 * cfg.n_layers + 1, 32)
+        controller = RAPController(model, params, calib, mm, qp)
+        policy = make_policy("rl", controller=controller)
+    else:
+        policy = make_policy(args.policy, model=model, params=params,
+                             calib=calib, mm=mm, seed=args.seed)
 
     # prompt lengths round to 16 — serving engines bucket shapes so compiles
     # amortize; finer granularity just measures XLA compile latency
@@ -87,14 +101,16 @@ def main():
     print(f"[bench] {len(trace)} requests, prompt lens "
           f"{min(r.seq_len for r in trace)}–{max(r.seq_len for r in trace)}, "
           f"budget {budget / 1e6:.2f} MB "
-          f"(pool ≈ {args.pool_requests:.1f} dense requests)")
+          f"(pool ≈ {args.pool_requests:.1f} dense requests), "
+          f"policy={policy.name} scheduler={args.scheduler}")
 
     rows = []
     for mode in args.modes:
         # ---- continuous batching
-        engine = RAPEngine(model, params, controller, EngineConfig(
+        engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=args.max_new, max_active=args.slots,
-            max_len=max_total, budget_bytes=budget))
+            max_len=max_total, budget_bytes=budget),
+            scheduler=args.scheduler)
         reqs = [EngineRequest(rid=f"q{i}", prompt=np.asarray(p, np.int32),
                               arrival_t=trace[i].t)
                 for i, p in enumerate(prompts)]
@@ -108,7 +124,7 @@ def main():
                 <= rep.pool["capacity_bytes"] + 1e-6)
 
         # ---- serial one-shot replay of the same trace
-        server = RAPServer(model, params, controller, mode=mode,
+        server = RAPServer(model, params, policy, mode=mode,
                            max_new_tokens=args.max_new)
 
         def serial_replay():
@@ -153,15 +169,34 @@ def main():
         if speedup <= 1.0:
             print(f"[bench] WARNING: engine did not beat serial in {mode}")
 
-    os.makedirs("experiments/bench", exist_ok=True)
-    out = "experiments/bench/engine_throughput.json"
-    with open(out, "w") as f:
+    os.makedirs(args.out, exist_ok=True)
+    # per-PR perf trajectory: one machine-readable document with the run
+    # configuration, so cross-PR comparisons know what was measured
+    doc = {
+        "schema": 1,
+        "bench": "engine_throughput",
+        "config": {
+            "arch": args.arch, "layers": args.layers,
+            "requests": args.requests, "rate": args.rate,
+            "max_new": args.max_new, "slots": args.slots,
+            "pool_requests": args.pool_requests, "policy": policy.name,
+            "scheduler": args.scheduler, "seed": args.seed,
+            "warmup": not args.no_warmup,
+        },
+        "rows": rows,
+    }
+    bench_out = os.path.join(args.out, "BENCH_engine.json")
+    with open(bench_out, "w") as f:
+        json.dump(doc, f, indent=1)
+    # rows-only file kept for pre-split consumers of the old layout
+    legacy_out = os.path.join(args.out, "engine_throughput.json")
+    with open(legacy_out, "w") as f:
         json.dump(rows, f, indent=1)
     hdr = list(rows[0])
     print(",".join(hdr))
     for r in rows:
         print(",".join(str(r[h]) for h in hdr))
-    print(f"[bench] wrote {out}")
+    print(f"[bench] wrote {bench_out}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import numpy as np
 from repro.configs.llama2_7b import RAP_SUBJECT
 from repro.core import dqn, env as env_lib, memory
 from repro.core.controller import RAPController
+from repro.core.policy import RLPolicy
 from repro.data import SyntheticCorpus, batch_iterator
 from repro.models import registry
 from repro.optim import adamw
@@ -43,7 +44,8 @@ def main():
     print("training the RAP controller (10 episodes)...")
     tr = dqn.train(lambda: e, episodes=10, request_sampler=sampler)
     ctl = RAPController(model, params, calib, mm, tr.q_params, chunk=16)
-    server = RAPServer(model, params, ctl, mode="structural",
+    policy = RLPolicy(ctl)
+    server = RAPServer(model, params, policy, mode="structural",
                        max_new_tokens=8)
 
     # memory pressure trace: healthy → interference spike → recovery
@@ -65,7 +67,7 @@ def main():
 
     # ---- phase 2: the same contention made REAL — a burst of concurrent
     # requests competing for one shared KV pool through the engine
-    # (DESIGN.md §3). Admission control queues what the pool cannot hold;
+    # (DESIGN.md §4). Admission control queues what the pool cannot hold;
     # the controller prunes deeper as the pool fills.
     from repro.core import masks
     from repro.runtime import EngineConfig, EngineRequest, RAPEngine
@@ -74,7 +76,7 @@ def main():
     max_total = 256 + 8
     pool_budget = (mm.param_bytes(full)
                    + 2.0 * mm.state_bytes(full, 1, max_total))
-    engine = RAPEngine(model, params, ctl, EngineConfig(
+    engine = RAPEngine(model, params, policy, EngineConfig(
         mode="structural", max_new_tokens=8, max_active=4,
         max_len=max_total, budget_bytes=pool_budget))
     burst = [EngineRequest(rid=f"burst{i}",

@@ -7,7 +7,7 @@ budget* (params + KV cache for the request shape) is met, then measure
 perplexity / task accuracy. ``SliceGPT`` is width-slicing rather than
 block-dropping, so it returns modified (params, cfg) instead of a mask.
 
-Fidelity notes (recorded per DESIGN.md §7):
+Fidelity notes (recorded per DESIGN.md §8):
  * ShortGPT  — Block-Influence score = 1 − cos(h_in, h_out) per *layer*;
    lowest-influence layers removed first.            [Men et al. 2024]
  * MHA-Drop  — same cosine criterion per *attention block* only.
@@ -109,8 +109,8 @@ def taylor_saliency(model, params, batch) -> np.ndarray:
 
 
 # ----------------------------------------------------- mask-based baselines
-def _prune_by_order(order, mm: MemoryModel, bs, sql, budget,
-                    allowed: Optional[np.ndarray] = None) -> np.ndarray:
+def prune_by_order(order, mm: MemoryModel, bs, sql, budget,
+                   allowed: Optional[np.ndarray] = None) -> np.ndarray:
     """Remove blocks in ``order`` (most-redundant first) until budget fits."""
     L = mm.n_layers
     mask = masks_lib.full_mask(L)
@@ -123,54 +123,87 @@ def _prune_by_order(order, mm: MemoryModel, bs, sql, budget,
     return mask
 
 
-def shortgpt_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
-    """Layer-level: removes (mixer, ffn) pairs by combined cosine influence."""
+_prune_by_order = prune_by_order   # historical (pre-policy-API) name
+
+
+# Each baseline factors into a *removal order* (scored once per model —
+# the expensive probe) and the shared budget-fitting loop above. The order
+# functions are what ``repro.core.policy`` wraps into PruningPolicy
+# implementations; the ``*_mask`` forms keep the one-call offline protocol.
+def shortgpt_order(model, params, batch, mm) -> list:
+    """Layer-level removal order: (mixer, ffn) pairs by combined cosine
+    influence, most-redundant layer first."""
     mix_s, ffn_s = block_cosines(model, params, batch)
     L = mm.n_layers
     layer_score = np.where(np.isfinite(mix_s), mix_s, 0) + \
         np.where(np.isfinite(ffn_s), ffn_s, 0)
-    order_layers = np.argsort(layer_score)
     order = []
-    for i in order_layers:       # drop the whole layer (both blocks)
+    for i in np.argsort(layer_score):    # drop the whole layer (both blocks)
         order += [int(i), int(L + i)]
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return order
+
+
+def mha_drop_order(model, params, batch, mm) -> list:
+    mix_s, _ = block_cosines(model, params, batch)
+    return [int(i) for i in np.argsort(mix_s) if np.isfinite(mix_s[i])]
+
+
+def ffn_skip_order(model, params, batch, mm) -> list:
+    _, ffn_s = block_cosines(model, params, batch)
+    L = mm.n_layers
+    return [int(L + i) for i in np.argsort(ffn_s) if np.isfinite(ffn_s[i])]
+
+
+def random_drop_order(model, mm, seed=0) -> list:
+    rng = np.random.default_rng(seed)
+    layout = decoder.default_layout(model.cfg)
+    present = np.array([s.mixer is not None for s in layout]
+                       + [s.ffn is not None for s in layout])
+    return [int(i) for i in rng.permutation(np.nonzero(present)[0])]
+
+
+def oneshot_ppl_order(model, params, batch, chunk: int = 8) -> list:
+    """RAP^-GSI: dense-model one-shot Δppl scores, no re-evaluation."""
+    scores = gsi_lib.oneshot_rank(model, params, batch, chunk=chunk)
+    return [int(i) for i in np.argsort(scores) if np.isfinite(scores[i])]
+
+
+def llmpruner_order(model, params, batch, mm) -> list:
+    sal = taylor_saliency(model, params, batch)
+    return [int(i) for i in np.argsort(sal) if np.isfinite(sal[i])]
+
+
+def shortgpt_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
+    """Layer-level: removes (mixer, ffn) pairs by combined cosine influence."""
+    return prune_by_order(shortgpt_order(model, params, batch, mm),
+                          mm, bs, sql, budget)
 
 
 def mha_drop_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
-    mix_s, _ = block_cosines(model, params, batch)
-    order = [int(i) for i in np.argsort(mix_s) if np.isfinite(mix_s[i])]
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return prune_by_order(mha_drop_order(model, params, batch, mm),
+                          mm, bs, sql, budget)
 
 
 def ffn_skip_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
-    _, ffn_s = block_cosines(model, params, batch)
-    L = mm.n_layers
-    order = [int(L + i) for i in np.argsort(ffn_s) if np.isfinite(ffn_s[i])]
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return prune_by_order(ffn_skip_order(model, params, batch, mm),
+                          mm, bs, sql, budget)
 
 
 def random_drop_mask(model, mm, bs, sql, budget, seed=0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    layout = decoder.default_layout(model.cfg)
-    L = mm.n_layers
-    present = np.array([s.mixer is not None for s in layout]
-                       + [s.ffn is not None for s in layout])
-    order = rng.permutation(np.nonzero(present)[0]).tolist()
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return prune_by_order(random_drop_order(model, mm, seed=seed),
+                          mm, bs, sql, budget)
 
 
 def oneshot_ppl_mask(model, params, batch, mm, bs, sql, budget,
                      chunk: int = 8) -> np.ndarray:
     """RAP^-GSI: dense-model one-shot Δppl scores, no re-evaluation."""
-    scores = gsi_lib.oneshot_rank(model, params, batch, chunk=chunk)
-    order = [int(i) for i in np.argsort(scores) if np.isfinite(scores[i])]
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return prune_by_order(oneshot_ppl_order(model, params, batch, chunk=chunk),
+                          mm, bs, sql, budget)
 
 
 def llmpruner_mask(model, params, batch, mm, bs, sql, budget) -> np.ndarray:
-    sal = taylor_saliency(model, params, batch)
-    order = [int(i) for i in np.argsort(sal) if np.isfinite(sal[i])]
-    return _prune_by_order(order, mm, bs, sql, budget)
+    return prune_by_order(llmpruner_order(model, params, batch, mm),
+                          mm, bs, sql, budget)
 
 
 # ------------------------------------------------------- SliceGPT stand-in

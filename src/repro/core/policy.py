@@ -1,0 +1,229 @@
+"""Pruning policies — the decision seam of the serving stack.
+
+The engine used to hard-code ``RAPController``; this module makes the
+decision step a protocol so *any* pruning strategy can serve against the
+live shared budget:
+
+    PolicyState (what the engine observes at admission time)
+        │
+        ▼
+    PruningPolicy.observe(state) ──► Decision (block keep-mask + peak)
+        ▲                                  │
+        └── PruningPolicy.feedback(result) ┘  (after the request completes)
+
+Implementations:
+  * :class:`RLPolicy` — the paper's DQN controller (Algorithm 3), wrapping
+    :class:`repro.core.controller.RAPController`;
+  * :class:`StaticOrderPolicy` — every static baseline in
+    ``repro.core.baselines`` (ShortGPT, LLMPruner, MHA-drop, FFN-skip,
+    one-shot PPL, random drop): a fixed removal order is scored ONCE per
+    served model, then each observation greedily removes blocks in that
+    order until the analytical peak fits the instantaneous budget —
+    exactly the paper's §5.1 protocol, but now against the engine's live
+    pool level instead of an offline budget sweep;
+  * :class:`DensePolicy` — never prunes (the no-op lower bound).
+
+Policies register under a name in :data:`POLICIES`; ``make_policy()``
+builds one from the same (model, params, calib, mm) tuple the engine
+already has, so launchers and benchmarks select policies by flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import baselines as baselines_lib
+from repro.core import masks as masks_lib
+from repro.core.controller import Decision, RAPController
+from repro.core.memory import MemoryModel
+
+__all__ = ["Decision", "PolicyState", "PruningPolicy", "RLPolicy",
+           "StaticOrderPolicy", "DensePolicy", "POLICIES",
+           "available_policies", "make_policy", "register_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyState:
+    """The engine's observation at admission time.
+
+    ``budget_bytes`` is the *effective* budget this request must fit —
+    for a pooled engine that is total budget minus bytes reserved by
+    in-flight requests (already quantized by the engine's admission
+    grid); for one-shot serving it is the request's instantaneous budget.
+    The pool context fields let richer policies condition on contention.
+    """
+    batch: int
+    total_len: int                 # prompt + generated tokens
+    budget_bytes: float
+    reserved_bytes: float = 0.0    # pool bytes held by in-flight requests
+    capacity_bytes: float = 0.0    # pool capacity (0 when unpooled)
+    n_running: int = 0
+    now: float = 0.0               # engine virtual-clock timestamp
+
+
+class PruningPolicy:
+    """Protocol: map a :class:`PolicyState` to a keep-mask Decision.
+
+    Subclasses must set ``name`` and ``mm`` (the analytical
+    :class:`~repro.core.memory.MemoryModel` the engine shares for
+    admission accounting) and implement :meth:`observe`. The
+    :meth:`feedback` hook closes the loop after a request finishes —
+    online policies can learn from outcomes; the default is a no-op.
+    """
+
+    name: str = "base"
+    mm: MemoryModel
+
+    def observe(self, state: PolicyState) -> Decision:
+        raise NotImplementedError
+
+    def feedback(self, result) -> None:
+        """Called with the completed request's ``RequestResult``."""
+        return None
+
+
+class RLPolicy(PruningPolicy):
+    """The paper's RL agent: greedy masked-argmax over Q until the peak
+    fits (Algorithm 3), memoized by (bucket, shape) inside the
+    controller."""
+
+    name = "rl"
+
+    def __init__(self, controller: RAPController):
+        self.controller = controller
+        self.mm = controller.mm
+
+    def observe(self, state: PolicyState) -> Decision:
+        return self.controller.decide(state.batch, state.total_len,
+                                      state.budget_bytes)
+
+
+class DensePolicy(PruningPolicy):
+    """Never prunes — the dense upper bound (and worst-case admission)."""
+
+    name = "dense"
+
+    def __init__(self, mm: MemoryModel):
+        self.mm = mm
+
+    def observe(self, state: PolicyState) -> Decision:
+        mask = masks_lib.full_mask(self.mm.n_layers)
+        peak = self.mm.peak_bytes(mask, state.batch, state.total_len)
+        return Decision(mask=mask, steps=0, peak_bytes=peak,
+                        fits=peak <= state.budget_bytes, latency_s=0.0)
+
+
+class StaticOrderPolicy(PruningPolicy):
+    """Prune blocks in a fixed precomputed order until the peak fits.
+
+    The order (the expensive model probe: cosine influence, Taylor
+    saliency, Δppl rank, …) is computed once at construction; each
+    ``observe`` is then a cheap analytical loop, memoized on the same
+    (batch, total, budget/dense-ratio) grid the RL controller uses so
+    steady-state admissions are O(1).
+    """
+
+    def __init__(self, mm: MemoryModel, order, name: str):
+        self.mm = mm
+        self.order = [int(b) for b in order]
+        self.name = name
+        self._memo: Dict[Tuple, Decision] = {}
+
+    def observe(self, state: PolicyState) -> Decision:
+        t0 = time.perf_counter()
+        bs, sql, budget = state.batch, state.total_len, state.budget_bytes
+        key = (int(bs), int(sql),
+               round(budget / max(self.mm.dense_peak(bs, sql), 1.0), 3))
+        if key in self._memo:
+            d = self._memo[key]
+            return dataclasses.replace(
+                d, mask=d.mask.copy(), cached=True,
+                fits=d.peak_bytes <= budget,
+                latency_s=time.perf_counter() - t0)
+        mask = baselines_lib.prune_by_order(self.order, self.mm, bs, sql,
+                                            budget)
+        peak = self.mm.peak_bytes(mask, bs, sql)
+        d = Decision(mask=mask, steps=int(2 * self.mm.n_layers - mask.sum()),
+                     peak_bytes=peak, fits=peak <= budget,
+                     latency_s=time.perf_counter() - t0)
+        self._memo[key] = dataclasses.replace(d, mask=mask.copy())
+        return d
+
+
+# ---------------------------------------------------------------- registry
+PolicyBuilder = Callable[..., PruningPolicy]
+POLICIES: Dict[str, PolicyBuilder] = {}
+
+
+def register_policy(name: str):
+    """Decorator: register a builder under ``name`` for ``make_policy``."""
+    def deco(builder: PolicyBuilder) -> PolicyBuilder:
+        POLICIES[name] = builder
+        return builder
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(POLICIES))
+
+
+def make_policy(name: str, *, model=None, params=None, calib=None,
+                mm: Optional[MemoryModel] = None,
+                controller: Optional[RAPController] = None,
+                seed: int = 0) -> PruningPolicy:
+    """Build a registered policy from the serving context.
+
+    ``rl`` needs a trained ``controller``; the static baselines need
+    (model, params, calib, mm) to score their removal order; ``random``
+    and ``dense`` need only (model,) mm.
+    """
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; available: "
+                       f"{', '.join(available_policies())}")
+    return POLICIES[name](model=model, params=params, calib=calib, mm=mm,
+                          controller=controller, seed=seed)
+
+
+def _require(name, **kwargs):
+    missing = [k for k, v in kwargs.items() if v is None]
+    if missing:
+        raise ValueError(f"policy {name!r} requires {', '.join(missing)}")
+
+
+@register_policy("rl")
+def _build_rl(*, controller=None, **_):
+    _require("rl", controller=controller)
+    return RLPolicy(controller)
+
+
+@register_policy("dense")
+def _build_dense(*, mm=None, **_):
+    _require("dense", mm=mm)
+    return DensePolicy(mm)
+
+
+@register_policy("random")
+def _build_random(*, model=None, mm=None, seed=0, **_):
+    _require("random", model=model, mm=mm)
+    order = baselines_lib.random_drop_order(model, mm, seed=seed)
+    return StaticOrderPolicy(mm, order, "random")
+
+
+def _static_builder(name: str, order_fn):
+    @register_policy(name)
+    def build(*, model=None, params=None, calib=None, mm=None, **_):
+        _require(name, model=model, params=params, calib=calib, mm=mm)
+        return StaticOrderPolicy(mm, order_fn(model, params, calib, mm), name)
+    return build
+
+
+_static_builder("shortgpt", baselines_lib.shortgpt_order)
+_static_builder("mha_drop", baselines_lib.mha_drop_order)
+_static_builder("ffn_skip", baselines_lib.ffn_skip_order)
+_static_builder("llmpruner", baselines_lib.llmpruner_order)
+_static_builder("oneshot",
+                lambda model, params, calib, mm:
+                baselines_lib.oneshot_ppl_order(model, params, calib))

@@ -19,19 +19,13 @@ import json
 def lower_pruned_decode(arch: str, shape_name: str, keep_frac: float,
                         out_dir: str):
     """Lower decode for a layer-bucket pruned variant (keep_frac of layer
-    pairs — the dominant structural-compaction bucket)."""
-    import jax
-    import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
+    pairs — the dominant structural-compaction bucket) through the
+    ``ShardedExecutor``'s mesh-placement path (serving-API split)."""
     from repro.configs import get_config, get_shape
     from repro.launch.dryrun import cell_policy, parse_collectives
     from repro.launch.mesh import make_production_mesh
     from repro.models import registry
-    from repro.parallel import (batch_pspecs, cache_pspecs, param_pspecs,
-                                shardings_for)
-    from repro.parallel import activation as act
-    from repro.runtime import steps as steps_lib
+    from repro.runtime import ShardedExecutor
 
     base = get_config(arch)
     L = max(2, int(round(base.n_layers * keep_frac)))
@@ -41,26 +35,13 @@ def lower_pruned_decode(arch: str, shape_name: str, keep_frac: float,
     mesh = make_production_mesh()
     model = registry.build(cfg)
 
-    with act.use(mesh, shard_seq=policy["shard_seq"], fsdp=policy["fsdp"]):
-        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-        psh = shardings_for(param_pspecs(params_shape, mesh,
-                                         fsdp=policy["fsdp"]), mesh)
-        specs = model.input_specs(shape)
-        bsh = shardings_for(batch_pspecs(specs, mesh), mesh)
-        kv_dtype = jax.numpy.int8 if policy["kv_int8"] else None
-        cache_shape = jax.eval_shape(
-            lambda: model.init_cache(shape.global_batch, shape.seq_len,
-                                     kv_dtype=kv_dtype))
-        csh = shardings_for(cache_pspecs(cache_shape, mesh,
-                                         batch=shape.global_batch,
-                                         shard_seq=policy["shard_seq"]),
-                            mesh)
-        fn = steps_lib.make_decode_step(model)
-        jfn = jax.jit(fn, in_shardings=(psh, csh, bsh["tokens"]),
-                      out_shardings=(None, csh), donate_argnums=(1,))
-        lowered = jfn.lower(params_shape, cache_shape, specs["tokens"])
-    compiled = lowered.compile()
+    executor = ShardedExecutor(model, mesh, fsdp=policy["fsdp"],
+                               shard_seq=policy["shard_seq"],
+                               kv_int8=policy["kv_int8"])
+    compiled = executor.lower_decode(shape).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # pre-0.4.30 jax: one dict/device
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text())
     from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

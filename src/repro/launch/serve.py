@@ -1,16 +1,19 @@
 """Serving launcher: RAP-managed inference over a synthetic workload trace.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
-      --requests 10 --mode structural
+      --requests 10 --mode structural --policy rl --scheduler fifo
 
-Boots the reduced model, trains the RAP controller briefly (or loads
-``--qnet`` from a checkpoint), then serves an Azure-like workload trace of
-(batch, seq_len, memory-budget) requests — the full online loop of paper
-Algorithm 3.
+Boots the reduced model, builds the requested pruning policy — for
+``--policy rl`` that means briefly training the RAP controller (paper
+Algorithm 2); static baselines (shortgpt, llmpruner, random, …) score
+their removal order once and need no RL training — then serves an
+Azure-like workload trace of (batch, seq_len, memory-budget) requests:
+the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §3):
+Two serving paths (DESIGN.md §4):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
-    with admission control; all in-flight requests decode together;
+    with admission control; all in-flight requests decode together under
+    the chosen scheduler (fifo | sjf | priority);
   * ``--serial`` — the historical one-shot ``RAPServer`` replay, each
     request against its own instantaneous budget.
 """
@@ -26,6 +29,11 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--mode", choices=("structural", "masked"),
                     default="structural")
+    ap.add_argument("--policy", default="rl",
+                    help="pruning policy (rl | shortgpt | llmpruner | "
+                         "random | mha_drop | ffn_skip | oneshot | dense)")
+    ap.add_argument("--scheduler", choices=("fifo", "sjf", "priority"),
+                    default="fifo", help="engine admission ordering")
     ap.add_argument("--serial", action="store_true",
                     help="one-shot RAPServer replay instead of the engine")
     ap.add_argument("--episodes", type=int, default=20)
@@ -44,6 +52,7 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.core import dqn, env as env_lib, masks, memory, workload
     from repro.core.controller import RAPController
+    from repro.core.policy import available_policies, make_policy
     from repro.data import SyntheticCorpus
     from repro.models import registry
     from repro.runtime import EngineConfig, EngineRequest, RAPEngine, RAPServer
@@ -61,20 +70,27 @@ def main():
                                  long_frac=0.3)
     sampler = workload.request_sampler(wl, mm)
 
-    print(f"training RAP controller ({args.episodes} episodes)...")
-    e = env_lib.PruneEnv(model, params, calib, mm)
-    tr = dqn.train(lambda: e, episodes=args.episodes,
-                   request_sampler=sampler, seed=args.seed)
-    print(f"  reward: first={tr.episode_rewards[0]:.3f} "
-          f"last={tr.episode_rewards[-1]:.3f} "
-          f"fit-rate={np.mean(tr.episode_fits):.2f}")
+    if args.policy == "rl":
+        print(f"training RAP controller ({args.episodes} episodes)...")
+        e = env_lib.PruneEnv(model, params, calib, mm)
+        tr = dqn.train(lambda: e, episodes=args.episodes,
+                       request_sampler=sampler, seed=args.seed)
+        print(f"  reward: first={tr.episode_rewards[0]:.3f} "
+              f"last={tr.episode_rewards[-1]:.3f} "
+              f"fit-rate={np.mean(tr.episode_fits):.2f}")
+        controller = RAPController(model, params, calib, mm, tr.q_params)
+        policy = make_policy("rl", controller=controller)
+    else:
+        print(f"building static policy {args.policy!r} "
+              f"(available: {', '.join(available_policies())})")
+        policy = make_policy(args.policy, model=model, params=params,
+                             calib=calib, mm=mm, seed=args.seed)
 
-    controller = RAPController(model, params, calib, mm, tr.q_params)
     reqs = workload.generate(wl)[: args.requests]
     rng = np.random.default_rng(args.seed)
 
     if args.serial:
-        server = RAPServer(model, params, controller, mode=args.mode,
+        server = RAPServer(model, params, policy, mode=args.mode,
                            max_new_tokens=args.max_new)
         for i, r in enumerate(reqs):
             sql = min(r.seq_len, 256)
@@ -100,16 +116,19 @@ def main():
     max_b = max(r.batch for r in reqs)
     budget = (mm.param_bytes(full)
               + args.pool_requests * mm.state_bytes(full, max_b, max_total))
-    engine = RAPEngine(model, params, controller, EngineConfig(
+    engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
-        max_len=max_total, budget_bytes=budget))
+        max_len=max_total, budget_bytes=budget), scheduler=args.scheduler)
     ereqs = []
     for i, r in enumerate(reqs):
         sql = min(r.seq_len, 256)
         prompt = corpus.sample_tokens(rng, r.batch, sql)
+        # interactive tier: short conversational turns outrank long-form
+        # documents (only consulted under --scheduler priority)
         ereqs.append(EngineRequest(rid=f"req{i}", prompt=prompt,
-                                   arrival_t=r.t - reqs[0].t))
-    print(f"engine: {len(ereqs)} requests "
+                                   arrival_t=r.t - reqs[0].t,
+                                   priority=0 if sql <= 128 else 1))
+    print(f"engine[{policy.name}/{args.scheduler}]: {len(ereqs)} requests "
           f"(batch {min(r.batch for r in reqs)}–{max(r.batch for r in reqs)}),"
           f" {slots} slots, shared pool {budget/1e6:.1f}MB total budget")
     rep = engine.run(ereqs)

@@ -1,10 +1,19 @@
 from repro.runtime import steps
 from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
                                   RAPEngine, RequestResult)
+from repro.runtime.executor import (LocalExecutor, ModelExecutor,
+                                    ShardedExecutor, SlotGroup)
 from repro.runtime.kv_pool import KVPool, PageAllocation, PoolExhausted
+from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
+                                     PriorityScheduler, Scheduler,
+                                     SchedulerOutput, SJFScheduler,
+                                     make_scheduler)
 from repro.runtime.server import RAPServer, ServeResult
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 __all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer", "ServeResult",
            "RAPEngine", "EngineConfig", "EngineRequest", "EngineReport",
-           "RequestResult", "KVPool", "PageAllocation", "PoolExhausted"]
+           "RequestResult", "KVPool", "PageAllocation", "PoolExhausted",
+           "Scheduler", "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
+           "PriorityScheduler", "SCHEDULERS", "make_scheduler",
+           "ModelExecutor", "LocalExecutor", "ShardedExecutor", "SlotGroup"]

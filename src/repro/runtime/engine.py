@@ -4,51 +4,73 @@ requests (the production form of paper Algorithm 3).
 ``RAPServer`` replays requests one at a time, so each request sees a
 *private* instantaneous budget and "runtime memory variation" is simulated.
 The engine makes the contention real: many in-flight requests compete for
-one device budget, and the controller's keep-mask decision is made against
+one device budget, and the policy's keep-mask decision is made against
 whatever the *pool* has left.
 
-Architecture (one iteration of :meth:`RAPEngine._tick`):
+Since the serving-API split (DESIGN.md §2) the engine is a thin
+orchestration loop over four seams:
+
+  * :class:`~repro.runtime.scheduler.Scheduler` — who is admitted next
+    (FIFO / SJF / priority), emitting explicit ``SchedulerOutput`` plans;
+  * :class:`~repro.core.policy.PruningPolicy` — what shape they run in:
+    ``observe(PolicyState) → Decision`` against the remaining shared
+    budget (the RL controller, any static baseline, or dense);
+  * :class:`~repro.runtime.executor.ModelExecutor` — how the mask
+    executes: slot groups, prefill, fused bucketed decode;
+  * :class:`~repro.runtime.kv_pool.KVPool` — whether the bytes exist:
+    page-granular admission against ``budget − resident params``.
+
+One iteration of :meth:`RAPEngine._tick`:
 
   1. **arrivals** — requests become visible at their trace timestamps
-     (virtual clock; idle gaps are skipped, compute time is real);
-  2. **admission control** — FIFO head-of-line: for the oldest waiting
-     request, ``RAPController.decide()`` runs against the *remaining*
-     shared budget (total budget minus the pool's reserved bytes), then the
-     request's analytical KV/state bytes are allocated from the
-     :class:`~repro.runtime.kv_pool.KVPool`. If pages are short the request
-     waits (strict mode) — admission never lets bytes-in-use exceed the
-     budget. ``force`` mode (the one-shot compatibility path) admits
-     regardless and records the overcommit;
+     (virtual clock; idle gaps are skipped, compute time is real) and
+     enter the scheduler's waiting set;
+  2. **admission** — the scheduler orders candidates; for each, the
+     policy decides a keep-mask against the *remaining* shared budget and
+     the request's analytical KV/state bytes are allocated from the pool.
+     A deferral (no pages / no free slots) ends the admission loop, so
+     the scheduler's ordering is never overtaken within a tick. ``force``
+     mode (the one-shot compatibility path) admits regardless and records
+     the overcommit;
   3. **prefill** — newly admitted requests prefill individually (shapes
-     differ) and their caches are written into free *slots* of the group's
-     shared slot-batched cache;
-  4. **decode** — ALL running requests advance one token in a single fused
-     ``decode_step`` per group: per-slot positions (int32 [B]) and
-     per-slot gates ([L, B]) let one executable serve every resident
-     keep-mask in ``masked`` mode; ``structural`` mode groups requests by
-     bucket (retained-layout signature) with one compacted executable per
-     bucket, vLLM-shape-bucket style.
+     differ) and their caches are written into free *slots* of their
+     group's shared slot-batched cache;
+  4. **decode** — all running requests advance one token per occupied
+     group via the executor's fused ``decode`` (dynamic batch buckets).
 
-Completed requests free their pages and slot, unblocking the queue.
+Completed requests free their pages and slots, unblocking the queue, and
+are reported back to the policy via ``feedback()``.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as masks_lib
-from repro.core.controller import Decision, RAPController
-from repro.models import decoder
+from repro.core.controller import RAPController
+from repro.core.policy import Decision, PolicyState, PruningPolicy
+from repro.runtime.executor import LocalExecutor, ModelExecutor, SlotGroup
 from repro.runtime.kv_pool import KVPool, default_page_bytes
+from repro.runtime.scheduler import Scheduler, make_scheduler
 
 __all__ = ["EngineConfig", "EngineRequest", "RequestResult", "EngineReport",
            "RAPEngine"]
+
+_MIGRATION_HINT = (
+    "RAPEngine's constructor changed with the serving-API split: it now "
+    "takes a PruningPolicy instead of a RAPController. Wrap your "
+    "controller — RAPEngine(model, params, "
+    "repro.core.policy.RLPolicy(controller), cfg) — or build any "
+    "registered policy with repro.core.policy.make_policy(). Schedulers "
+    "and executors are injectable via the scheduler=/executor= kwargs."
+)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 # ------------------------------------------------------------------- config
@@ -64,19 +86,68 @@ class EngineConfig:
     kv_dtype: Any = None
     admission: str = "strict"         # strict (queue) | force (overcommit)
     # Admission quantizes the effective budget DOWN to this fraction of the
-    # request's dense peak before calling decide(). The pool level drifts
+    # request's dense peak before calling the policy. The pool level drifts
     # continuously; without a quantum every admission sees a fresh budget,
-    # the controller emits a fresh mask, and structural mode compiles a
-    # fresh bucket — quantizing collapses steady-state admissions onto a
-    # handful of memoized decisions/buckets. Safety is unaffected: the page
+    # the policy emits a fresh mask, and structural mode compiles a fresh
+    # bucket — quantizing collapses steady-state admissions onto a handful
+    # of memoized decisions/buckets. Safety is unaffected: the page
     # allocator, not the decision, enforces the byte budget.
     budget_quantum_frac: float = 0.05
+    # "pow2": slot caches are minted per power-of-two length bucket (the
+    # group key includes the bucket), so one long prompt mints a long-cache
+    # group instead of invalidating every compiled short one, and short
+    # requests keep decoding against short caches — the RAPServer shim's
+    # setting (sequential serves, heterogeneous lengths). "max" (default):
+    # one max_len-sized cache per group family — requests of every length
+    # share one decode batch, which is what continuous batching is for;
+    # splitting by length would fragment the fused decode step per bucket.
+    len_buckets: str = "max"          # max | pow2
+    # Decode batch buckets: the executor steps occupied slots in the
+    # smallest bucket that holds them instead of always paying
+    # max_active-wide compute. () disables (always full width).
+    decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
 
     def __post_init__(self):
         if self.mode not in ("masked", "structural"):
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.admission not in ("strict", "force"):
             raise ValueError(f"unknown admission {self.admission!r}")
+        if self.len_buckets not in ("pow2", "max"):
+            raise ValueError(f"unknown len_buckets {self.len_buckets!r} "
+                             f"(expected 'pow2' or 'max')")
+        if not (0.0 <= self.budget_quantum_frac <= 1.0):
+            raise ValueError(
+                f"budget_quantum_frac must be in [0, 1], got "
+                f"{self.budget_quantum_frac!r} — it is a fraction of the "
+                f"request's dense peak (0 disables admission quantization)")
+        if self.max_active < 1:
+            raise ValueError(
+                f"max_active must be >= 1, got {self.max_active!r} — the "
+                f"engine needs at least one cache slot to host a request")
+        if self.max_len < 1:
+            raise ValueError(
+                f"max_len must be >= 1, got {self.max_len!r} — slot caches "
+                f"must hold at least one token (prompt + generated)")
+        if self.max_new_tokens < 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 0, got {self.max_new_tokens!r}")
+        if self.tokens_per_page < 1:
+            raise ValueError(
+                f"tokens_per_page must be >= 1, got "
+                f"{self.tokens_per_page!r} — KV pool pages hold at least "
+                f"one token of dense per-token state")
+        if self.budget_bytes < 0:
+            raise ValueError(
+                f"budget_bytes must be >= 0, got {self.budget_bytes!r} "
+                f"(0 means 'pass the budget per run() call')")
+        if self.page_bytes < 0:
+            raise ValueError(
+                f"page_bytes must be >= 0, got {self.page_bytes!r} "
+                f"(0 derives the page size from the memory model)")
+        if any(int(b) < 1 for b in self.decode_buckets):
+            raise ValueError(
+                f"decode_buckets must be positive slot counts, got "
+                f"{self.decode_buckets!r}")
 
 
 @dataclasses.dataclass
@@ -86,6 +157,7 @@ class EngineRequest:
     arrival_t: float = 0.0
     max_new: Optional[int] = None     # generated tokens (≥1: prefill always
                                       # yields one); None → engine default
+    priority: int = 0                 # PriorityScheduler rank (lower=sooner)
 
 
 @dataclasses.dataclass
@@ -128,110 +200,11 @@ class EngineReport:
         raise KeyError(rid)
 
 
-# ------------------------------------------------------------------ groups
-class _Group:
-    """One slot-batched executable family sharing a cache.
-
-    masked mode: a single group over the full params with per-slot gates.
-    structural mode: one group per bucket (compacted params, gates absorbed
-    into structure)."""
-
-    def __init__(self, key, params, layout, cfg_model, n_slots: int,
-                 max_len: int, kv_dtype, gated: bool,
-                 mask: Optional[np.ndarray] = None):
-        self.key = key
-        self.params = params
-        self.layout = layout
-        self.mask = mask              # the keep-mask that minted this bucket
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.gated = gated
-        self.occupants: List[Optional[str]] = [None] * n_slots
-        self.cache = decoder.init_cache(cfg_model, n_slots, max_len,
-                                        layout, kv_dtype)
-        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
-        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
-        if gated:
-            L = cfg_model.n_layers
-            self._gates_np = np.ones((2, L, n_slots), np.float32)
-            self._gates_dev = jnp.asarray(self._gates_np)
-        cfg = cfg_model
-        layout_c = layout
-
-        if gated:
-            @jax.jit
-            def step(p, cache, tok, gm, gf):
-                return decoder.decode_step(p, cfg, cache, tok,
-                                           gates={"mixer": gm, "ffn": gf})
-        else:
-            @jax.jit
-            def step(p, cache, tok):
-                return decoder.decode_step(p, cfg, cache, tok,
-                                           layout=layout_c)
-        self._step = step
-        self.compiled = False        # flips on first decode (trace+compile)
-
-    # ----------------------------------------------------------- occupancy
-    def free_slots(self) -> List[int]:
-        return [i for i, o in enumerate(self.occupants) if o is None]
-
-    def occupied(self) -> bool:
-        return any(o is not None for o in self.occupants)
-
-    def place(self, rid: str, slots: List[int], req_cache: dict,
-              mask: Optional[np.ndarray], prompt_len: int) -> None:
-        """Write a freshly prefilled request cache into ``slots``."""
-        idx = jnp.asarray(slots, jnp.int32)
-        cache = dict(self.cache)
-        for k, v in cache.items():
-            if k == "pos":
-                cache[k] = v.at[idx].set(jnp.asarray(prompt_len, jnp.int32))
-            else:
-                cache[k] = jax.tree.map(
-                    lambda big, small: big.at[:, idx].set(small), v,
-                    req_cache[k])
-        self.cache = cache
-        for s in slots:
-            self.occupants[s] = rid
-        if self.gated and mask is not None:
-            g = masks_lib.mask_to_gates(mask)
-            for s in slots:
-                self._gates_np[0, :, s] = np.asarray(g["mixer"])
-                self._gates_np[1, :, s] = np.asarray(g["ffn"])
-            self._gates_dev = jnp.asarray(self._gates_np)
-
-    def set_tokens(self, slots: List[int], toks: np.ndarray) -> None:
-        idx = jnp.asarray(slots, jnp.int32)
-        self.tokens = self.tokens.at[idx, 0].set(
-            jnp.asarray(toks, jnp.int32))
-
-    def evict(self, slots: List[int]) -> None:
-        for s in slots:
-            self.occupants[s] = None
-
-    # -------------------------------------------------------------- decode
-    def decode_once(self) -> Tuple[np.ndarray, bool]:
-        """Advance every slot one token; returns ([n_slots] next tokens,
-        whether this call compiled a new executable)."""
-        new = not self.compiled
-        self.compiled = True
-        if self.gated:
-            logits, self.cache = self._step(self.params, self.cache,
-                                            self.tokens, self._gates_dev[0],
-                                            self._gates_dev[1])
-        else:
-            logits, self.cache = self._step(self.params, self.cache,
-                                            self.tokens)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        self.tokens = nxt[:, None]
-        return np.asarray(nxt), new
-
-
 @dataclasses.dataclass
 class _Running:
     req: EngineRequest
     decision: Decision
-    group_key: Any
+    group: SlotGroup
     slots: List[int]
     admitted_t: float
     kv_bytes: float
@@ -242,51 +215,82 @@ class _Running:
 
 # ------------------------------------------------------------------- engine
 class RAPEngine:
-    """Continuous-batching serving engine with RAP admission control."""
+    """Thin orchestration loop: Scheduler × PruningPolicy × ModelExecutor
+    × KVPool."""
 
-    def __init__(self, model, params, controller: RAPController,
-                 cfg: EngineConfig):
+    def __init__(self, model, params, policy: PruningPolicy = None,
+                 cfg: EngineConfig = None, *,
+                 scheduler: Optional[Scheduler] = None,
+                 executor: Optional[ModelExecutor] = None, **legacy):
+        if legacy:
+            raise TypeError(
+                f"RAPEngine got unexpected kwargs {sorted(legacy)}. "
+                + _MIGRATION_HINT)
+        if isinstance(policy, RAPController):
+            raise TypeError(
+                "RAPEngine received a RAPController where a PruningPolicy "
+                "is expected. " + _MIGRATION_HINT)
+        if policy is None or not isinstance(policy, PruningPolicy):
+            raise TypeError(
+                f"RAPEngine requires a PruningPolicy, got "
+                f"{type(policy).__name__}. " + _MIGRATION_HINT)
         self.model = model
         self.mcfg = model.cfg
         if getattr(self.mcfg, "is_encoder_decoder", False):
             raise NotImplementedError("engine serves decoder-only models")
         self.params = params
-        self.controller = controller
+        self.policy = policy
         # private copy: ensure_capacity mutates max_len/max_active, and a
         # caller-shared config would desync another engine's shape checks
         # from its actual cache sizes
-        self.cfg = dataclasses.replace(cfg)
-        self.mm = controller.mm
+        self.cfg = dataclasses.replace(cfg if cfg is not None
+                                       else EngineConfig())
+        self.mm = policy.mm
+        self.scheduler = make_scheduler(scheduler)
+        self.executor = executor if executor is not None else LocalExecutor(
+            model, params, mode=self.cfg.mode, max_active=self.cfg.max_active,
+            kv_dtype=self.cfg.kv_dtype,
+            decode_buckets=self.cfg.decode_buckets)
         self._full_mask = masks_lib.full_mask(self.mcfg.n_layers)
         self.resident_param_bytes = self.mm.param_bytes(self._full_mask)
-        self._groups: Dict[Any, _Group] = {}
-        self._prefill_fns: Dict[Tuple, Any] = {}
         self.pool: Optional[KVPool] = None
         # run state
         self._pending: List[EngineRequest] = []
-        self._waiting: Deque[EngineRequest] = collections.deque()
-        self._running: "collections.OrderedDict[str, _Running]" = \
-            collections.OrderedDict()
+        self._running: "Dict[str, _Running]" = {}
         self._results: List[RequestResult] = []
         self._decode_iters = 0
-        self._compiles = 0
+        self._compiles_at_run_start = 0
         self._t0 = 0.0
         self._skew = 0.0
-        self._budget = cfg.budget_bytes
+        self._budget = self.cfg.budget_bytes
 
     # ------------------------------------------------------------ capacity
     def ensure_capacity(self, batch: int, total_len: int) -> None:
-        """Grow slot count / cache length; drops compiled groups on change."""
-        grew = False
+        """Grow slot count / cache-length cap. Slot growth drops compiled
+        groups (the slot axis changes); length growth is quantized to
+        powers of two and — under pow2 length buckets — keeps every
+        existing group valid (they own their own shorter caches)."""
         if total_len > self.cfg.max_len:
-            self.cfg.max_len = int(total_len)
-            grew = True
+            self.cfg.max_len = _next_pow2(total_len)
+            if self.cfg.len_buckets == "max":
+                # legacy single-length groups are sized by cfg.max_len:
+                # growth invalidates them
+                self.executor.drop_groups()
         if batch > self.cfg.max_active:
             self.cfg.max_active = int(batch)
-            grew = True
-        if grew:
-            self._groups.clear()
-            self._prefill_fns.clear()
+            self.executor.set_max_active(self.cfg.max_active)
+
+    def _cache_len(self, total: int) -> int:
+        """Cache length bucket hosting a (prompt+gen)-token request.
+
+        pow2 buckets deliberately ignore cfg.max_len (admission already
+        guaranteed total ≤ max_len): clamping to a non-power-of-two cap
+        would remap the same request shape to a different bucket after
+        capacity growth, re-introducing the recompile the buckets exist
+        to prevent."""
+        if self.cfg.len_buckets == "pow2":
+            return max(_next_pow2(total), 16)
+        return self.cfg.max_len
 
     # ---------------------------------------------------------------- time
     def _now(self) -> float:
@@ -311,16 +315,15 @@ class RAPEngine:
         self.pool = self._make_pool(budget)
         self._budget = budget
         self._pending = sorted(requests, key=lambda r: r.arrival_t)
-        self._waiting.clear()
+        self.scheduler.clear()
         self._running.clear()
         self._results = []
         self._decode_iters = 0
-        self._compiles = 0
+        self._compiles_at_run_start = self.executor.compile_events
         self._skew = 0.0
         self._t0 = time.perf_counter()
-        for g in self._groups.values():       # previous run's occupants
-            g.evict([i for i in range(g.n_slots)])
-        while self._pending or self._waiting or self._running:
+        self.executor.evict_all()             # previous run's occupants
+        while self._pending or len(self.scheduler) or self._running:
             self._tick()
         # makespan is on the VIRTUAL clock (skipped idle gaps included) —
         # the same clock request timestamps live on, so throughput is
@@ -341,28 +344,44 @@ class RAPEngine:
                              if done else 0.0),
             rejected=sum(1 for r in self._results if r.status == "rejected"),
             decode_iters=self._decode_iters,
-            compile_events=self._compiles,
+            compile_events=(self.executor.compile_events
+                            - self._compiles_at_run_start),
             pool=self.pool.stats())
 
     # ------------------------------------------------------------ one tick
     def _tick(self) -> None:
         now = self._now()
         while self._pending and self._pending[0].arrival_t <= now:
-            self._waiting.append(self._pending.pop(0))
-        # FIFO admission with head-of-line blocking (completion order stays
-        # arrival order for equal decode lengths)
-        while self._waiting:
-            verdict = self._try_admit(self._waiting[0])
+            req = self._pending.pop(0)
+            if req.rid in self.scheduler or req.rid in self._running:
+                self._reject(req, f"duplicate request id {req.rid!r} "
+                                  f"(already in flight)")
+                continue
+            max_new = (self.cfg.max_new_tokens if req.max_new is None
+                       else req.max_new)
+            # total token cost: batch rows each hold prompt+decode tokens
+            # (this is what scales the request's KV demand — SJF orders
+            # by it)
+            cost = req.prompt.shape[0] * (req.prompt.shape[1]
+                                          + max(max_new, 1))
+            self.scheduler.add(req, cost=cost)
+        # admission plan: try candidates in the scheduler's order; a
+        # deferral ends the loop so the order is never overtaken in-tick
+        deferred = None
+        for req in self.scheduler.schedule(now).admit:
+            verdict = self._try_admit(req)
             if verdict == "defer":
+                deferred = req
                 break
-            self._waiting.popleft()
+            self.scheduler.remove(req.rid)
         if not self._running:
-            if self._waiting:
-                # deferred head with an idle engine: nothing will ever free
-                # memory — reject instead of spinning (defensive; strict
-                # capacity misfits are rejected in _try_admit already)
-                self._reject(self._waiting.popleft(),
-                             "deferred with idle engine")
+            if deferred is not None:
+                # deferred head with an idle engine: nothing will ever
+                # free memory — reject the scheduler's choice instead of
+                # spinning (defensive; strict capacity misfits are
+                # rejected in _try_admit already)
+                self.scheduler.remove(deferred.rid)
+                self._reject(deferred, "deferred with idle engine")
             elif self._pending:
                 # fast-forward the virtual clock across the idle gap
                 self._skew += self._pending[0].arrival_t - self._now() + 1e-9
@@ -404,16 +423,21 @@ class RAPEngine:
             self.ensure_capacity(b, total)
 
         # keep-mask against the REMAINING shared budget (quantized down so
-        # steady-state admissions hit the controller's memo table)
+        # steady-state admissions hit the policy's memo table)
         eff = self._budget - self.pool.bytes_reserved
         quantum = self.cfg.budget_quantum_frac * self.mm.dense_peak(b, total)
         if quantum > 0 and self.cfg.admission == "strict":
             # (force mode is the one-shot compatibility path: budgets pass
             # through exactly so decisions match the historical contract)
             eff = np.floor(eff / quantum + 1e-9) * quantum
-        d = self._sticky_decision(b, total, eff)
+        cache_len = self._cache_len(total)
+        d = self._sticky_decision(b, total, eff, cache_len)
         if d is None:
-            d = self.controller.decide(b, total, eff)
+            d = self.policy.observe(PolicyState(
+                batch=b, total_len=total, budget_bytes=eff,
+                reserved_bytes=self.pool.bytes_reserved,
+                capacity_bytes=self.pool.acct.capacity_bytes,
+                n_running=len(self._running), now=self._now()))
         kv_bytes = self.mm.state_bytes(d.mask, b, total)
         force = self.cfg.admission == "force"
         if not force:
@@ -425,15 +449,17 @@ class RAPEngine:
             if not self.pool.can_alloc(kv_bytes):
                 return "defer"
 
-        group = self._group_for(d.mask)
+        group = self.executor.group_for(d.mask, cache_len)
         free = group.free_slots()
         if len(free) < b:
             return "defer"
         slots = free[:b]
         self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
-        first = self._prefill_into(group, slots, req, d)
+        first = self.executor.prefill_into(group, slots, req.rid,
+                                           np.asarray(req.prompt, np.int32),
+                                           d.mask)
         bucket = group.key if self.cfg.mode == "structural" else ()
-        run = _Running(req=req, decision=d, group_key=group.key, slots=slots,
+        run = _Running(req=req, decision=d, group=group, slots=slots,
                        admitted_t=self._now(), kv_bytes=kv_bytes,
                        max_new=max_new, out=[first], bucket=bucket)
         self._running[req.rid] = run
@@ -442,19 +468,20 @@ class RAPEngine:
             self._complete(run)
         return "admitted"
 
-    def _sticky_decision(self, b: int, total: int,
-                         eff: float) -> Optional[Decision]:
+    def _sticky_decision(self, b: int, total: int, eff: float,
+                         cache_len: int) -> Optional[Decision]:
         """Bucket affinity for structural mode: joining an already-compiled
         bucket whose keep-mask still fits the remaining budget batches with
-        the requests resident there and skips both the Q-rollout and a fresh
-        compile. Without this, the drifting pool level mints a new bucket
-        per admission and structural serving degenerates into per-request
-        executables (the exact failure one-shot serving has)."""
+        the requests resident there and skips both the policy rollout and a
+        fresh compile. Without this, the drifting pool level mints a new
+        bucket per admission and structural serving degenerates into
+        per-request executables (the exact failure one-shot serving has)."""
         if self.cfg.mode != "structural" or self.cfg.admission != "strict":
             return None
         best = None
-        for group in self._groups.values():
-            if group.mask is None or len(group.free_slots()) < b:
+        for group in self.executor.groups():
+            if (group.mask is None or group.cache_len != cache_len
+                    or len(group.free_slots()) < b):
                 continue
             peak = self.mm.peak_bytes(group.mask, b, total)
             if peak > eff:
@@ -472,74 +499,16 @@ class RAPEngine:
         return Decision(mask=group.mask.copy(), steps=0, peak_bytes=peak,
                         fits=True, latency_s=0.0, cached=True)
 
-    # ------------------------------------------------------------ executors
-    def _group_for(self, mask: np.ndarray) -> _Group:
-        if self.cfg.mode == "masked":
-            key = "masked"
-            if key not in self._groups:
-                self._groups[key] = _Group(
-                    key, self.params, None, self.mcfg, self.cfg.max_active,
-                    self.cfg.max_len, self.cfg.kv_dtype, gated=True)
-            return self._groups[key]
-        key = masks_lib.bucket_key(self.mcfg, mask)
-        if key not in self._groups:
-            small, layout = masks_lib.compact_params(self.params, self.mcfg,
-                                                     mask)
-            self._groups[key] = _Group(
-                key, small, layout, self.mcfg, self.cfg.max_active,
-                self.cfg.max_len, self.cfg.kv_dtype, gated=False,
-                mask=np.array(mask, copy=True))
-        return self._groups[key]
-
-    def _prefill_fn(self, group: _Group, b: int, S: int):
-        key = (group.key, b, S)
-        if key not in self._prefill_fns:
-            cfg, max_len = self.mcfg, self.cfg.max_len
-            kv_dtype, layout = self.cfg.kv_dtype, group.layout
-            if group.gated:
-                @jax.jit
-                def fn(p, tokens, gm, gf):
-                    return decoder.prefill(p, cfg, tokens, max_len,
-                                           gates={"mixer": gm, "ffn": gf},
-                                           kv_dtype=kv_dtype)
-            else:
-                @jax.jit
-                def fn(p, tokens):
-                    return decoder.prefill(p, cfg, tokens, max_len,
-                                           layout=layout, kv_dtype=kv_dtype)
-            self._prefill_fns[key] = fn
-            self._compiles += 1
-        return self._prefill_fns[key]
-
-    def _prefill_into(self, group: _Group, slots: List[int],
-                      req: EngineRequest, d: Decision) -> np.ndarray:
-        """Prefill the request and seat it; returns token #1 per row [b]."""
-        b, S = req.prompt.shape
-        tokens = jnp.asarray(req.prompt, jnp.int32)
-        fn = self._prefill_fn(group, b, S)
-        if group.gated:
-            g = masks_lib.mask_to_gates(d.mask)
-            logits, cache = fn(self.params, tokens, g["mixer"], g["ffn"])
-        else:
-            logits, cache = fn(group.params, tokens)
-        cache.pop("pos")
-        group.place(req.rid, slots, cache, d.mask if group.gated else None, S)
-        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        group.set_tokens(slots, first)
-        return first
-
     # --------------------------------------------------------------- decode
     def _decode_all(self) -> None:
         stepped = False
-        for group in self._groups.values():
+        for group in self.executor.groups():
             if not group.occupied():
                 continue
-            nxt, compiled = group.decode_once()
+            nxt, _ = self.executor.decode(group)
             stepped = True
-            if compiled:
-                self._compiles += 1
             for run in list(self._running.values()):
-                if run.group_key != group.key:
+                if run.group is not group:
                     continue
                 if len(run.out) >= run.max_new:
                     continue
@@ -551,29 +520,22 @@ class RAPEngine:
                 self._complete(run)
 
     def _complete(self, run: _Running) -> None:
-        group = self._groups[run.group_key]
-        group.evict(run.slots)
+        run.group.evict(run.slots)
         self.pool.free(run.req.rid)
         now = self._now()
         d = run.decision
-        self._results.append(RequestResult(
+        result = RequestResult(
             rid=run.req.rid, status="done",
             tokens=np.stack(run.out, axis=1),       # [b, generated]
             mask=d.mask, bucket=run.bucket,
             arrival_t=run.req.arrival_t, admitted_t=run.admitted_t,
             finished_t=now, queue_delay_s=run.admitted_t - run.req.arrival_t,
             decide_s=d.latency_s, fits=d.fits, cached_decision=d.cached,
-            peak_bytes=d.peak_bytes, kv_bytes=run.kv_bytes))
+            peak_bytes=d.peak_bytes, kv_bytes=run.kv_bytes)
+        self._results.append(result)
         del self._running[run.req.rid]
+        self.policy.feedback(result)
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
-        return {
-            "groups": len(self._groups),
-            "structural_buckets": sum(1 for k in self._groups
-                                      if k != "masked"),
-            "prefill_executables": len(self._prefill_fns),
-            "masked_prefill_executables": sum(
-                1 for k in self._prefill_fns if k[0] == "masked"),
-            "compile_events": self._compiles,
-        }
+        return dict(self.executor.stats())

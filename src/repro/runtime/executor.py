@@ -1,0 +1,428 @@
+"""Model executors — the execution seam of the serving engine.
+
+The engine decides *who* runs (scheduler) and *what shape* they run in
+(pruning policy); a :class:`ModelExecutor` owns *how* the chosen masks
+execute: slot-batched caches, compiled executable families, prefill
+scattering, and the fused decode step. PR 1 inlined all of this into
+``RAPEngine``; extracting it means sharded serving is "swap the
+executor", not "rewrite the engine".
+
+Executors:
+  * :class:`LocalExecutor` — today's single-process path. Groups (one per
+    structural bucket, or one gated group in masked mode) are additionally
+    keyed by a power-of-two *cache length*, so a long request mints a new
+    long-cache group instead of invalidating every compiled short one.
+    Decode runs in dynamic batch buckets B ∈ {1, 2, 4, 8} (ROADMAP): the
+    occupied slots are gathered into the smallest bucket that holds them,
+    stepped, and scattered back, so a lightly loaded engine does not pay
+    full-slot-count compute per token.
+  * :class:`ShardedExecutor` — mesh placement via
+    ``repro.parallel.sharding``: places parameters with the production
+    partition rules and lowers a sharded decode step for cost analysis
+    (``launch/rap_sweep.py``). The slot-batched serve path on a mesh is a
+    ROADMAP item; serve-path methods raise ``NotImplementedError`` with
+    that pointer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks as masks_lib
+from repro.models import decoder
+
+__all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "ShardedExecutor"]
+
+
+# ------------------------------------------------------------------- groups
+class SlotGroup:
+    """One slot-batched executable family sharing a cache.
+
+    masked mode: a single group over the full params with per-slot gates.
+    structural mode: one group per bucket (compacted params, gates absorbed
+    into structure). Groups are minted per (bucket, cache_len)."""
+
+    def __init__(self, key, params, layout, cfg_model, n_slots: int,
+                 cache_len: int, kv_dtype, gated: bool,
+                 mask: Optional[np.ndarray] = None):
+        self.key = key                # logical bucket key ("masked" | tuple)
+        self.params = params
+        self.layout = layout
+        self.mask = mask              # the keep-mask that minted this bucket
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.gated = gated
+        self.occupants: List[Optional[str]] = [None] * n_slots
+        self.cache = decoder.init_cache(cfg_model, n_slots, cache_len,
+                                        layout, kv_dtype)
+        self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        if gated:
+            L = cfg_model.n_layers
+            self._gates_np = np.ones((2, L, n_slots), np.float32)
+            self._gates_dev = jnp.asarray(self._gates_np)
+        cfg = cfg_model
+        layout_c = layout
+
+        if gated:
+            @jax.jit
+            def step(p, cache, tok, gm, gf):
+                return decoder.decode_step(p, cfg, cache, tok,
+                                           gates={"mixer": gm, "ffn": gf})
+        else:
+            @jax.jit
+            def step(p, cache, tok):
+                return decoder.decode_step(p, cfg, cache, tok,
+                                           layout=layout_c)
+        self._step = step
+        # decode executables are cached per batch bucket inside the jitted
+        # fn (XLA retraces per shape); we track seen buckets for compile
+        # accounting
+        self._compiled_batches: set = set()
+
+    # ----------------------------------------------------------- occupancy
+    def free_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupants) if o is None]
+
+    def occupied_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupants) if o is not None]
+
+    def occupied(self) -> bool:
+        return any(o is not None for o in self.occupants)
+
+    def place(self, rid: str, slots: List[int], req_cache: dict,
+              mask: Optional[np.ndarray], prompt_len: int) -> None:
+        """Write a freshly prefilled request cache into ``slots``."""
+        idx = jnp.asarray(slots, jnp.int32)
+        cache = dict(self.cache)
+        for k, v in cache.items():
+            if k == "pos":
+                cache[k] = v.at[idx].set(jnp.asarray(prompt_len, jnp.int32))
+            else:
+                cache[k] = jax.tree.map(
+                    lambda big, small: big.at[:, idx].set(small), v,
+                    req_cache[k])
+        self.cache = cache
+        for s in slots:
+            self.occupants[s] = rid
+        if self.gated and mask is not None:
+            g = masks_lib.mask_to_gates(mask)
+            for s in slots:
+                self._gates_np[0, :, s] = np.asarray(g["mixer"])
+                self._gates_np[1, :, s] = np.asarray(g["ffn"])
+            self._gates_dev = jnp.asarray(self._gates_np)
+
+    def set_tokens(self, slots: List[int], toks: np.ndarray) -> None:
+        idx = jnp.asarray(slots, jnp.int32)
+        self.tokens = self.tokens.at[idx, 0].set(
+            jnp.asarray(toks, jnp.int32))
+
+    def evict(self, slots: List[int]) -> None:
+        for s in slots:
+            self.occupants[s] = None
+
+    # -------------------------------------------------------------- decode
+    def _decode_batch(self, buckets: Sequence[int]) -> Optional[List[int]]:
+        """Slot indices to step this iteration: the occupied slots padded
+        with free ones up to the smallest bucket that holds them, or None
+        for the full-width path. Padding uses *distinct free* slots so the
+        scatter-back never writes one index twice; their compute is garbage
+        but unobservable (rows are independent and re-seeded on place)."""
+        occ = self.occupied_slots()
+        n = len(occ)
+        for b in sorted(set(buckets)):
+            if n <= b < self.n_slots:
+                free = self.free_slots()
+                return occ + free[: b - n]
+        return None
+
+    def decode_once(self, buckets: Sequence[int] = ()) -> Tuple[np.ndarray,
+                                                                bool]:
+        """Advance every occupied slot one token; returns ([n_slots] next
+        tokens — unoccupied entries are stale/garbage — and whether this
+        call compiled a new executable)."""
+        idx = self._decode_batch(buckets) if buckets else None
+        width = self.n_slots if idx is None else len(idx)
+        new = width not in self._compiled_batches
+        self._compiled_batches.add(width)
+        if idx is None:
+            cache, tokens = self.cache, self.tokens
+            gates = self._gates_dev if self.gated else None
+        else:
+            iidx = jnp.asarray(idx, jnp.int32)
+            cache = {k: (v[iidx] if k == "pos"
+                         else jax.tree.map(lambda a: a[:, iidx], v))
+                     for k, v in self.cache.items()}
+            tokens = self.tokens[iidx]
+            gates = self._gates_dev[:, :, iidx] if self.gated else None
+        if self.gated:
+            logits, cache = self._step(self.params, cache, tokens,
+                                       gates[0], gates[1])
+        else:
+            logits, cache = self._step(self.params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if idx is None:
+            self.cache = cache
+            self.tokens = nxt[:, None]
+            return np.asarray(nxt), new
+        # scatter the stepped sub-batch back into the full-width state
+        iidx = jnp.asarray(idx, jnp.int32)
+        big = dict(self.cache)
+        for k, v in cache.items():
+            if k == "pos":
+                big[k] = self.cache[k].at[iidx].set(v)
+            else:
+                big[k] = jax.tree.map(
+                    lambda full, small: full.at[:, iidx].set(small),
+                    self.cache[k], v)
+        self.cache = big
+        self.tokens = self.tokens.at[iidx, 0].set(nxt)
+        out = np.zeros((self.n_slots,), np.int32)
+        out[np.asarray(idx)] = np.asarray(nxt)
+        return out, new
+
+
+# ---------------------------------------------------------------- protocol
+class ModelExecutor:
+    """Execution backend protocol for the engine.
+
+    ``group_for`` resolves a keep-mask (+ cache length) to the slot group
+    that will host the request; ``prefill_into`` seats a prefilled request;
+    ``decode`` advances one group one token. ``compile_events`` counts new
+    executables (prefill shapes + decode batch buckets)."""
+
+    compile_events: int = 0
+
+    def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
+        raise NotImplementedError
+
+    def prefill_into(self, group: SlotGroup, slots: List[int], rid: str,
+                     prompt: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
+        raise NotImplementedError
+
+    def groups(self) -> List[SlotGroup]:
+        raise NotImplementedError
+
+    def set_max_active(self, n_slots: int) -> None:
+        raise NotImplementedError
+
+    def drop_groups(self) -> None:
+        """Invalidate every compiled group (capacity reshape)."""
+        raise NotImplementedError
+
+    def evict_all(self) -> None:
+        for g in self.groups():
+            g.evict(list(range(g.n_slots)))
+
+    def stats(self) -> Dict[str, int]:
+        return {"compile_events": self.compile_events}
+
+
+# ------------------------------------------------------------------- local
+class LocalExecutor(ModelExecutor):
+    """Single-process slot-batched execution (the PR 1 path, extracted),
+    plus dynamic decode-batch buckets and per-cache-length groups."""
+
+    def __init__(self, model, params, *, mode: str = "masked",
+                 max_active: int = 8, kv_dtype=None,
+                 decode_buckets: Sequence[int] = (1, 2, 4, 8)):
+        if mode not in ("masked", "structural"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.model = model
+        self.mcfg = model.cfg
+        self.params = params
+        self.mode = mode
+        self.max_active = int(max_active)
+        self.kv_dtype = kv_dtype
+        self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
+        self.compile_events = 0
+        self._groups: Dict[Tuple, SlotGroup] = {}
+        self._prefill_fns: Dict[Tuple, Any] = {}
+
+    # ------------------------------------------------------------ capacity
+    def set_max_active(self, n_slots: int) -> None:
+        """Changing the slot count changes every cache's slot axis — all
+        compiled groups drop (their prefill executables stay valid: prefill
+        shapes depend on (cache_len, batch, seq), not slot count)."""
+        if int(n_slots) == self.max_active:
+            return
+        self.max_active = int(n_slots)
+        self._groups.clear()
+
+    def drop_groups(self) -> None:
+        # prefill fns are keyed by cache_len: after a capacity reshape the
+        # old lengths are unreachable, so keeping them would pin dead XLA
+        # executables for the executor's lifetime
+        self._groups.clear()
+        self._prefill_fns.clear()
+
+    # -------------------------------------------------------------- groups
+    def groups(self) -> List[SlotGroup]:
+        return list(self._groups.values())
+
+    def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
+        if self.mode == "masked":
+            key = "masked"
+            gkey = (key, cache_len)
+            if gkey not in self._groups:
+                self._groups[gkey] = SlotGroup(
+                    key, self.params, None, self.mcfg, self.max_active,
+                    cache_len, self.kv_dtype, gated=True)
+            return self._groups[gkey]
+        key = masks_lib.bucket_key(self.mcfg, mask)
+        gkey = (key, cache_len)
+        if gkey not in self._groups:
+            small, layout = masks_lib.compact_params(self.params, self.mcfg,
+                                                     mask)
+            self._groups[gkey] = SlotGroup(
+                key, small, layout, self.mcfg, self.max_active,
+                cache_len, self.kv_dtype, gated=False,
+                mask=np.array(mask, copy=True))
+        return self._groups[gkey]
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_fn(self, group: SlotGroup, b: int, S: int):
+        key = (group.key, group.cache_len, b, S)
+        if key not in self._prefill_fns:
+            cfg, max_len = self.mcfg, group.cache_len
+            kv_dtype, layout = self.kv_dtype, group.layout
+            if group.gated:
+                @jax.jit
+                def fn(p, tokens, gm, gf):
+                    return decoder.prefill(p, cfg, tokens, max_len,
+                                           gates={"mixer": gm, "ffn": gf},
+                                           kv_dtype=kv_dtype)
+            else:
+                @jax.jit
+                def fn(p, tokens):
+                    return decoder.prefill(p, cfg, tokens, max_len,
+                                           layout=layout, kv_dtype=kv_dtype)
+            self._prefill_fns[key] = fn
+            self.compile_events += 1
+        return self._prefill_fns[key]
+
+    def prefill_into(self, group: SlotGroup, slots: List[int], rid: str,
+                     prompt: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Prefill the request and seat it; returns token #1 per row [b]."""
+        b, S = prompt.shape
+        tokens = jnp.asarray(prompt, jnp.int32)
+        fn = self._prefill_fn(group, b, S)
+        if group.gated:
+            g = masks_lib.mask_to_gates(mask)
+            logits, cache = fn(self.params, tokens, g["mixer"], g["ffn"])
+        else:
+            logits, cache = fn(group.params, tokens)
+        cache.pop("pos")
+        group.place(rid, slots, cache, mask if group.gated else None, S)
+        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        group.set_tokens(slots, first)
+        return first
+
+    # -------------------------------------------------------------- decode
+    def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
+        nxt, new = group.decode_once(self.decode_buckets)
+        if new:
+            self.compile_events += 1
+        return nxt, new
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        return {
+            "groups": len(self._groups),
+            # distinct logical mask buckets — NOT (bucket, cache_len)
+            # entries, which pow2 length bucketing would overcount
+            "structural_buckets": len({k for k, _ in self._groups
+                                       if k != "masked"}),
+            "prefill_executables": len(self._prefill_fns),
+            "masked_prefill_executables": sum(
+                1 for k in self._prefill_fns if k[0] == "masked"),
+            "compile_events": self.compile_events,
+        }
+
+
+# ----------------------------------------------------------------- sharded
+class ShardedExecutor(ModelExecutor):
+    """Mesh-placed execution (ROADMAP: sharded serving).
+
+    Today this stub owns the *placement* half: parameters are sharded with
+    the production partition rules (``repro.parallel.sharding``) and a
+    sharded decode step can be lowered for roofline/cost analysis — the
+    path ``launch/rap_sweep.py`` drives. The slot-batched serve methods
+    raise until per-group mesh execution lands.
+    """
+
+    def __init__(self, model, mesh, *, params=None, fsdp: bool = False,
+                 shard_seq: bool = False, kv_int8: bool = False):
+        self.model = model
+        self.mcfg = model.cfg
+        self.mesh = mesh
+        self.policy = {"fsdp": bool(fsdp), "shard_seq": bool(shard_seq),
+                       "kv_int8": bool(kv_int8)}
+        self.compile_events = 0
+        self.params = self.place_params(params) if params is not None else None
+
+    # ----------------------------------------------------------- placement
+    def param_shardings(self):
+        from repro.parallel import param_pspecs, shardings_for
+        shapes = jax.eval_shape(lambda: self.model.init(jax.random.key(0)))
+        return shardings_for(param_pspecs(shapes, self.mesh,
+                                          fsdp=self.policy["fsdp"]),
+                             self.mesh)
+
+    def place_params(self, params):
+        """Place a params pytree on the mesh under the production rules."""
+        return jax.device_put(params, self.param_shardings())
+
+    def lower_decode(self, shape):
+        """Lower one sharded fused decode step for ``shape`` (a
+        ``repro.configs`` request shape) and return the ``Lowered`` —
+        callers compile it for HLO cost / memory / collective analysis."""
+        from repro.parallel import (batch_pspecs, cache_pspecs, param_pspecs,
+                                    shardings_for)
+        from repro.parallel import activation as act
+        from repro.runtime import steps as steps_lib
+        model, mesh, policy = self.model, self.mesh, self.policy
+        with act.use(mesh, shard_seq=policy["shard_seq"],
+                     fsdp=policy["fsdp"]):
+            params_shape = jax.eval_shape(
+                lambda: model.init(jax.random.key(0)))
+            psh = shardings_for(param_pspecs(params_shape, mesh,
+                                             fsdp=policy["fsdp"]), mesh)
+            specs = model.input_specs(shape)
+            bsh = shardings_for(batch_pspecs(specs, mesh), mesh)
+            kv_dtype = jnp.int8 if policy["kv_int8"] else None
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         kv_dtype=kv_dtype))
+            csh = shardings_for(
+                cache_pspecs(cache_shape, mesh, batch=shape.global_batch,
+                             shard_seq=policy["shard_seq"]), mesh)
+            fn = steps_lib.make_decode_step(model)
+            jfn = jax.jit(fn, in_shardings=(psh, csh, bsh["tokens"]),
+                          out_shardings=(None, csh), donate_argnums=(1,))
+            return jfn.lower(params_shape, cache_shape, specs["tokens"])
+
+    # ------------------------------------------------------------ serve API
+    def _todo(self):
+        raise NotImplementedError(
+            "sharded slot-batched serving is a ROADMAP item ('Sharded "
+            "serving'); construct RAPEngine with a LocalExecutor, or use "
+            "ShardedExecutor.lower_decode() for mesh cost analysis")
+
+    def group_for(self, mask, cache_len):
+        self._todo()
+
+    def prefill_into(self, group, slots, rid, prompt, mask):
+        self._todo()
+
+    def decode(self, group):
+        self._todo()
+
+    def groups(self) -> List[SlotGroup]:
+        return []

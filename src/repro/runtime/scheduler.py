@@ -1,0 +1,145 @@
+"""Pluggable request scheduling for the serving engine.
+
+PR 1 baked FIFO admission with head-of-line blocking into
+``RAPEngine._tick``. This module extracts the queue + ordering decision
+behind a small protocol so admission *policy* is swappable without
+touching the engine loop:
+
+    Scheduler.add(request, cost=…)      requests enter the waiting set
+    Scheduler.schedule(now) ──► SchedulerOutput(admit=[…ordered…])
+    Scheduler.remove(rid)               admitted / rejected requests leave
+
+The engine walks ``SchedulerOutput.admit`` in order, attempting admission
+(policy decision → pool allocation → prefill) per candidate, and stops at
+the first *deferral* (no pages / no free slots). Stopping preserves the
+scheduler's ordering guarantee — a deferred candidate is never overtaken
+within a tick — so FIFO keeps strict head-of-line semantics and SJF/
+priority orders cannot starve the job they chose to run next.
+
+Schedulers:
+  * :class:`FIFOScheduler`     — arrival order (PR 1 behaviour);
+  * :class:`SJFScheduler`      — shortest job first, by the request's
+    total token cost (prompt + decode length), ties broken by arrival;
+  * :class:`PriorityScheduler` — explicit ``EngineRequest.priority``
+    (lower = sooner), ties broken by arrival.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Tuple
+
+__all__ = ["Scheduler", "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
+           "PriorityScheduler", "SCHEDULERS", "make_scheduler"]
+
+
+@dataclasses.dataclass
+class SchedulerOutput:
+    """An explicit admission plan for one engine tick."""
+    admit: List                     # EngineRequests, in admission order
+    n_waiting: int = 0
+
+
+@dataclasses.dataclass
+class _Entry:
+    req: object                     # EngineRequest (duck-typed)
+    cost: float                     # total tokens: prompt + decode budget
+    seq: int                        # arrival tiebreak (insertion order)
+
+
+class Scheduler:
+    """Base: owns the waiting set; subclasses define the ordering key."""
+
+    name = "base"
+
+    def __init__(self):
+        self._waiting: "collections.OrderedDict[str, _Entry]" = \
+            collections.OrderedDict()
+        self._seq = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def add(self, req, *, cost: float = 0.0) -> None:
+        if req.rid in self._waiting:
+            raise ValueError(f"request {req.rid!r} already waiting")
+        self._waiting[req.rid] = _Entry(req=req, cost=float(cost),
+                                        seq=self._seq)
+        self._seq += 1
+
+    def remove(self, rid: str) -> None:
+        self._waiting.pop(rid, None)
+
+    def clear(self) -> None:
+        self._waiting.clear()
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+    def __contains__(self, rid: str) -> bool:
+        return rid in self._waiting
+
+    # ------------------------------------------------------------- ordering
+    def _key(self, entry: _Entry) -> Tuple:
+        raise NotImplementedError
+
+    def schedule(self, now: float) -> SchedulerOutput:
+        """Order the waiting set into this tick's admission plan."""
+        entries = sorted(self._waiting.values(), key=self._key)
+        return SchedulerOutput(admit=[e.req for e in entries],
+                               n_waiting=len(entries))
+
+
+class FIFOScheduler(Scheduler):
+    name = "fifo"
+
+    def _key(self, entry: _Entry) -> Tuple:
+        return (entry.seq,)
+
+    def schedule(self, now: float) -> SchedulerOutput:
+        # insertion order IS arrival order — skip the O(W log W) sort the
+        # generic path pays per tick
+        return SchedulerOutput(admit=[e.req for e in self._waiting.values()],
+                               n_waiting=len(self._waiting))
+
+
+class SJFScheduler(Scheduler):
+    """Shortest job first — smallest total token cost (batch × (prompt +
+    decode), the engine's `cost` at add()) next. Under memory pressure
+    this admits the requests with the smallest KV demand first, trading
+    FIFO fairness for queue-delay percentiles."""
+
+    name = "sjf"
+
+    def _key(self, entry: _Entry) -> Tuple:
+        return (entry.cost, entry.seq)
+
+
+class PriorityScheduler(Scheduler):
+    """Explicit request priority (lower = sooner); FIFO within a level."""
+
+    name = "priority"
+
+    def _key(self, entry: _Entry) -> Tuple:
+        return (getattr(entry.req, "priority", 0), entry.seq)
+
+
+SCHEDULERS: Dict[str, type] = {
+    "fifo": FIFOScheduler,
+    "sjf": SJFScheduler,
+    "priority": PriorityScheduler,
+}
+
+
+def make_scheduler(spec) -> Scheduler:
+    """Accepts a Scheduler instance (passed through), a registered name,
+    or None (FIFO — the PR 1 default)."""
+    if spec is None:
+        return FIFOScheduler()
+    if isinstance(spec, Scheduler):
+        return spec
+    if isinstance(spec, str):
+        if spec not in SCHEDULERS:
+            raise KeyError(f"unknown scheduler {spec!r}; available: "
+                           f"{', '.join(sorted(SCHEDULERS))}")
+        return SCHEDULERS[spec]()
+    raise TypeError(f"scheduler must be a name or Scheduler, got "
+                    f"{type(spec).__name__}")

@@ -2,12 +2,13 @@
 
 Per request the flow is the paper's online loop:
   ① observe (batch, seq_len, available-memory budget)
-  ② RAPController.decide() → block keep-mask (masked-argmax over Q until
-     the analytical peak fits)
+  ② PruningPolicy.observe() → block keep-mask (the RL controller's
+     masked-argmax over Q until the analytical peak fits, or any
+     registered baseline policy)
   ③ execute pruned inference
   ④ report memory / quality stats
 
-XLA adaptation of "execute pruned" (see DESIGN.md §2) — two modes:
+XLA adaptation of "execute pruned" (see DESIGN.md §3) — two modes:
   * ``masked``     — the mask becomes runtime 0/1 gate inputs to one shared
     executable: zero recompiles, instant policy switches, but no real
     memory savings (GSI scoring and latency-critical paths use this);
@@ -17,7 +18,7 @@ XLA adaptation of "execute pruned" (see DESIGN.md §2) — two modes:
     layout signature). Uniform architectures collapse many masks into one
     bucket, so compiles amortize exactly like vLLM's shape buckets.
 
-Since the continuous-batching refactor (DESIGN.md §3) this class is a thin
+Since the continuous-batching refactor (DESIGN.md §4) this class is a thin
 shim: each ``serve()`` call runs a single-request trace through
 :class:`repro.runtime.engine.RAPEngine` in ``force``-admission mode, which
 reproduces the historical contract exactly — one decision per request
@@ -25,12 +26,11 @@ against a private instantaneous budget, executed regardless of fit (the
 engine records the overcommit instead of queueing). New code should talk to
 the engine directly and share one pool across requests.
 
-Known shim tradeoff: the engine sizes slot caches by one monotonically
-growing ``max_len`` (growth drops compiled groups), whereas the legacy
-server kept one right-sized executable per prompt shape. Serving a long
-prompt therefore recompiles and makes subsequent short serves pay the long
-cache length until the server is rebuilt — acceptable for the
-compatibility path; throughput-sensitive callers use the engine.
+The historical shim tradeoff — one monotonically growing ``max_len`` whose
+growth dropped every compiled group, leaving short serves paying an
+arbitrary long cache length — is gone: the engine mints slot caches per
+power-of-two length bucket, so a long prompt compiles its own long-cache
+group and short serves keep their short ones.
 """
 from __future__ import annotations
 
@@ -40,7 +40,16 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.core.controller import RAPController
+from repro.core.policy import PruningPolicy
 from repro.runtime.engine import EngineConfig, EngineRequest, RAPEngine
+
+_MIGRATION_HINT = (
+    "RAPServer's constructor changed with the serving-API split: it now "
+    "takes a PruningPolicy instead of a RAPController. Wrap your "
+    "controller — RAPServer(model, params, "
+    "repro.core.policy.RLPolicy(controller), ...) — or build any "
+    "registered policy with repro.core.policy.make_policy()."
+)
 
 
 @dataclasses.dataclass
@@ -57,21 +66,33 @@ class ServeResult:
 
 
 class RAPServer:
-    def __init__(self, model, params, controller: RAPController, *,
+    def __init__(self, model, params, policy: PruningPolicy = None, *,
                  mode: str = "structural", max_new_tokens: int = 16,
-                 kv_dtype=None):
+                 kv_dtype=None, **legacy):
+        if legacy:
+            raise TypeError(
+                f"RAPServer got unexpected kwargs {sorted(legacy)}. "
+                + _MIGRATION_HINT)
+        if isinstance(policy, RAPController):
+            raise TypeError(
+                "RAPServer received a RAPController where a PruningPolicy "
+                "is expected. " + _MIGRATION_HINT)
+        if policy is None or not isinstance(policy, PruningPolicy):
+            raise TypeError(
+                f"RAPServer requires a PruningPolicy, got "
+                f"{type(policy).__name__}. " + _MIGRATION_HINT)
         assert mode in ("structural", "masked")
         self.model = model
         self.cfg = model.cfg
         self.params = params
-        self.controller = controller
+        self.policy = policy
         self.mode = mode
         self.max_new = max_new_tokens
         self.kv_dtype = kv_dtype
-        self._engine = RAPEngine(model, params, controller, EngineConfig(
+        self._engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=max_new_tokens, max_active=1,
             max_len=max_new_tokens + 1, kv_dtype=kv_dtype,
-            admission="force"))
+            admission="force", len_buckets="pow2"))
         self._serial = 0
 
     # --------------------------------------------------------------- serve

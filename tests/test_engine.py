@@ -6,6 +6,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import controller as ctl, dqn, masks, memory
+from repro.core.policy import RLPolicy
 from repro.core.workload import PoissonConfig, poisson_requests
 from repro.models import decoder
 from repro.runtime import (EngineConfig, EngineRequest, KVPool, PoolExhausted,
@@ -100,10 +101,10 @@ def served(tiny_model):
 
 
 def _engine(model, params, c, mm, *, mode="masked", budget, max_new=4,
-            slots=4, max_len=32, admission="strict"):
-    return RAPEngine(model, params, c, EngineConfig(
+            slots=4, max_len=32, admission="strict", scheduler=None):
+    return RAPEngine(model, params, RLPolicy(c), EngineConfig(
         mode=mode, max_new_tokens=max_new, max_active=slots, max_len=max_len,
-        budget_bytes=budget, admission=admission))
+        budget_bytes=budget, admission=admission), scheduler=scheduler)
 
 
 def _reqs(prompts, rate=1000.0, seed=0):
@@ -149,7 +150,8 @@ def test_engine_matches_oneshot_server(served):
     prompt = np.asarray(batch["tokens"])[:1, :16]
     full = masks.full_mask(cfg.n_layers)
     budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 20)
-    srv = RAPServer(model, params, c, mode="masked", max_new_tokens=4)
+    srv = RAPServer(model, params, RLPolicy(c), mode="masked",
+                    max_new_tokens=4)
     sres = srv.serve(prompt, budget)
     eng = _engine(model, params, c, mm, budget=budget)
     rep = eng.run(_reqs([prompt]))
@@ -264,3 +266,178 @@ def test_poisson_trace_deterministic_and_ordered():
     assert all(t2 > t1 for t1, t2 in zip(ts, ts[1:]))
     assert all(r.seq_len % cfg.round_len_to == 0 for r in a)
     assert len(a) == 20
+
+
+# ------------------------------------------------------- serving-API split
+def test_old_constructor_raises_migration_hint(served):
+    """Pre-split callers passed a RAPController (positionally or via the
+    controller= kwarg); both must fail loudly with the wrapping recipe."""
+    model, params, batch, mm, c = served
+    with pytest.raises(TypeError, match="RLPolicy"):
+        RAPEngine(model, params, c, EngineConfig())
+    with pytest.raises(TypeError, match="RLPolicy"):
+        RAPEngine(model, params, controller=c)
+    with pytest.raises(TypeError, match="RLPolicy"):
+        RAPServer(model, params, c)
+    with pytest.raises(TypeError, match="RLPolicy"):
+        RAPServer(model, params, controller=c)
+
+
+def test_engine_config_validation():
+    """Numeric misconfigurations fail at construction with actionable
+    messages, not deep inside a serve loop."""
+    with pytest.raises(ValueError, match="budget_quantum_frac"):
+        EngineConfig(budget_quantum_frac=1.5)
+    with pytest.raises(ValueError, match="budget_quantum_frac"):
+        EngineConfig(budget_quantum_frac=-0.1)
+    with pytest.raises(ValueError, match="max_active"):
+        EngineConfig(max_active=0)
+    with pytest.raises(ValueError, match="tokens_per_page"):
+        EngineConfig(tokens_per_page=0)
+    with pytest.raises(ValueError, match="max_len"):
+        EngineConfig(max_len=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        EngineConfig(max_new_tokens=-1)
+    with pytest.raises(ValueError, match="budget_bytes"):
+        EngineConfig(budget_bytes=-1.0)
+    with pytest.raises(ValueError, match="decode_buckets"):
+        EngineConfig(decode_buckets=(0, 2))
+    with pytest.raises(ValueError, match="len_buckets"):
+        EngineConfig(len_buckets="linear")
+    EngineConfig(budget_quantum_frac=0.0, max_active=1, tokens_per_page=1)
+
+
+def _two_prompts(batch):
+    toks = np.asarray(batch["tokens"])
+    return toks[:1, :24], toks[:1, :8]   # long, short
+
+
+def test_scheduler_fifo_vs_sjf_completion_order(served):
+    """One slot, long request first: FIFO serves arrival order, SJF runs
+    the short job first."""
+    model, params, batch, mm, c = served
+    cfg = model.cfg
+    long_p, short_p = _two_prompts(batch)
+    full = masks.full_mask(cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    orders = {}
+    for sched in ("fifo", "sjf"):
+        eng = _engine(model, params, c, mm, budget=budget, max_new=2,
+                      slots=1, max_len=32, scheduler=sched)
+        reqs = [EngineRequest(rid="long", prompt=long_p, arrival_t=0.0),
+                EngineRequest(rid="short", prompt=short_p, arrival_t=0.0)]
+        rep = eng.run(reqs)
+        orders[sched] = [r.rid for r in rep.results if r.status == "done"]
+    assert orders["fifo"] == ["long", "short"]
+    assert orders["sjf"] == ["short", "long"]
+
+
+def test_engine_duplicate_rid_rejected_not_crashed(served):
+    """Two same-rid requests in one tick: the second is rejected as a
+    result, not raised as a ValueError that loses the whole run."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    eng = _engine(model, params, c, mm, budget=budget, max_new=2)
+    reqs = [EngineRequest(rid="dup", prompt=toks[:1, :16], arrival_t=0.0),
+            EngineRequest(rid="dup", prompt=toks[:1, :16], arrival_t=0.0)]
+    rep = eng.run(reqs)
+    statuses = sorted(r.status for r in rep.results)
+    assert statuses == ["done", "rejected"]
+    rej = [r for r in rep.results if r.status == "rejected"][0]
+    assert "duplicate" in rej.reason
+
+
+def test_sjf_cost_scales_with_batch(served):
+    """SJF orders by total KV demand (batch × tokens), not per-row prompt
+    length: a 2-row short request is a LARGER job than a 1-row longer
+    one."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 6 * mm.state_bytes(full, 1, 32)
+    eng = _engine(model, params, c, mm, budget=budget, max_new=2,
+                  slots=2, max_len=32, scheduler="sjf")
+    reqs = [EngineRequest(rid="wide", prompt=toks[:2, :16], arrival_t=0.0),
+            EngineRequest(rid="narrow", prompt=toks[:1, :24],
+                          arrival_t=0.0)]
+    rep = eng.run(reqs)
+    # narrow: 1×26 tokens < wide: 2×18 tokens → narrow first
+    assert [r.rid for r in rep.results if r.status == "done"] == \
+        ["narrow", "wide"]
+
+
+def test_scheduler_priority_overrides_arrival(served):
+    model, params, batch, mm, c = served
+    cfg = model.cfg
+    long_p, short_p = _two_prompts(batch)
+    full = masks.full_mask(cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    eng = _engine(model, params, c, mm, budget=budget, max_new=2,
+                  slots=1, max_len=32, scheduler="priority")
+    reqs = [EngineRequest(rid="steerage", prompt=short_p, arrival_t=0.0,
+                          priority=5),
+            EngineRequest(rid="vip", prompt=long_p, arrival_t=0.0,
+                          priority=-1)]
+    rep = eng.run(reqs)
+    assert [r.rid for r in rep.results if r.status == "done"] == \
+        ["vip", "steerage"]
+
+
+def test_decode_buckets_token_equivalent(served):
+    """Dynamic decode-batch buckets must not change greedy tokens."""
+    model, params, batch, mm, c = served
+    cfg = model.cfg
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(cfg.n_layers)
+    budget = mm.param_bytes(full) + 6 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :24], toks[:1, :16]]
+    outs = {}
+    for buckets in ((1, 2, 4, 8), ()):
+        eng = RAPEngine(model, params, RLPolicy(c), EngineConfig(
+            mode="masked", max_new_tokens=4, max_active=8, max_len=32,
+            budget_bytes=budget, decode_buckets=buckets))
+        rep = eng.run(_reqs(prompts))
+        outs[buckets] = {r.rid: r.tokens for r in rep.results}
+    for rid, t in outs[(1, 2, 4, 8)].items():
+        np.testing.assert_array_equal(t, outs[()][rid])
+
+
+def test_server_pow2_len_buckets_fix_recompile_trap(served):
+    """A long serve mints its own long-cache group; re-serving the short
+    shape afterwards hits the already-compiled short group (the historical
+    shim dropped every group on max_len growth)."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    srv = RAPServer(model, params, RLPolicy(c), mode="masked",
+                    max_new_tokens=2)
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 64)
+    r1 = srv.serve(toks[:1, :8], budget)      # short → 16-token bucket
+    assert r1.compiled_new
+    r2 = srv.serve(toks[:1, :30], budget)     # long → 32-token bucket
+    assert r2.compiled_new
+    r3 = srv.serve(toks[:1, :8], budget)      # short again: no recompile
+    assert not r3.compiled_new
+    np.testing.assert_array_equal(r1.tokens, r3.tokens)
+
+
+def test_sharded_executor_stub_places_params(served):
+    """ShardedExecutor owns mesh placement; its serve path points at the
+    ROADMAP instead of failing obscurely."""
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime import ShardedExecutor
+
+    model, params, batch, mm, c = served
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    ex = ShardedExecutor(model, mesh, params=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(ex.params)):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ex.groups() == []
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        ex.group_for(masks.full_mask(model.cfg.n_layers), 32)
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        ex.decode(None)

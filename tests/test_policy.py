@@ -1,0 +1,180 @@
+"""Policy-conformance suite: every registered PruningPolicy (RL + all
+static baselines + random + dense) runs through the SAME engine trace and
+must satisfy the serving contract — budget safety (pool never exceeds the
+shared budget), mask shape, and bitwise determinism under a fixed seed."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dqn, masks, memory
+from repro.core.controller import RAPController
+from repro.core.policy import (PolicyState, PruningPolicy, RLPolicy,
+                               StaticOrderPolicy, available_policies,
+                               make_policy)
+from repro.runtime import EngineConfig, EngineRequest, RAPEngine
+
+MAX_NEW = 2
+N_REQ = 5
+
+
+@pytest.fixture(scope="module")
+def ctx(tiny_model):
+    model, params, batch = tiny_model
+    mm = memory.build_memory_model(model.cfg)
+    qp = dqn.init_qnet(jax.random.key(0), 2 * model.cfg.n_layers + 4,
+                       2 * model.cfg.n_layers + 1, 32)
+    controller = RAPController(model, params, batch, mm, qp)
+    return model, params, batch, mm, controller
+
+
+@pytest.fixture(scope="module")
+def policies(ctx):
+    """Every registered policy, built from one serving context."""
+    model, params, batch, mm, controller = ctx
+    return {name: make_policy(name, model=model, params=params, calib=batch,
+                              mm=mm, controller=controller, seed=0)
+            for name in available_policies()}
+
+
+def _trace(batch):
+    toks = np.asarray(batch["tokens"])
+    prompts = [toks[:1, : (16 if i % 2 else 24)] for i in range(N_REQ)]
+    return [EngineRequest(rid=f"r{i}", prompt=np.asarray(p, np.int32),
+                          arrival_t=0.001 * i)
+            for i, p in enumerate(prompts)]
+
+
+def _run(model, params, mm, policy, batch, *, budget_frac=0.9):
+    full = masks.full_mask(model.cfg.n_layers)
+    # pool ≈ 2.5 dense requests with a sub-dense budget → contention AND
+    # pruning pressure for every policy
+    budget = (mm.param_bytes(full)
+              + 2.5 * budget_frac * mm.state_bytes(full, 1, 26))
+    eng = RAPEngine(model, params, policy, EngineConfig(
+        mode="masked", max_new_tokens=MAX_NEW, max_active=4, max_len=32,
+        budget_bytes=budget))
+    return eng.run(_trace(batch)), budget, eng
+
+
+def test_registry_covers_paper_baselines(policies):
+    """The §5.1 comparison set is servable: RL + the static baselines."""
+    for name in ("rl", "shortgpt", "llmpruner", "random", "mha_drop",
+                 "ffn_skip", "oneshot", "dense"):
+        assert name in policies
+        assert isinstance(policies[name], PruningPolicy)
+        assert policies[name].name == name
+        assert policies[name].mm is not None
+
+
+@pytest.mark.parametrize("name", ["rl", "shortgpt", "llmpruner", "random",
+                                  "mha_drop", "ffn_skip", "oneshot",
+                                  "dense"])
+def test_policy_conformance_through_engine(ctx, policies, name):
+    """Same Poisson-ish trace through every policy: all requests served,
+    budget never exceeded, masks well-formed, replay deterministic."""
+    model, params, batch, mm, _ = ctx
+    policy = policies[name]
+    L = model.cfg.n_layers
+    rep, budget, eng = _run(model, params, mm, policy, batch)
+
+    done = [r for r in rep.results if r.status == "done"]
+    assert len(done) == N_REQ and rep.rejected == 0
+
+    # --- budget safety: the pool (strict admission) never exceeds the
+    # shared budget net of resident params
+    pool = rep.pool
+    assert pool["peak_reserved_bytes"] <= pool["capacity_bytes"] + 1e-6
+    assert (pool["capacity_bytes"] + eng.resident_param_bytes
+            <= budget + 1e-6)
+    assert pool["overcommit_events"] == 0
+    assert pool["reserved_bytes"] == 0 and pool["in_use_bytes"] == 0
+
+    # --- mask contract: boolean [2L], analytically consistent state bytes
+    for r in done:
+        assert r.mask.shape == (2 * L,) and r.mask.dtype == np.bool_
+        assert r.tokens.shape == (1, MAX_NEW)
+        i = int(r.rid[1:])
+        total = (16 if i % 2 else 24) + MAX_NEW
+        assert r.kv_bytes == pytest.approx(
+            mm.state_bytes(r.mask, 1, total))
+
+    # --- determinism: bitwise-identical replay under the fixed seed
+    rep2, _, _ = _run(model, params, mm, policy, batch)
+    for a, b in zip(rep.results, rep2.results):
+        assert a.rid == b.rid and a.status == b.status
+        np.testing.assert_array_equal(a.mask, b.mask)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_static_policy_observes_budget(ctx, policies):
+    """StaticOrderPolicy prunes until the analytical peak fits (when the
+    order allows) and reports fits honestly when it cannot."""
+    model, params, batch, mm, _ = ctx
+    L = model.cfg.n_layers
+    for name in ("shortgpt", "llmpruner", "random"):
+        pol = policies[name]
+        dense = mm.dense_peak(1, 32)
+        d = pol.observe(PolicyState(batch=1, total_len=32,
+                                    budget_bytes=0.8 * dense))
+        assert d.mask.shape == (2 * L,)
+        if d.fits:
+            assert d.peak_bytes <= 0.8 * dense
+        assert not d.mask.all()          # 80% of dense forces pruning
+        # generous budget → no pruning
+        d2 = pol.observe(PolicyState(batch=1, total_len=32,
+                                     budget_bytes=2.0 * dense))
+        assert d2.mask.all() and d2.fits
+
+
+def test_static_policy_memoizes(ctx):
+    model, params, batch, mm, _ = ctx
+    pol = make_policy("random", model=model, mm=mm, seed=0)
+    dense = mm.dense_peak(1, 32)
+    d1 = pol.observe(PolicyState(batch=1, total_len=32,
+                                 budget_bytes=0.8 * dense))
+    d2 = pol.observe(PolicyState(batch=1, total_len=32,
+                                 budget_bytes=0.8 * dense))
+    assert not d1.cached and d2.cached
+    np.testing.assert_array_equal(d1.mask, d2.mask)
+    # memoized masks are private copies
+    d2.mask[0] = not d2.mask[0]
+    d3 = pol.observe(PolicyState(batch=1, total_len=32,
+                                 budget_bytes=0.8 * dense))
+    np.testing.assert_array_equal(d1.mask, d3.mask)
+
+
+def test_policy_feedback_hook_called(ctx):
+    """The engine reports every completion back to the policy."""
+    model, params, batch, mm, _ = ctx
+
+    class Recorder(StaticOrderPolicy):
+        def __init__(self, mm):
+            super().__init__(mm, [], "recorder")
+            self.seen = []
+
+        def feedback(self, result):
+            self.seen.append(result.rid)
+
+    pol = Recorder(mm)
+    rep, _, _ = _run(model, params, mm, pol, batch)
+    assert pol.seen == [r.rid for r in rep.results if r.status == "done"]
+
+
+def test_make_policy_errors():
+    with pytest.raises(KeyError, match="unknown policy"):
+        make_policy("nope")
+    with pytest.raises(ValueError, match="requires"):
+        make_policy("rl")                 # no controller
+    with pytest.raises(ValueError, match="requires"):
+        make_policy("shortgpt")           # no model/params/calib/mm
+
+
+def test_rl_policy_wraps_controller(ctx):
+    model, params, batch, mm, controller = ctx
+    pol = RLPolicy(controller)
+    dense = mm.dense_peak(1, 32)
+    d = pol.observe(PolicyState(batch=1, total_len=32,
+                                budget_bytes=0.7 * dense))
+    ref = controller.decide(1, 32, 0.7 * dense)
+    np.testing.assert_array_equal(d.mask, ref.mask)
+    assert pol.mm is controller.mm

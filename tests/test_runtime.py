@@ -10,6 +10,7 @@ import pytest
 from repro.checkpoint import CheckpointManager, latest_step, save_pytree
 from repro.configs import get_smoke_config
 from repro.core import controller as ctl, dqn, memory
+from repro.core.policy import RLPolicy
 from repro.data import SyntheticCorpus, batch_iterator
 from repro.models import registry
 from repro.optim import adamw
@@ -127,8 +128,10 @@ def test_server_structural_vs_masked_equivalent(tiny_model):
     c = ctl.RAPController(model, params, batch, mm, qp)
     prompt = np.asarray(batch["tokens"])[:, :16]
     budget = 0.8 * mm.dense_peak(prompt.shape[0], 24)
-    s1 = RAPServer(model, params, c, mode="structural", max_new_tokens=4)
-    s2 = RAPServer(model, params, c, mode="masked", max_new_tokens=4)
+    s1 = RAPServer(model, params, RLPolicy(c), mode="structural",
+                   max_new_tokens=4)
+    s2 = RAPServer(model, params, RLPolicy(c), mode="masked",
+                   max_new_tokens=4)
     r1 = s1.serve(prompt, budget)
     r2 = s2.serve(prompt, budget)
     assert np.array_equal(r1.mask, r2.mask)
@@ -142,7 +145,8 @@ def test_server_bucket_cache_reuse(tiny_model):
     qp = dqn.init_qnet(jax.random.key(1), 2 * model.cfg.n_layers + 4,
                        2 * model.cfg.n_layers + 1, 32)
     c = ctl.RAPController(model, params, batch, mm, qp)
-    srv = RAPServer(model, params, c, mode="structural", max_new_tokens=2)
+    srv = RAPServer(model, params, RLPolicy(c), mode="structural",
+                    max_new_tokens=2)
     prompt = np.asarray(batch["tokens"])[:, :16]
     budget = 0.85 * mm.dense_peak(2, 18)
     r1 = srv.serve(prompt, budget)
