@@ -1,11 +1,16 @@
 """Engine vs one-shot serving throughput on a Poisson trace.
 
-Replays the SAME ≥16-request Poisson arrival trace two ways per mode
-(masked | structural):
+Replays the SAME ≥16-request Poisson arrival trace through:
 
-  * **engine** — continuous batching through ``RAPEngine``: one shared
-    KV pool (admission-controlled), slot-batched decode over all running
-    requests, under the chosen pruning policy and scheduler;
+  * **engine/slot** — continuous batching through ``RAPEngine`` +
+    ``LocalExecutor``: one shared KV pool (admission-controlled),
+    slot-batched decode over all running requests, under the chosen
+    pruning policy and scheduler (per mode: masked | structural);
+  * **engine/paged** — the same trace through ``PagedExecutor``
+    (masked mode): physically paged KV with per-request page tables,
+    measuring what paging buys in *physical* internal fragmentation
+    (``measured_frag``: 1 − tokens-written / cache-bytes-allocated,
+    sampled per decode tick) at equal-or-better throughput;
   * **serial** — the historical one-shot path: ``RAPServer.serve()`` per
     request, each against its own instantaneous budget.
 
@@ -66,8 +71,8 @@ def main():
     from repro.core.workload import PoissonConfig, poisson_requests
     from repro.data import SyntheticCorpus
     from repro.models import registry
-    from repro.runtime import (EngineConfig, EngineRequest, RAPEngine,
-                               RAPServer)
+    from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
+                               RAPEngine, RAPServer)
 
     cfg = get_smoke_config(args.arch).replace(n_layers=args.layers)
     model = registry.build(cfg)
@@ -104,16 +109,18 @@ def main():
           f"(pool ≈ {args.pool_requests:.1f} dense requests), "
           f"policy={policy.name} scheduler={args.scheduler}")
 
-    rows = []
-    for mode in args.modes:
-        # ---- continuous batching
+    reqs = [EngineRequest(rid=f"q{i}", prompt=np.asarray(p, np.int32),
+                          arrival_t=trace[i].t)
+            for i, p in enumerate(prompts)]
+
+    def run_engine(mode, executor_kind):
+        executor = None
+        if executor_kind == "paged":
+            executor = PagedExecutor(model, params, max_active=args.slots)
         engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=args.max_new, max_active=args.slots,
             max_len=max_total, budget_bytes=budget),
-            scheduler=args.scheduler)
-        reqs = [EngineRequest(rid=f"q{i}", prompt=np.asarray(p, np.int32),
-                              arrival_t=trace[i].t)
-                for i, p in enumerate(prompts)]
+            scheduler=args.scheduler, executor=executor)
         if not args.no_warmup:      # steady-state: compiles amortize away
             for _ in range(5):
                 if engine.run(reqs).compile_events == 0:
@@ -122,12 +129,30 @@ def main():
         assert rep.rejected == 0, "trace should fit the pool eventually"
         assert (rep.pool["peak_reserved_bytes"]
                 <= rep.pool["capacity_bytes"] + 1e-6)
+        return rep
 
-        # ---- serial one-shot replay of the same trace
-        server = RAPServer(model, params, policy, mode=mode,
-                           max_new_tokens=args.max_new)
+    rows = []
+    # slot executor per requested mode; paged rides along in masked mode
+    # (the only mode it serves) so every bench run tracks the paged-vs-slot
+    # fragmentation and throughput delta. Heterogeneous-mixer archs
+    # (griffin/mamba) stay slot-only — PagedExecutor rejects them.
+    from repro.models.decoder import default_layout
+    layout = default_layout(cfg)
+    paged_ok = (len(layout) > 0
+                and all(s.mixer == "attn" and s.ffn == layout[0].ffn
+                        for s in layout))
+    run_matrix = [(m, "slot") for m in args.modes]
+    if "masked" in args.modes and paged_ok:
+        run_matrix.append(("masked", "paged"))
+    elif "masked" in args.modes:
+        print(f"[bench] skipping paged run: {args.arch} is not a uniform "
+              f"all-attention layout")
+    serial_cache = {}
+    for mode, executor_kind in run_matrix:
+        rep = run_engine(mode, executor_kind)
 
-        def serial_replay():
+        # ---- serial one-shot replay of the same trace (once per mode)
+        def serial_replay(server):
             # one-shot serving is sequential: request i starts at
             # max(previous finish, its arrival) — same arrival process the
             # engine sees, so both report tokens / makespan
@@ -143,13 +168,18 @@ def main():
                 fits.append(r.fits)
             return tokens / max(t, 1e-9), fits
 
-        if not args.no_warmup:
-            serial_replay()
-        serial_tps, serial_fits = serial_replay()
+        if mode not in serial_cache:
+            server = RAPServer(model, params, policy, mode=mode,
+                               max_new_tokens=args.max_new)
+            if not args.no_warmup:
+                serial_replay(server)
+            serial_cache[mode] = serial_replay(server)
+        serial_tps, serial_fits = serial_cache[mode]
 
         speedup = rep.tokens_per_s / max(serial_tps, 1e-9)
         row = {
             "mode": mode,
+            "executor": executor_kind,
             "engine_tok_s": round(rep.tokens_per_s, 1),
             "serial_tok_s": round(serial_tps, 1),
             "speedup": round(speedup, 2),
@@ -159,21 +189,39 @@ def main():
             "compiles": rep.compile_events,
             "pool_peak_mb": round(rep.pool["peak_reserved_bytes"] / 1e6, 3),
             "pool_frag": round(rep.pool["fragmentation"], 3),
+            "measured_frag": round(rep.measured_frag, 3),
         }
         rows.append(row)
-        print(f"[bench] {mode:10s} engine {row['engine_tok_s']:8.1f} tok/s  "
+        print(f"[bench] {mode:10s}/{executor_kind:5s} "
+              f"engine {row['engine_tok_s']:8.1f} tok/s  "
               f"serial {row['serial_tok_s']:8.1f} tok/s  "
               f"speedup ×{row['speedup']:.2f}  "
               f"queue {row['queue_delay_ms']:.1f} ms  "
-              f"fit-rate {row['fit_rate']:.2f}")
+              f"measured-frag {row['measured_frag']:.3f}")
         if speedup <= 1.0:
             print(f"[bench] WARNING: engine did not beat serial in {mode}")
+
+    by_exec = {(r["mode"], r["executor"]): r for r in rows}
+    slot, paged = by_exec.get(("masked", "slot")), by_exec.get(
+        ("masked", "paged"))
+    if slot and paged:
+        print(f"[bench] paged vs slot (masked): "
+              f"frag {paged['measured_frag']:.3f} vs "
+              f"{slot['measured_frag']:.3f}, "
+              f"tok/s {paged['engine_tok_s']:.1f} vs "
+              f"{slot['engine_tok_s']:.1f} "
+              f"(×{paged['engine_tok_s'] / max(slot['engine_tok_s'], 1e-9):.2f})")
+        if paged["measured_frag"] >= slot["measured_frag"]:
+            print("[bench] WARNING: paged fragmentation not below slot")
+        if paged["engine_tok_s"] < 0.9 * slot["engine_tok_s"]:
+            print("[bench] WARNING: paged throughput >10% below slot")
 
     os.makedirs(args.out, exist_ok=True)
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 1,
+        "schema": 2,        # v2: rows gained executor (slot|paged) +
+                            # measured_frag (physical KV fragmentation)
         "bench": "engine_throughput",
         "config": {
             "arch": args.arch, "layers": args.layers,

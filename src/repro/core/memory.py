@@ -175,6 +175,26 @@ class PoolAccounting:
         self.peak_in_use_bytes = max(self.peak_in_use_bytes,
                                      self.in_use_bytes)
 
+    def grow(self, reserved_delta: float, in_use_delta: float) -> None:
+        """Incremental variant of :meth:`reserve` for allocations that grow
+        over time (per-token page appends): unlike ``reserve``, the
+        ``in_use <= reserved`` consistency is an invariant of the *totals*,
+        not of each call — an append may raise in-use bytes without granting
+        a new page (the token lands in a partially filled page). Strict
+        only: the token-granular pool path never overcommits (overflow
+        pages would have no physical backing)."""
+        if not self.can_reserve(reserved_delta):
+            raise PoolExhausted(
+                f"grow {reserved_delta:.0f}B > available "
+                f"{self.available_bytes:.0f}B "
+                f"(capacity {self.capacity_bytes:.0f}B)")
+        self.reserved_bytes += reserved_delta
+        self.in_use_bytes += in_use_delta
+        self.peak_reserved_bytes = max(self.peak_reserved_bytes,
+                                       self.reserved_bytes)
+        self.peak_in_use_bytes = max(self.peak_in_use_bytes,
+                                     self.in_use_bytes)
+
     def release(self, reserved: float, in_use: float) -> None:
         self.reserved_bytes = max(self.reserved_bytes - reserved, 0.0)
         self.in_use_bytes = max(self.in_use_bytes - in_use, 0.0)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_decode_attention as _pdec
 from repro.kernels import rglru as _rg
 from repro.kernels import ssd as _ssd
 from repro.kernels import swiglu as _glu
@@ -39,6 +40,14 @@ def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
                      block_k: int = 512):
     return _dec.decode_attention(q, k, v, valid, softcap=softcap,
                                  block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           softcap: float = 0.0):
+    return _pdec.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                        lengths, softcap=softcap,
+                                        interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_t",

@@ -1,0 +1,138 @@
+"""Paged flash-decode Pallas TPU kernel: one query token vs a paged KV pool.
+
+The dense decode kernel (``decode_attention.py``) streams a *contiguous*
+``[B, S, K, D]`` cache — which forces the serving engine to materialize
+``max_len × max_active`` slot caches and eat their internal fragmentation.
+This kernel's KV operands are instead a **global page pool**
+``[n_pages, page_tokens, K, D]`` shared by every in-flight request, plus an
+int32 per-request **page table** ``[B, max_pages]``: request ``b``'s tokens
+``[ip·page_tokens, (ip+1)·page_tokens)`` live in physical page
+``page_table[b, ip]`` (vLLM-block style, one level of indirection).
+
+Grid ``(B, K_kv, max_pages)`` with the page dimension innermost
+(sequential). The page table and per-request lengths ride
+``PrefetchScalarGridSpec`` scalar prefetch, so the K/V BlockSpec *index
+maps* chase the table — ``(page_table[b, ip], 0, g, 0)`` — and the pages
+DMA straight from wherever they physically sit; no gather materializes a
+contiguous cache. The (m, l, acc) online-softmax scratch carry is identical
+to the dense kernel's split-KV reduction, so with
+``page_tokens == block_k`` and an in-order page table the two kernels
+execute the *same* f32 op sequence and agree **bitwise** (pinned in
+``tests/test_kernels.py``).
+
+Rows needing fewer than ``max_pages`` pages pad their table row with any
+valid page id (0 by convention); the ``kpos < length[b]`` mask turns those
+blocks into exact no-ops (``acc·1 + 0``) without branching.
+
+On CPU/tests the kernel runs in ``interpret=True`` mode (the
+``pallas-interpret`` CI job); the XLA fallback for production CPU serving
+lives in ``repro.models.attention.paged_decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+_CompilerParams = tpu_compiler_params()      # pallas API rename (jax<=0.4.x)
+
+NEG_INF = -2.0e38
+_LANES = 128
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
+            *, scale: float, softcap: float, page_tokens: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    n_ip = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)           # [page_tokens, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kpos = ip * page_tokens + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = jnp.broadcast_to(
+        alpha * l_sc[:, :1] + jnp.sum(p, axis=1, keepdims=True), l_sc.shape)
+    acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+
+    @pl.when(ip == n_ip - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           softcap: float = 0.0, interpret: bool = False):
+    """q: [B,1,H,D]; k_pages/v_pages: [n_pages, page_tokens, K, D];
+    page_table: int32 [B, max_pages]; lengths: int32 [B]. → [B,1,H,D].
+
+    Row ``b`` attends its first ``lengths[b]`` tokens, token ``t`` living at
+    ``(page_table[b, t // page_tokens], t % page_tokens)``. Unused table
+    entries must still be valid page ids (they are fetched, then masked).
+    """
+    B, _, H, D = q.shape
+    page_tokens, K = k_pages.shape[1], k_pages.shape[2]
+    max_pages = page_table.shape[1]
+    assert H % K == 0
+    G = H // K
+
+    qg = q[:, 0].reshape(B, K, G, D)                 # grouped query heads
+    page_table = jnp.asarray(page_table, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(D),
+                               softcap=softcap, page_tokens=page_tokens)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # page_table, lengths
+        grid=(B, K, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, g, ip, tab, ln: (b, g, 0, 0)),
+            pl.BlockSpec((1, page_tokens, 1, D),
+                         lambda b, g, ip, tab, ln: (tab[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, page_tokens, 1, D),
+                         lambda b, g, ip, tab, ln: (tab[b, ip], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, g, ip, tab, ln: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="rap_paged_decode_attention",
+    )(page_table, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, D)

@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §4):
+Two serving paths (DESIGN.md §5):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -34,6 +34,12 @@ def main():
                          "random | mha_drop | ffn_skip | oneshot | dense)")
     ap.add_argument("--scheduler", choices=("fifo", "sjf", "priority"),
                     default="fifo", help="engine admission ordering")
+    ap.add_argument("--executor", choices=("local", "paged"),
+                    default="local",
+                    help="execution backend: 'local' = slot-batched caches "
+                         "(reference, any mode/arch); 'paged' = physically "
+                         "paged KV pool with per-request page tables "
+                         "(masked mode, uniform-attention archs)")
     ap.add_argument("--serial", action="store_true",
                     help="one-shot RAPServer replay instead of the engine")
     ap.add_argument("--episodes", type=int, default=20)
@@ -55,7 +61,14 @@ def main():
     from repro.core.policy import available_policies, make_policy
     from repro.data import SyntheticCorpus
     from repro.models import registry
-    from repro.runtime import EngineConfig, EngineRequest, RAPEngine, RAPServer
+    from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
+                               RAPEngine, RAPServer)
+
+    if args.executor == "paged" and args.serial:
+        ap.error("--executor paged drives the batching engine; drop --serial")
+    if args.executor == "paged" and args.mode != "masked":
+        ap.error("--executor paged serves masked mode (structural paged "
+                 "serving is a ROADMAP item); add --mode masked")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = registry.build(cfg)
@@ -116,9 +129,13 @@ def main():
     max_b = max(r.batch for r in reqs)
     budget = (mm.param_bytes(full)
               + args.pool_requests * mm.state_bytes(full, max_b, max_total))
+    executor = None
+    if args.executor == "paged":
+        executor = PagedExecutor(model, params, max_active=slots)
     engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
-        max_len=max_total, budget_bytes=budget), scheduler=args.scheduler)
+        max_len=max_total, budget_bytes=budget), scheduler=args.scheduler,
+        executor=executor)
     ereqs = []
     for i, r in enumerate(reqs):
         sql = min(r.seq_len, 256)
@@ -128,7 +145,8 @@ def main():
         ereqs.append(EngineRequest(rid=f"req{i}", prompt=prompt,
                                    arrival_t=r.t - reqs[0].t,
                                    priority=0 if sql <= 128 else 1))
-    print(f"engine[{policy.name}/{args.scheduler}]: {len(ereqs)} requests "
+    print(f"engine[{policy.name}/{args.scheduler}/{args.executor}]: "
+          f"{len(ereqs)} requests "
           f"(batch {min(r.batch for r in reqs)}–{max(r.batch for r in reqs)}),"
           f" {slots} slots, shared pool {budget/1e6:.1f}MB total budget")
     rep = engine.run(ereqs)
@@ -149,6 +167,7 @@ def main():
     print(f"pool: peak {rep.pool['peak_reserved_bytes']/1e6:.2f}MB "
           f"of {rep.pool['capacity_bytes']/1e6:.2f}MB, "
           f"frag {rep.pool['fragmentation']:.2f}, "
+          f"measured frag {rep.measured_frag:.2f}, "
           f"overcommits {int(rep.pool['overcommit_events'])}")
     print("engine stats:", engine.stats())
 

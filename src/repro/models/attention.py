@@ -221,6 +221,62 @@ def load_kv(entry: dict, dtype):
     return entry["k"].astype(dtype), entry["v"].astype(dtype)
 
 
+def paged_decode_attention(params, cfg, x, kv: dict, page_table, pos, *,
+                           impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    """One-token decode against a *paged* KV pool (one layer's slice).
+
+    x: [B,1,D]; kv: {"k","v"} page pools [n_pages, page_tokens, K, Dh]
+    shared by every in-flight request; page_table: int32 [B, max_pages]
+    mapping row b's token t to page ``page_table[b, t // page_tokens]``;
+    pos: int32 [B] per-row write positions. Returns (out [B,1,D], kv').
+
+    The new token's K/V is scattered into its owning page (rows own
+    disjoint pages, so the scatter is conflict-free), then attention runs
+    either through the Pallas paged flash-decode kernel (``impl='pallas'``,
+    the TPU path — BlockSpec index maps chase the page table, no gather)
+    or an XLA gather fallback that materializes ``[B, max_pages ×
+    page_tokens]`` and reuses the dense softmax (the CPU serving path).
+    int8 KV pools are not yet supported (scales would need their own pool).
+    """
+    if "ks" in kv:
+        raise NotImplementedError("paged decode does not support int8 KV "
+                                  "pools yet (per-page scales)")
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    page_tokens = kv["k"].shape[1]
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
+    if cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    # scatter the new token's KV into its page slot
+    rows = jnp.arange(B)
+    page_ids = page_table[rows, pos // page_tokens]
+    offs = pos % page_tokens
+    kv = dict(kv)
+    kv["k"] = kv["k"].at[page_ids, offs].set(k[:, 0].astype(kv["k"].dtype))
+    kv["v"] = kv["v"].at[page_ids, offs].set(v[:, 0].astype(kv["v"].dtype))
+    lengths = pos + 1
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(q, kv["k"], kv["v"], page_table,
+                                          lengths,
+                                          softcap=cfg.logit_softcap)
+    else:
+        # gather fallback: page_table indexes the pool back into a
+        # contiguous per-row view [B, max_pages*page_tokens, K, Dh]
+        S = page_table.shape[1] * page_tokens
+        ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
+        cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
+        valid = jnp.arange(S)[None, :] < lengths[:, None]      # [B, S]
+        out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype),
+                    valid[:, None, None, :])
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(B, 1, -1),
+                   params["wo"].astype(x.dtype))
+    return y, kv
+
+
 def decode_attention(params, cfg, x, kv: dict, pos, *, window: int = 0,
                      impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x: [B,1,D]; kv: cache entry (no layer axis), leaves

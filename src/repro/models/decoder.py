@@ -649,3 +649,62 @@ def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
     logits = _unembed(params, cfg, h)
     cache["pos"] = pos + 1
     return logits, cache
+
+
+def paged_decode_step(params, cfg, pools: dict, page_table, pos, tokens, *,
+                      gates=None, impl: str = "xla",
+                      layout=None) -> Tuple[jnp.ndarray, dict]:
+    """One autoregressive step against a *paged* KV pool.
+
+    pools: {"k","v"} global page arrays [L, n_pages, page_tokens, K, Dh]
+    (one pool slice per attention layer, stacked — a page id is valid at
+    every layer); page_table: int32 [B, max_pages]; pos: int32 [B] per-row
+    write positions; tokens: [B, 1]. Returns (logits [B,1,Vp], pools').
+
+    Only uniform all-attention layouts are supported (the llama/gemma/qwen
+    families the paper evaluates): heterogeneous mixers keep their state in
+    per-request slot caches and stay on :func:`decode_step` — paging
+    recurrent/SSD state is a different (fixed-size) problem. Gates may be
+    [L] (one-shot) or [L, B] (per-slot keep-masks), as in ``decode_step``.
+    The pool arrays ride the layer scan's carry with per-layer
+    dynamic(-update)-slice, aliasing the donated inputs exactly like the
+    dense decode path.
+    """
+    layout = layout or default_layout(cfg)
+    if not (len(layout) > 0
+            and all(s.mixer == "attn" and s.ffn == layout[0].ffn
+                    for s in layout)):
+        raise NotImplementedError(
+            "paged decode serves uniform all-attention layouts; "
+            f"got mixers {sorted({str(s.mixer) for s in layout})} — use "
+            "decode_step (slot caches) for heterogeneous models")
+    L = len(layout)
+    gates = gates or _ones_gates(L)
+    pos = jnp.asarray(pos, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    h = _embed(params, cfg, tokens, None)
+    mixer_stack = params["stacks"]["attn"]
+    ffn_stack = params["stacks"][layout[0].ffn] if layout[0].ffn else None
+
+    def body(carry, xs):
+        h, pk, pv = carry
+        pm, pf, gm, gf, i = xs
+        hn = layers.apply_norm(cfg, pm["norm"], h)
+        kv = {"k": jax.lax.dynamic_index_in_dim(pk, i, 0, keepdims=False),
+              "v": jax.lax.dynamic_index_in_dim(pv, i, 0, keepdims=False)}
+        out, kv = attention.paged_decode_attention(pm, cfg, hn, kv,
+                                                   page_table, pos,
+                                                   impl=impl)
+        pk = jax.lax.dynamic_update_index_in_dim(pk, kv["k"], i, 0)
+        pv = jax.lax.dynamic_update_index_in_dim(pv, kv["v"], i, 0)
+        h = h + _bgate(gm, h) * out
+        if pf is not None:
+            h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf, cfg, h,
+                                               impl=impl)
+        return (h, pk, pv), None
+
+    xs = (mixer_stack, ffn_stack, gates["mixer"], gates["ffn"],
+          jnp.arange(L, dtype=jnp.int32))
+    (h, pk, pv), _ = jax.lax.scan(body, (h, pools["k"], pools["v"]), xs)
+    logits = _unembed(params, cfg, h)
+    return logits, {"k": pk, "v": pv}

@@ -2,8 +2,10 @@ from repro.runtime import steps
 from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
                                   RAPEngine, RequestResult)
 from repro.runtime.executor import (LocalExecutor, ModelExecutor,
+                                    PagedExecutor, PagedGroup,
                                     ShardedExecutor, SlotGroup)
-from repro.runtime.kv_pool import KVPool, PageAllocation, PoolExhausted
+from repro.runtime.kv_pool import (KVPool, PageAllocation, PoolExhausted,
+                                   TokenAllocation)
 from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
                                      PriorityScheduler, Scheduler,
                                      SchedulerOutput, SJFScheduler,
@@ -13,7 +15,8 @@ from repro.runtime.trainer import Trainer, TrainerConfig
 
 __all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer", "ServeResult",
            "RAPEngine", "EngineConfig", "EngineRequest", "EngineReport",
-           "RequestResult", "KVPool", "PageAllocation", "PoolExhausted",
-           "Scheduler", "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
-           "PriorityScheduler", "SCHEDULERS", "make_scheduler",
-           "ModelExecutor", "LocalExecutor", "ShardedExecutor", "SlotGroup"]
+           "RequestResult", "KVPool", "PageAllocation", "TokenAllocation",
+           "PoolExhausted", "Scheduler", "SchedulerOutput", "FIFOScheduler",
+           "SJFScheduler", "PriorityScheduler", "SCHEDULERS",
+           "make_scheduler", "ModelExecutor", "LocalExecutor",
+           "PagedExecutor", "PagedGroup", "ShardedExecutor", "SlotGroup"]

@@ -18,7 +18,12 @@ orchestration loop over four seams:
   * :class:`~repro.runtime.executor.ModelExecutor` — how the mask
     executes: slot groups, prefill, fused bucketed decode;
   * :class:`~repro.runtime.kv_pool.KVPool` — whether the bytes exist:
-    page-granular admission against ``budget − resident params``.
+    page-granular admission against ``budget − resident params``. With a
+    paged executor (``PagedExecutor``) the pool additionally OWNS the
+    physical page arrays: admission charges the request's worst-case page
+    count as a commitment, prefill writes into granted pages, each decoded
+    token appends a page when it crosses a boundary (``KVPool.extend``),
+    and completion frees the pages.
 
 One iteration of :meth:`RAPEngine._tick`:
 
@@ -192,6 +197,10 @@ class EngineReport:
     decode_iters: int
     compile_events: int
     pool: Dict[str, float]
+    # measured physical KV fragmentation: mean over decode ticks of
+    # 1 − used_bytes / physical_bytes from the executor's kv_utilization()
+    # (0.0 when the backend does not track it)
+    measured_frag: float = 0.0
 
     def result(self, rid: str) -> RequestResult:
         for r in self.results:
@@ -251,6 +260,17 @@ class RAPEngine:
             model, params, mode=self.cfg.mode, max_active=self.cfg.max_active,
             kv_dtype=self.cfg.kv_dtype,
             decode_buckets=self.cfg.decode_buckets)
+        self._paged = bool(getattr(self.executor, "paged", False))
+        if self._paged:
+            if self.cfg.mode != "masked":
+                raise ValueError(
+                    "a paged executor serves masked mode only (structural "
+                    "paged serving is a ROADMAP item); set "
+                    "EngineConfig(mode='masked') or use LocalExecutor")
+            if self.cfg.admission != "strict":
+                raise ValueError(
+                    "a paged executor requires strict admission: overflow "
+                    "pages have no physical backing to write KV into")
         self._full_mask = masks_lib.full_mask(self.mcfg.n_layers)
         self.resident_param_bytes = self.mm.param_bytes(self._full_mask)
         self.pool: Optional[KVPool] = None
@@ -263,6 +283,7 @@ class RAPEngine:
         self._t0 = 0.0
         self._skew = 0.0
         self._budget = self.cfg.budget_bytes
+        self._frag_samples: List[float] = []
 
     # ------------------------------------------------------------ capacity
     def ensure_capacity(self, batch: int, total_len: int) -> None:
@@ -298,14 +319,21 @@ class RAPEngine:
 
     # ---------------------------------------------------------------- pool
     def _make_pool(self, budget_bytes: float) -> KVPool:
-        page = self.cfg.page_bytes or default_page_bytes(
-            self.mm, self.cfg.tokens_per_page)
+        if self._paged:
+            # physical page size is dictated by the model's KV geometry
+            # (cfg.page_bytes would desync the ledger from the arrays)
+            page = self.executor.page_phys_bytes(self.cfg.tokens_per_page)
+        else:
+            page = self.cfg.page_bytes or default_page_bytes(
+                self.mm, self.cfg.tokens_per_page)
         cap = budget_bytes - self.resident_param_bytes
         if cap < page and self.cfg.admission == "strict":
             raise ValueError(
                 f"budget {budget_bytes:.0f}B leaves no KV pool after "
                 f"resident params ({self.resident_param_bytes:.0f}B)")
-        return KVPool(max(cap, 0.0), page_bytes=page, mm=self.mm)
+        return KVPool(max(cap, 0.0), page_bytes=page, mm=self.mm,
+                      tokens_per_page=(self.cfg.tokens_per_page
+                                       if self._paged else None))
 
     # ------------------------------------------------------------- serving
     def run(self, requests: List[EngineRequest], *,
@@ -313,7 +341,10 @@ class RAPEngine:
         """Serve a trace to completion and report aggregate stats."""
         budget = self.cfg.budget_bytes if budget_bytes is None else budget_bytes
         self.pool = self._make_pool(budget)
+        if self._paged:
+            self.executor.bind_pool(self.pool, self.cfg.max_len)
         self._budget = budget
+        self._frag_samples: List[float] = []
         self._pending = sorted(requests, key=lambda r: r.arrival_t)
         self.scheduler.clear()
         self._running.clear()
@@ -346,7 +377,9 @@ class RAPEngine:
             decode_iters=self._decode_iters,
             compile_events=(self.executor.compile_events
                             - self._compiles_at_run_start),
-            pool=self.pool.stats())
+            pool=self.pool.stats(),
+            measured_frag=(float(np.mean(self._frag_samples))
+                           if self._frag_samples else 0.0))
 
     # ------------------------------------------------------------ one tick
     def _tick(self) -> None:
@@ -440,7 +473,21 @@ class RAPEngine:
                 n_running=len(self._running), now=self._now()))
         kv_bytes = self.mm.state_bytes(d.mask, b, total)
         force = self.cfg.admission == "force"
-        if not force:
+        if self._paged:
+            # page-granular admission: the paged path physically stores
+            # every layer's KV whatever the mask says (masked-mode gates
+            # save compute, not memory), so the charge is the request's
+            # worst-case PAGE commitment, not its analytical byte count —
+            # the honest signal the policy's budget observation reflects
+            if not self.pool.fits_capacity_tokens(b, total):
+                self._reject(
+                    req, f"{self.pool.pages_for_tokens(b, total)} pages "
+                         f"({b}×{total} tokens) can never fit pool "
+                         f"capacity of {self.pool.n_pages} pages")
+                return "rejected"
+            if not self.pool.can_alloc_tokens(b, total):
+                return "defer"
+        elif not force:
             if not self.pool.fits_capacity(kv_bytes):
                 self._reject(req, f"state {kv_bytes:.0f}B can never fit "
                                   f"pool capacity "
@@ -454,7 +501,17 @@ class RAPEngine:
         if len(free) < b:
             return "defer"
         slots = free[:b]
-        self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
+        if self._paged:
+            # grant pages backing the prompt now; commit the decode tail.
+            # The ledger's in-use side stays analytical (the Eq. (3)–(4)
+            # bytes) as a cross-check against the physical reservation.
+            prompt_bytes = self.mm.state_bytes(d.mask, b, S)
+            rate = max(kv_bytes - prompt_bytes, 0.0) / max(total - S, 1)
+            self.pool.alloc_tokens(req.rid, b, S, max_tokens=total,
+                                   in_use_bytes=prompt_bytes,
+                                   in_use_per_token=rate)
+        else:
+            self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
         first = self.executor.prefill_into(group, slots, req.rid,
                                            np.asarray(req.prompt, np.int32),
                                            d.mask)
@@ -515,6 +572,9 @@ class RAPEngine:
                 run.out.append(nxt[np.asarray(run.slots)])
         if stepped:
             self._decode_iters += 1
+            used, phys = self.executor.kv_utilization()
+            if phys > 0:
+                self._frag_samples.append(1.0 - used / phys)
         for run in list(self._running.values()):
             if len(run.out) >= run.max_new:
                 self._complete(run)

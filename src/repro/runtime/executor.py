@@ -16,15 +16,28 @@ Executors:
     occupied slots are gathered into the smallest bucket that holds them,
     stepped, and scattered back, so a lightly loaded engine does not pay
     full-slot-count compute per token.
+  * :class:`PagedExecutor` — physically paged KV execution (DESIGN.md §3
+    "Paged KV"): requests own *pages* of a global KV pool
+    (``repro.runtime.kv_pool.KVPool`` holds the page arrays), prefill
+    writes KV straight into granted pages, and one fused decode step
+    advances any mix of cache lengths through a per-request page table —
+    no ``max_len × max_active`` slot caches, no pow2 cache-length groups,
+    and page-granular (not slot-granular) internal fragmentation.
   * :class:`ShardedExecutor` — mesh placement via
     ``repro.parallel.sharding``: places parameters with the production
     partition rules and lowers a sharded decode step for cost analysis
     (``launch/rap_sweep.py``). The slot-batched serve path on a mesh is a
     ROADMAP item; serve-path methods raise ``NotImplementedError`` with
     that pointer.
+
+``LocalExecutor`` remains the reference backend: it serves every layout
+(heterogeneous mixers keep per-request slot state) and both pruning modes,
+and the paged path's token-equivalence is pinned against it in
+``tests/test_engine.py``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -34,7 +47,22 @@ import numpy as np
 from repro.core import masks as masks_lib
 from repro.models import decoder
 
-__all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "ShardedExecutor"]
+__all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "PagedExecutor",
+           "PagedGroup", "ShardedExecutor"]
+
+
+def _bucket_batch(occ: List[int], free: List[int], n_slots: int,
+                  buckets: Sequence[int]) -> Optional[List[int]]:
+    """Slot indices to step this iteration: the occupied slots padded with
+    free ones up to the smallest bucket that holds them, or None for the
+    full-width path. Padding uses *distinct free* slots so a scatter-back
+    never writes one index twice; their compute is garbage but unobservable
+    (slot rows are independent and re-seeded on placement)."""
+    n = len(occ)
+    for b in sorted(set(buckets)):
+        if n <= b < n_slots:
+            return occ + free[: b - n]
+    return None
 
 
 # ------------------------------------------------------------------- groups
@@ -126,18 +154,8 @@ class SlotGroup:
 
     # -------------------------------------------------------------- decode
     def _decode_batch(self, buckets: Sequence[int]) -> Optional[List[int]]:
-        """Slot indices to step this iteration: the occupied slots padded
-        with free ones up to the smallest bucket that holds them, or None
-        for the full-width path. Padding uses *distinct free* slots so the
-        scatter-back never writes one index twice; their compute is garbage
-        but unobservable (rows are independent and re-seeded on place)."""
-        occ = self.occupied_slots()
-        n = len(occ)
-        for b in sorted(set(buckets)):
-            if n <= b < self.n_slots:
-                free = self.free_slots()
-                return occ + free[: b - n]
-        return None
+        return _bucket_batch(self.occupied_slots(), self.free_slots(),
+                             self.n_slots, buckets)
 
     def decode_once(self, buckets: Sequence[int] = ()) -> Tuple[np.ndarray,
                                                                 bool]:
@@ -192,9 +210,16 @@ class ModelExecutor:
     ``group_for`` resolves a keep-mask (+ cache length) to the slot group
     that will host the request; ``prefill_into`` seats a prefilled request;
     ``decode`` advances one group one token. ``compile_events`` counts new
-    executables (prefill shapes + decode batch buckets)."""
+    executables (prefill shapes + decode batch buckets).
+
+    ``paged`` marks backends whose KV lives in a :class:`KVPool`'s physical
+    page arrays — the engine switches admission to the token-granular pool
+    API and calls ``bind_pool`` per run. ``kv_utilization`` reports
+    (used_bytes, physical_bytes) of the live KV storage so benchmarks can
+    measure *physical* internal fragmentation, not just the ledger's."""
 
     compile_events: int = 0
+    paged: bool = False
 
     def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
         raise NotImplementedError
@@ -219,6 +244,14 @@ class ModelExecutor:
     def evict_all(self) -> None:
         for g in self.groups():
             g.evict(list(range(g.n_slots)))
+
+    def kv_utilization(self) -> Tuple[float, float]:
+        """(used_bytes, physical_bytes) of live KV storage; (0, 0) when the
+        backend does not track it. ``used`` counts tokens actually written
+        by resident requests; ``physical`` counts the allocated arrays
+        backing them — their ratio is the *measured* (not analytical)
+        internal fragmentation."""
+        return 0.0, 0.0
 
     def stats(self) -> Dict[str, int]:
         return {"compile_events": self.compile_events}
@@ -331,6 +364,31 @@ class LocalExecutor(ModelExecutor):
             self.compile_events += 1
         return nxt, new
 
+    # ---------------------------------------------------------- utilization
+    def kv_utilization(self) -> Tuple[float, float]:
+        """Slot caches are dense ``[n_slots, cache_len]`` arrays: physical
+        bytes exist for every minted group whether or not its slots are
+        occupied, and an occupied slot pins ``cache_len`` tokens while using
+        only its current position. Only attention KV (the per-token state)
+        is counted; fixed-size recurrent state is excluded from both
+        sides."""
+        used = phys = 0.0
+        for g in self.groups():
+            entry = g.cache.get("attn")
+            if entry is None:     # windowed/recurrent state is fixed-size
+                continue
+            attn_bytes = sum(int(v.size) * v.dtype.itemsize
+                             for v in entry.values())
+            if attn_bytes == 0:
+                continue
+            phys += attn_bytes
+            occ = g.occupied_slots()
+            if occ:
+                per_tok = attn_bytes / (g.n_slots * g.cache_len)
+                pos = np.asarray(g.cache["pos"])[np.asarray(occ)]
+                used += float(pos.sum()) * per_tok
+        return used, phys
+
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
         return {
@@ -342,6 +400,298 @@ class LocalExecutor(ModelExecutor):
             "prefill_executables": len(self._prefill_fns),
             "masked_prefill_executables": sum(
                 1 for k in self._prefill_fns if k[0] == "masked"),
+            "compile_events": self.compile_events,
+        }
+
+
+# ------------------------------------------------------------------- paged
+class PagedGroup:
+    """One paged executable family: occupancy + page tables, no slot cache.
+
+    Satisfies the slice of the ``SlotGroup`` surface the engine touches
+    (``free_slots`` / ``occupied_slots`` / ``occupied`` / ``evict`` /
+    ``n_slots`` / ``key`` / ``mask``). KV lives in the bound pool's page
+    arrays; this object owns only the host-side per-slot metadata: the
+    int32 page-table rows, write positions, next tokens, and gates."""
+
+    def __init__(self, cfg_model, n_slots: int, max_row_pages: int,
+                 scratch_page: int):
+        self.key = "paged"
+        self.mask = None
+        self.cache_len = 0             # no dense cache — pages grow per token
+        self.n_slots = n_slots
+        self.max_row_pages = max_row_pages
+        self.scratch_page = scratch_page
+        self.occupants: List[Optional[str]] = [None] * n_slots
+        # padded decode rows write their garbage KV into the scratch page
+        self.table = np.full((n_slots, max_row_pages), scratch_page, np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.tokens = np.zeros((n_slots,), np.int32)
+        L = cfg_model.n_layers
+        self._gates_np = np.ones((2, L, n_slots), np.float32)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupants) if o is None]
+
+    def occupied_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.occupants) if o is not None]
+
+    def occupied(self) -> bool:
+        return any(o is not None for o in self.occupants)
+
+    def evict(self, slots: List[int]) -> None:
+        for s in slots:
+            self.occupants[s] = None
+            self.table[s] = self.scratch_page
+            self.pos[s] = 0
+            self.tokens[s] = 0
+            self._gates_np[:, :, s] = 1.0
+
+
+class PagedExecutor(ModelExecutor):
+    """Physically paged KV execution (masked mode).
+
+    The engine's :class:`~repro.runtime.kv_pool.KVPool` owns the page
+    arrays (``bind_pool`` materializes them at pool capacity, once per
+    run); this executor owns the executables around them:
+
+      * **prefill** runs the gated full-sequence pass with its cache sized
+        to the request's granted pages and scatters the KV *directly into
+        those pages* inside the same jitted call (the pool arrays are
+        donated through it);
+      * **decode** batches any mix of cache lengths through one fused
+        paged step (``repro.models.decoder.paged_decode_step``): per-slot
+        page-table rows + write positions replace the pow2 cache-length
+        group machinery entirely — there is ONE group regardless of
+        request length, and a new token appends a page via
+        ``KVPool.extend`` only when it crosses a page boundary.
+
+    Dynamic decode-batch buckets work as in ``LocalExecutor``: occupied
+    slots are stepped in the smallest bucket that holds them, padded with
+    free slots whose page-table rows point at the pool's scratch page (so
+    their garbage writes land in a write sink no request reads).
+
+    Masked mode only: structural paged serving (compacted layer stacks
+    over a shared pool) is a ROADMAP item. Uniform all-attention layouts
+    only, and int8 KV pools are not yet supported — ``LocalExecutor`` is
+    the reference backend for everything else.
+    """
+
+    paged = True
+
+    def __init__(self, model, params, *, mode: str = "masked",
+                 max_active: int = 8, kv_dtype=None,
+                 decode_buckets: Sequence[int] = (1, 2, 4, 8)):
+        if mode != "masked":
+            raise NotImplementedError(
+                f"PagedExecutor serves masked mode only (got {mode!r}); "
+                "structural paged serving is a ROADMAP item — use "
+                "LocalExecutor")
+        layout = decoder.default_layout(model.cfg)
+        if not (len(layout) > 0
+                and all(s.mixer == "attn" and s.ffn == layout[0].ffn
+                        for s in layout)):
+            raise NotImplementedError(
+                "PagedExecutor serves uniform all-attention layouts; "
+                f"{model.cfg.name!r} mixes "
+                f"{sorted({str(s.mixer) for s in layout})} — use "
+                "LocalExecutor (slot caches) for heterogeneous models")
+        if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+            raise NotImplementedError(
+                "int8 KV pools need per-page scale pools (ROADMAP); use "
+                "LocalExecutor for kv_dtype=int8")
+        self.model = model
+        self.mcfg = model.cfg
+        self.params = params
+        self.mode = "masked"
+        self.max_active = int(max_active)
+        self.kv_dtype = kv_dtype or model.cfg.jnp_dtype()
+        self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
+        self.compile_events = 0
+        self.pool = None               # bound per engine run
+        self._group: Optional[PagedGroup] = None
+        self._prefill_fns: Dict[Tuple, Any] = {}
+        self._decode_widths: set = set()
+        # "pallas" routes decode through the paged flash-decode kernel on
+        # TPU; elsewhere the XLA gather fallback is the fast path (the
+        # kernel still runs in CI via interpret-mode equivalence tests)
+        self._impl = ("pallas" if jax.default_backend() == "tpu" else "xla")
+        cfg = self.mcfg
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def _step(p, kp, vp, table, pos, tok, gm, gf):
+            logits, pools = decoder.paged_decode_step(
+                p, cfg, {"k": kp, "v": vp}, table, pos, tok,
+                gates={"mixer": gm, "ffn": gf}, impl=self._impl)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, pools["k"], pools["v"]
+
+        self._step = _step
+
+    # ------------------------------------------------------------- binding
+    def page_phys_bytes(self, tokens_per_page: int) -> int:
+        """Exact bytes of one physical page across all layers (K and V)."""
+        cfg = self.mcfg
+        itemsize = jnp.dtype(self.kv_dtype).itemsize
+        return (2 * cfg.n_layers * int(tokens_per_page) * cfg.n_kv_heads
+                * cfg.dh * itemsize)
+
+    def bind_pool(self, pool, max_len: int) -> None:
+        """Attach this run's KVPool: materialize its page arrays and size
+        the page-table width for ``max_len``-token requests."""
+        pool.allocate_physical(n_layers=self.mcfg.n_layers,
+                               n_kv_heads=self.mcfg.n_kv_heads,
+                               head_dim=self.mcfg.dh, dtype=self.kv_dtype)
+        self.pool = pool
+        self.max_row_pages = -(-int(max_len) // pool.tokens_per_page)
+        self._group = None
+
+    # ------------------------------------------------------------ capacity
+    def set_max_active(self, n_slots: int) -> None:
+        if int(n_slots) == self.max_active:
+            return
+        self.max_active = int(n_slots)
+        self._group = None
+
+    def drop_groups(self) -> None:
+        self._group = None
+
+    # -------------------------------------------------------------- groups
+    def groups(self) -> List[PagedGroup]:
+        return [self._group] if self._group is not None else []
+
+    def group_for(self, mask: np.ndarray, cache_len: int) -> PagedGroup:
+        """One group hosts every request: pages make cache length a
+        per-slot property, so there is nothing to key groups by."""
+        if self.pool is None:
+            raise RuntimeError("PagedExecutor has no bound pool — the "
+                               "engine calls bind_pool() per run")
+        if self._group is None:
+            self._group = PagedGroup(self.mcfg, self.max_active,
+                                     self.max_row_pages,
+                                     self.pool.scratch_page)
+        return self._group
+
+    # ------------------------------------------------------------- prefill
+    def _prefill_fn(self, b: int, S: int, npg: int):
+        key = (b, S, npg)
+        if key not in self._prefill_fns:
+            cfg = self.mcfg
+            pt = self.pool.tokens_per_page
+            L = cfg.n_layers
+
+            @functools.partial(jax.jit, donate_argnums=(4, 5))
+            def fn(p, tokens, gm, gf, kp, vp, rows):
+                logits, cache = decoder.prefill(
+                    p, cfg, tokens, npg * pt,
+                    gates={"mixer": gm, "ffn": gf}, kv_dtype=self.kv_dtype)
+                k = cache["attn"]["k"].reshape(L, b, npg, pt, *kp.shape[3:])
+                v = cache["attn"]["v"].reshape(L, b, npg, pt, *vp.shape[3:])
+                kp = kp.at[:, rows].set(k.astype(kp.dtype))
+                vp = vp.at[:, rows].set(v.astype(vp.dtype))
+                return logits, kp, vp
+
+            self._prefill_fns[key] = fn
+            self.compile_events += 1
+        return self._prefill_fns[key]
+
+    def prefill_into(self, group: PagedGroup, slots: List[int], rid: str,
+                     prompt: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Prefill the request, writing its KV straight into the pages the
+        pool granted at admission; seat its rows in ``slots``."""
+        b, S = prompt.shape
+        rows = self.pool.row_pages(rid)            # [b][npg] page ids
+        npg = len(rows[0])
+        rows_np = np.asarray(rows, np.int32)
+        fn = self._prefill_fn(b, S, npg)
+        g = masks_lib.mask_to_gates(mask)
+        logits, kp, vp = fn(self.params, jnp.asarray(prompt, jnp.int32),
+                            g["mixer"], g["ffn"],
+                            self.pool.k_pages, self.pool.v_pages,
+                            jnp.asarray(rows_np))
+        self.pool.k_pages, self.pool.v_pages = kp, vp
+        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        gates = masks_lib.mask_to_gates(mask)
+        gm, gf = np.asarray(gates["mixer"]), np.asarray(gates["ffn"])
+        for i, s in enumerate(slots):
+            group.occupants[s] = rid
+            group.table[s, :npg] = rows_np[i]
+            group.table[s, npg:] = group.scratch_page
+            group.pos[s] = S
+            group.tokens[s] = first[i]
+            group._gates_np[0, :, s] = gm
+            group._gates_np[1, :, s] = gf
+        return first
+
+    # -------------------------------------------------------------- decode
+    def _decode_batch(self, group: PagedGroup) -> List[int]:
+        idx = _bucket_batch(group.occupied_slots(), group.free_slots(),
+                            group.n_slots, self.decode_buckets)
+        # full width: every slot steps (free rows write the scratch page)
+        return idx if idx is not None else list(range(group.n_slots))
+
+    def decode(self, group: PagedGroup) -> Tuple[np.ndarray, bool]:
+        """Advance every occupied slot one token. Before stepping, each
+        resident request appends one token to its pool allocation —
+        crossing a page boundary grants fresh pages whose ids extend the
+        slot's page-table row (this is where per-token paging happens)."""
+        occ = group.occupied_slots()
+        seen = set()
+        for s in occ:
+            rid = group.occupants[s]
+            if rid in seen:
+                continue
+            seen.add(rid)
+            rid_slots = [t for t in occ if group.occupants[t] == rid]
+            new_rows = self.pool.extend(rid, 1)    # [batch][0 or 1] pages
+            if any(new_rows):
+                npg_now = len(self.pool.row_pages(rid)[0])
+                for i, t in enumerate(rid_slots):
+                    for j, page in enumerate(new_rows[i]):
+                        group.table[t, npg_now - len(new_rows[i]) + j] = page
+        idx = self._decode_batch(group)
+        width = len(idx)
+        new = width not in self._decode_widths
+        self._decode_widths.add(width)
+        if new:
+            self.compile_events += 1
+        iidx = np.asarray(idx)
+        nxt, kp, vp = self._step(
+            self.params, self.pool.k_pages, self.pool.v_pages,
+            jnp.asarray(group.table[iidx]), jnp.asarray(group.pos[iidx]),
+            jnp.asarray(group.tokens[iidx])[:, None],
+            jnp.asarray(group._gates_np[0][:, iidx]),
+            jnp.asarray(group._gates_np[1][:, iidx]))
+        self.pool.k_pages, self.pool.v_pages = kp, vp
+        nxt = np.asarray(nxt)
+        out = np.zeros((group.n_slots,), np.int32)
+        for j, s in enumerate(idx):
+            if group.occupants[s] is not None:
+                out[s] = nxt[j]
+                group.tokens[s] = nxt[j]
+                group.pos[s] += 1
+        return out, new
+
+    # ---------------------------------------------------------- utilization
+    def kv_utilization(self) -> Tuple[float, float]:
+        """used = tokens actually written by resident requests; physical =
+        bytes of the pages they hold. Waste is bounded by one partial page
+        per row — the whole point of paging."""
+        if self.pool is None or self._group is None:
+            return 0.0, 0.0
+        pt = self.pool.tokens_per_page
+        tok_bytes = self.pool.page_bytes / pt
+        occ = self._group.occupied_slots()
+        used = float(self._group.pos[np.asarray(occ)].sum()) * tok_bytes \
+            if occ else 0.0
+        return used, self.pool.bytes_reserved
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        return {
+            "groups": 1 if self._group is not None else 0,
+            "prefill_executables": len(self._prefill_fns),
+            "decode_widths": len(self._decode_widths),
             "compile_events": self.compile_events,
         }
 

@@ -14,10 +14,23 @@ conv buffers — the Eq. (3)–(4) ``state_bytes`` term) from ONE device pool:
     (page-rounded) vs in-use (exact analytical) bytes, giving the
     fragmentation/occupancy stats the scheduler and benchmarks report.
 
-The pool is an *accounting* allocator: JAX owns the physical buffers (the
-engine's slot-batched caches), the pool decides who may occupy them. That
-split keeps the allocator backend-agnostic — the same admission logic will
-gate real paged attention once per-page gather lands (ROADMAP).
+Two allocation styles share the one free list:
+
+  * **byte allocations** (:meth:`alloc`) — the accounting-only contract the
+    slot-batched ``LocalExecutor`` path uses: JAX owns the physical slot
+    caches, the pool decides who may occupy them;
+  * **token allocations** (:meth:`alloc_tokens` / :meth:`extend`) — the
+    physically paged contract behind ``PagedExecutor``: the pool owns the
+    page arrays themselves (:meth:`allocate_physical`; one K and one V pool
+    per attention layer, allocated once at capacity), grants page ids whose
+    contents the executor fills, and appends pages per decoded token.
+    Admission reserves a **commitment** (the request's worst-case page
+    count) up front, so a mid-decode :meth:`extend` can never fail in
+    strict mode: ``free pages − outstanding commitments`` is what
+    :meth:`can_alloc_tokens` admits against.
+
+Do not mix the two styles on one pool instance: byte allocations check the
+raw free list and can eat into pages the token path has committed.
 """
 from __future__ import annotations
 
@@ -26,7 +39,8 @@ from typing import Dict, List, Optional
 
 from repro.core.memory import MemoryModel, PoolAccounting, PoolExhausted
 
-__all__ = ["KVPool", "PageAllocation", "PoolExhausted", "default_page_bytes"]
+__all__ = ["KVPool", "PageAllocation", "TokenAllocation", "PoolExhausted",
+           "default_page_bytes"]
 
 
 def default_page_bytes(mm: MemoryModel, tokens_per_page: int = 16,
@@ -55,22 +69,80 @@ class PageAllocation:
         return float(len(self.pages) * self.page_bytes)
 
 
+@dataclasses.dataclass
+class TokenAllocation:
+    """A physically paged allocation: per-row page id lists that grow one
+    page at a time as decode appends tokens, bounded by an admission-time
+    commitment (``max_tokens``)."""
+    rid: str
+    batch: int
+    seq_tokens: int          # tokens with granted page backing, per row
+    max_tokens: int          # admission commitment, per row
+    rows: List[List[int]]    # [batch][n_row_pages] physical page ids
+    page_bytes: int
+    tokens_per_page: int
+    in_use_bytes: float      # analytical bytes charged so far
+    in_use_per_token: float  # analytical bytes per appended token (all rows)
+
+    @property
+    def held_pages(self) -> int:
+        return sum(len(r) for r in self.rows)
+
+    @property
+    def committed_pages(self) -> int:
+        per_row = -(-max(self.max_tokens, 1) // self.tokens_per_page)
+        return self.batch * per_row
+
+    @property
+    def reserved_bytes(self) -> float:
+        return float(self.held_pages * self.page_bytes)
+
+
 class KVPool:
     """Slot/page-based KV-cache pool over a global byte budget."""
 
     def __init__(self, capacity_bytes: float, *, page_bytes: int,
-                 mm: Optional[MemoryModel] = None):
+                 mm: Optional[MemoryModel] = None,
+                 tokens_per_page: Optional[int] = None):
         if page_bytes <= 0:
             raise ValueError("page_bytes must be positive")
+        if tokens_per_page is not None and tokens_per_page < 1:
+            raise ValueError("tokens_per_page must be >= 1")
         self.page_bytes = int(page_bytes)
         self.n_pages = max(int(capacity_bytes // self.page_bytes), 0)
         self.mm = mm
+        self.tokens_per_page = tokens_per_page
         # capacity is page-quantized: a partial tail page is unusable
         self.acct = PoolAccounting(
             capacity_bytes=float(self.n_pages * self.page_bytes))
         self._free: List[int] = list(range(self.n_pages))
         self._live: Dict[str, PageAllocation] = {}
+        self._tok: Dict[str, TokenAllocation] = {}
         self._next_overflow_page = self.n_pages  # ids for overcommitted pages
+        self._committed_extra = 0   # Σ token allocs (committed − held) pages
+        # physical page arrays (allocate_physical): [L, n_pages+1, pt, K, D]
+        self.k_pages = None
+        self.v_pages = None
+
+    # ---------------------------------------------------------- physical
+    @property
+    def scratch_page(self) -> int:
+        """Extra physical page at index ``n_pages``: a write sink for padded
+        decode-batch rows (never granted, never read under a valid mask)."""
+        return self.n_pages
+
+    def allocate_physical(self, *, n_layers: int, n_kv_heads: int,
+                          head_dim: int, dtype) -> None:
+        """Materialize the page pools: one K and one V array per attention
+        layer (stacked on a leading layer axis), sized once at capacity plus
+        one scratch page. Requires ``tokens_per_page``."""
+        if self.tokens_per_page is None:
+            raise ValueError("allocate_physical requires tokens_per_page")
+        import jax.numpy as jnp
+        shape = (n_layers, self.n_pages + 1, self.tokens_per_page,
+                 n_kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
 
     # ------------------------------------------------------------- queries
     def pages_needed(self, nbytes: float) -> int:
@@ -84,9 +156,31 @@ class KVPool:
         """Could this request EVER fit (empty pool)?"""
         return self.pages_needed(nbytes) <= self.n_pages
 
+    def pages_per_row(self, n_tokens: int) -> int:
+        if self.tokens_per_page is None:
+            raise ValueError("token-granular API requires tokens_per_page")
+        return -(-max(int(n_tokens), 1) // self.tokens_per_page)
+
+    def pages_for_tokens(self, batch: int, n_tokens: int) -> int:
+        return max(int(batch), 1) * self.pages_per_row(n_tokens)
+
+    def can_alloc_tokens(self, batch: int, max_tokens: int) -> bool:
+        """Admission check for the paged path: the request's *worst-case*
+        page count must fit what is neither free-and-committed nor held."""
+        need = self.pages_for_tokens(batch, max_tokens)
+        return need <= len(self._free) - self._committed_extra
+
+    def fits_capacity_tokens(self, batch: int, max_tokens: int) -> bool:
+        return self.pages_for_tokens(batch, max_tokens) <= self.n_pages
+
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def committed_pages(self) -> int:
+        """Pages promised to live token allocations but not yet granted."""
+        return self._committed_extra
 
     @property
     def bytes_in_use(self) -> float:
@@ -103,14 +197,35 @@ class KVPool:
     # ----------------------------------------------------------- lifecycle
     def alloc(self, rid: str, nbytes: float, *,
               allow_overcommit: bool = False) -> PageAllocation:
-        if rid in self._live:
+        """Byte-granular (accounting-only) allocation.
+
+        Under ``allow_overcommit`` the pool pops whatever real pages remain
+        and *synthesizes* ids past capacity for the rest. Overflow ids are
+        bookkeeping fictions: they have no physical backing, and when freed
+        they evaporate rather than entering the free list — so a later
+        ``free()`` of a different request can never backfill an allocation
+        that overflowed; it stays overcommitted (and over-budget in the
+        ledger) until itself freed. Pinned in
+        ``tests/test_engine.py::test_pool_overflow_pages_never_backfilled``.
+        """
+        if rid in self._live or rid in self._tok:
             raise ValueError(f"request {rid!r} already holds an allocation")
         need = self.pages_needed(nbytes)
-        if need > len(self._free) and not allow_overcommit:
-            raise PoolExhausted(
-                f"request {rid!r} needs {need} pages "
-                f"({nbytes:.0f}B), {len(self._free)} free "
-                f"of {self.n_pages} total")
+        if not allow_overcommit:
+            if need > len(self._free):
+                raise PoolExhausted(
+                    f"request {rid!r} needs {need} pages "
+                    f"({nbytes:.0f}B), {len(self._free)} free "
+                    f"of {self.n_pages} total")
+            # ledger check BEFORE popping pages: another request's
+            # overcommit can hold the ledger at/over capacity while real
+            # pages sit free — raising after the pop would leak them
+            if not self.acct.can_reserve(need * self.page_bytes):
+                raise PoolExhausted(
+                    f"request {rid!r} needs {need * self.page_bytes}B but "
+                    f"the ledger has {self.acct.available_bytes:.0f}B "
+                    f"headroom (an overcommitted allocation is holding the "
+                    f"budget past capacity)")
         pages = [self._free.pop() for _ in range(min(need, len(self._free)))]
         while len(pages) < need:  # overcommit: synthesize pages past capacity
             pages.append(self._next_overflow_page)
@@ -123,9 +238,112 @@ class KVPool:
         self._live[rid] = alloc
         return alloc
 
-    def free(self, rid: str) -> float:
-        """Release a request's pages; returns the reserved bytes returned."""
-        alloc = self._live.pop(rid)
+    def alloc_tokens(self, rid: str, batch: int, n_tokens: int, *,
+                     max_tokens: int, in_use_bytes: float = 0.0,
+                     in_use_per_token: float = 0.0) -> TokenAllocation:
+        """Token-granular physically paged allocation (strict only).
+
+        Grants pages backing ``n_tokens`` per row now and *commits* up to
+        ``max_tokens`` per row, so every later :meth:`extend` up to the
+        commitment is guaranteed to find a free page. ``in_use_bytes`` is
+        the analytical ledger charge for the granted tokens;
+        ``in_use_per_token`` the charge per appended token (cross-check
+        against the physical reservation)."""
+        if rid in self._live or rid in self._tok:
+            raise ValueError(f"request {rid!r} already holds an allocation")
+        batch = max(int(batch), 1)
+        n_tokens = max(int(n_tokens), 1)
+        if max_tokens < n_tokens:
+            raise ValueError(f"max_tokens {max_tokens} < n_tokens {n_tokens}")
+        committed = self.pages_for_tokens(batch, max_tokens)
+        if committed > len(self._free) - self._committed_extra:
+            raise PoolExhausted(
+                f"request {rid!r} commits {committed} pages "
+                f"({batch}×{max_tokens} tokens), "
+                f"{len(self._free) - self._committed_extra} admissible "
+                f"({len(self._free)} free − {self._committed_extra} "
+                f"committed) of {self.n_pages} total")
+        per_row = self.pages_per_row(n_tokens)
+        rows = [[self._free.pop() for _ in range(per_row)]
+                for _ in range(batch)]
+        alloc = TokenAllocation(
+            rid=rid, batch=batch, seq_tokens=n_tokens, max_tokens=max_tokens,
+            rows=rows, page_bytes=self.page_bytes,
+            tokens_per_page=self.tokens_per_page,
+            in_use_bytes=float(max(in_use_bytes, 0.0)),
+            in_use_per_token=float(max(in_use_per_token, 0.0)))
+        self._committed_extra += committed - alloc.held_pages
+        self.acct.grow(alloc.reserved_bytes, alloc.in_use_bytes)
+        self._tok[rid] = alloc
+        return alloc
+
+    def extend(self, rid: str, n_tokens: int = 1) -> List[List[int]]:
+        """Append ``n_tokens`` decode tokens to ``rid``'s rows; returns the
+        newly granted page ids per row (usually empty — a page boundary is
+        crossed once every ``tokens_per_page`` tokens). Cannot exceed the
+        admission commitment; within it, strict-mode extends never fail."""
+        st = self._tok.get(rid)
+        if st is None:
+            raise ValueError(
+                f"extend({rid!r}): unknown request id; live token "
+                f"allocations: {sorted(self._tok)}")
+        new_seq = st.seq_tokens + int(n_tokens)
+        if new_seq > st.max_tokens:
+            raise ValueError(
+                f"extend({rid!r}) to {new_seq} tokens exceeds the admission "
+                f"commitment of {st.max_tokens}")
+        need_per_row = self.pages_per_row(new_seq)
+        have_per_row = len(st.rows[0])
+        granted: List[List[int]] = [[] for _ in st.rows]
+        n_new = (need_per_row - have_per_row) * st.batch
+        if n_new > 0:
+            if n_new > len(self._free):
+                raise PoolExhausted(
+                    f"extend({rid!r}) needs {n_new} pages, "
+                    f"{len(self._free)} free — commitment accounting was "
+                    f"bypassed (byte allocs mixed onto a token pool?)")
+            for i, row in enumerate(st.rows):
+                for _ in range(need_per_row - have_per_row):
+                    p = self._free.pop()
+                    row.append(p)
+                    granted[i].append(p)
+            self._committed_extra -= n_new
+        st.seq_tokens = new_seq
+        delta_in_use = st.in_use_per_token * int(n_tokens)
+        st.in_use_bytes += delta_in_use
+        self.acct.grow(float(n_new * self.page_bytes), delta_in_use)
+        return granted
+
+    def row_pages(self, rid: str) -> List[List[int]]:
+        """Current per-row page ids of a live token allocation."""
+        st = self._tok.get(rid)
+        if st is None:
+            raise ValueError(
+                f"row_pages({rid!r}): unknown request id; live token "
+                f"allocations: {sorted(self._tok)}")
+        return [list(r) for r in st.rows]
+
+    def free(self, rid: str, *, missing_ok: bool = False) -> float:
+        """Release a request's pages; returns the reserved bytes returned.
+
+        Unknown ids raise a ``ValueError`` naming the id and the live set
+        (a bare ``KeyError`` used to escape here). ``missing_ok=True`` makes
+        the call idempotent — the engine's cancel path may race a normal
+        completion, and double-freeing must not corrupt the free list."""
+        if rid in self._tok:
+            st = self._tok.pop(rid)
+            for row in st.rows:
+                self._free.extend(row)
+            self._committed_extra -= st.committed_pages - st.held_pages
+            self.acct.release(st.reserved_bytes, st.in_use_bytes)
+            return st.reserved_bytes
+        alloc = self._live.pop(rid, None)
+        if alloc is None:
+            if missing_ok:
+                return 0.0
+            raise ValueError(
+                f"free({rid!r}): unknown request id; live allocations: "
+                f"{sorted([*self._live, *self._tok])}")
         for p in alloc.pages:
             if p < self.n_pages:         # overflow pages evaporate
                 self._free.append(p)
@@ -133,7 +351,7 @@ class KVPool:
         return alloc.reserved_bytes
 
     def live_requests(self) -> List[str]:
-        return list(self._live)
+        return [*self._live, *self._tok]
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, float]:
@@ -142,7 +360,8 @@ class KVPool:
             "page_bytes": float(self.page_bytes),
             "n_pages": float(self.n_pages),
             "free_pages": float(len(self._free)),
-            "live_requests": float(len(self._live)),
+            "committed_pages": float(self._committed_extra),
+            "live_requests": float(len(self._live) + len(self._tok)),
             "reserved_bytes": self.acct.reserved_bytes,
             "in_use_bytes": self.acct.in_use_bytes,
             "peak_reserved_bytes": self.acct.peak_reserved_bytes,

@@ -9,8 +9,8 @@ from repro.core import controller as ctl, dqn, masks, memory
 from repro.core.policy import RLPolicy
 from repro.core.workload import PoissonConfig, poisson_requests
 from repro.models import decoder
-from repro.runtime import (EngineConfig, EngineRequest, KVPool, PoolExhausted,
-                           RAPEngine, RAPServer)
+from repro.runtime import (EngineConfig, EngineRequest, KVPool, PagedExecutor,
+                           PoolExhausted, RAPEngine, RAPServer)
 
 
 # ------------------------------------------------------------------ KV pool
@@ -55,6 +55,98 @@ def test_pool_partial_tail_page_unusable():
     assert pool.n_pages == 2
     assert not pool.fits_capacity(201)
     assert pool.fits_capacity(200)
+
+
+def test_pool_free_unknown_rid_and_idempotent():
+    """free() of an unknown rid names the rid and the live set (a bare
+    KeyError used to escape); missing_ok=True makes the cancel path
+    idempotent without corrupting the free list."""
+    pool = KVPool(1000, page_bytes=100)
+    pool.alloc("alive", 150)
+    with pytest.raises(ValueError, match=r"ghost.*alive"):
+        pool.free("ghost")
+    assert pool.free("ghost", missing_ok=True) == 0.0
+    pool.free("alive")
+    assert pool.free("alive", missing_ok=True) == 0.0   # double free is safe
+    assert pool.free_pages == 10
+    st = pool.stats()
+    assert st["reserved_bytes"] == 0 and st["in_use_bytes"] == 0
+
+
+def test_pool_overflow_pages_never_backfilled():
+    """Pins the overcommit contract: synthesized overflow pages are
+    bookkeeping fictions — a later free() of a DIFFERENT request returns
+    its real pages to the free list but cannot backfill the overflowed
+    allocation, which stays over-budget until itself freed."""
+    pool = KVPool(300, page_bytes=100)            # 3 real pages
+    pool.alloc("a", 200)                          # 2 real pages
+    over = pool.alloc("b", 300, allow_overcommit=True)  # 1 real + 2 overflow
+    assert sum(1 for p in over.pages if p >= pool.n_pages) == 2
+    assert pool.stats()["overcommit_events"] == 1
+    before = tuple(pool._live["b"].pages)
+    pool.free("a")                                # real pages come back...
+    assert pool.free_pages == 2
+    assert tuple(pool._live["b"].pages) == before  # ...but b keeps overflow
+    assert pool.bytes_reserved == 300              # still charged page-full
+    pool.free("b")
+    assert pool.free_pages == 3                    # overflow ids evaporated
+    assert pool.bytes_reserved == 0
+
+
+# -------------------------------------------------------- token allocations
+def test_pool_token_alloc_extend_free():
+    """The physically paged contract: admission commits worst-case pages,
+    extend() grants a page only on boundary crossings, and within the
+    commitment a strict-mode extend can never fail."""
+    pool = KVPool(8 * 64, page_bytes=64, tokens_per_page=4)   # 8 pages
+    a = pool.alloc_tokens("r1", 1, 6, max_tokens=12,
+                          in_use_bytes=60.0, in_use_per_token=10.0)
+    assert a.held_pages == 2 and a.committed_pages == 3       # ceil(12/4)
+    assert pool.free_pages == 6 and pool.committed_pages == 1
+    assert pool.bytes_reserved == 2 * 64 and pool.bytes_in_use == 60.0
+    # tokens 7, 8 fill page 2; token 9 crosses into a fresh page
+    assert pool.extend("r1") == [[]]
+    assert pool.extend("r1") == [[]]
+    grants = pool.extend("r1")
+    assert len(grants[0]) == 1 and pool.committed_pages == 0
+    assert pool.bytes_reserved == 3 * 64
+    assert pool.bytes_in_use == pytest.approx(90.0)
+    pool.extend("r1", 3)                                      # up to 12
+    with pytest.raises(ValueError, match="commitment"):
+        pool.extend("r1")                                     # 13 > 12
+    assert pool.free("r1") == 3 * 64
+    assert pool.free_pages == 8 and pool.committed_pages == 0
+    st = pool.stats()
+    assert st["reserved_bytes"] == 0 and st["in_use_bytes"] == 0
+
+
+def test_pool_token_commitments_gate_admission():
+    """can_alloc_tokens discounts OUTSTANDING commitments, not just free
+    pages — otherwise a mid-decode extend could find the free list empty
+    and deadlock the engine."""
+    pool = KVPool(6 * 64, page_bytes=64, tokens_per_page=4)   # 6 pages
+    pool.alloc_tokens("a", 1, 4, max_tokens=16)   # holds 1, commits 4
+    assert pool.free_pages == 5
+    assert pool.can_alloc_tokens(1, 8)            # 2 ≤ 5 − 3
+    assert not pool.can_alloc_tokens(1, 12)       # 3 > 5 − 3
+    with pytest.raises(PoolExhausted, match="commit"):
+        pool.alloc_tokens("b", 1, 4, max_tokens=12)
+    pool.alloc_tokens("b", 1, 4, max_tokens=8)
+    # a's committed extends succeed even while b holds pages
+    for _ in range(12):
+        pool.extend("a")
+    assert pool.free_pages == 1
+    # b still has one committed page outstanding → a 2-row request that
+    # would need both remaining pages is not admissible
+    assert not pool.can_alloc_tokens(2, 2)
+    pool.free("a")
+    pool.free("b")
+    assert pool.free_pages == 6
+    multi = pool.alloc_tokens("c", 2, 6, max_tokens=8)
+    assert [len(r) for r in multi.rows] == [2, 2]   # per-row page lists
+    assert pool.extend("c", 2) == [[], []]          # 6→8 fills page 2 exactly
+    pool.free("c")
+    assert sorted(pool._free) == list(range(6))     # no leaks
 
 
 # ----------------------------------------------- memory-model pool plumbing
@@ -421,6 +513,114 @@ def test_server_pow2_len_buckets_fix_recompile_trap(served):
     r3 = srv.serve(toks[:1, :8], budget)      # short again: no recompile
     assert not r3.compiled_new
     np.testing.assert_array_equal(r1.tokens, r3.tokens)
+
+
+# ------------------------------------------------------------ paged executor
+def _paged_engine(model, params, c, mm, *, budget, max_new=2, slots=4,
+                  max_len=32, tokens_per_page=8, scheduler=None):
+    ex = PagedExecutor(model, params, max_active=slots)
+    return RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=max_new, max_active=slots,
+        max_len=max_len, budget_bytes=budget,
+        tokens_per_page=tokens_per_page), scheduler=scheduler, executor=ex)
+
+
+def test_engine_paged_matches_local_executor(served):
+    """Acceptance: PagedExecutor greedy tokens == LocalExecutor on the
+    engine test trace (fp32 decode), with measured physical fragmentation
+    strictly below the slot-cache baseline and the pool fully drained."""
+    model, params, batch, mm, c = served
+    cfg = model.cfg
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(cfg.n_layers)
+    prompts = [toks[:1, : (16 if i % 2 else 24)] for i in range(8)]
+    budget = mm.param_bytes(full) + 2.5 * mm.state_bytes(full, 1, 26)
+    reqs = _reqs(prompts)
+
+    local = _engine(model, params, c, mm, budget=budget, max_new=2,
+                    slots=4, max_len=32)
+    rep_l = local.run(reqs)
+    paged = _paged_engine(model, params, c, mm, budget=budget, max_new=2,
+                          slots=4, max_len=32)
+    rep_p = paged.run(reqs)
+
+    done_l = {r.rid: r for r in rep_l.results if r.status == "done"}
+    done_p = {r.rid: r for r in rep_p.results if r.status == "done"}
+    assert len(done_l) == len(done_p) == 8 and rep_p.rejected == 0
+    for rid, r in done_l.items():
+        np.testing.assert_array_equal(r.tokens, done_p[rid].tokens)
+        np.testing.assert_array_equal(r.mask, done_p[rid].mask)
+    # paged pages grow per token; slot caches pin max_len per occupant
+    assert 0.0 < rep_p.measured_frag < rep_l.measured_frag
+    pool = rep_p.pool
+    assert pool["peak_reserved_bytes"] <= pool["capacity_bytes"] + 1e-6
+    assert pool["reserved_bytes"] == 0 and pool["in_use_bytes"] == 0
+    assert pool["committed_pages"] == 0
+    assert pool["overcommit_events"] == 0
+
+
+def test_engine_paged_mixed_lengths_one_group(served):
+    """Heterogeneous cache lengths share ONE paged group (the pow2
+    cache-length machinery is gone on this path) and heterogeneous
+    per-slot masks decode together."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 3 * mm.state_bytes(full, 1, 30)
+    eng = _paged_engine(model, params, c, mm, budget=budget, max_new=4,
+                        slots=4, max_len=32, tokens_per_page=4)
+    prompts = [toks[:1, :8], toks[:1, :24], toks[:1, :16]]
+    rep = eng.run(_reqs(prompts))
+    assert all(r.status == "done" for r in rep.results)
+    assert eng.executor.stats()["groups"] == 1
+    # every request decoded against its own page-table row: cross-check
+    # token equality against the local reference path
+    ref = _engine(model, params, c, mm, budget=budget, max_new=4,
+                  slots=4, max_len=32)
+    rep_ref = ref.run(_reqs(prompts))
+    for r in rep_ref.results:
+        np.testing.assert_array_equal(
+            r.tokens, next(p.tokens for p in rep.results if p.rid == r.rid))
+
+
+def test_engine_paged_queues_under_page_pressure(served):
+    """A pool sized below the trace's concurrent demand must queue (defer)
+    paged admissions — commitments, not optimism — and still finish."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    # room for roughly one dense request's page commitment at a time
+    # (a 26-token request commits ceil(26/8)=4 pages; 1.7 × analytical
+    # bytes quantizes to 5 physical pages)
+    budget = mm.param_bytes(full) + 1.7 * mm.state_bytes(full, 1, 26)
+    eng = _paged_engine(model, params, c, mm, budget=budget, max_new=2,
+                        slots=4, max_len=32)
+    prompts = [toks[:1, :24] for _ in range(4)]
+    rep = eng.run(_reqs(prompts))
+    assert all(r.status == "done" for r in rep.results)
+    assert rep.pool["overcommit_events"] == 0
+    assert rep.pool["peak_reserved_bytes"] <= rep.pool["capacity_bytes"] + 1e-6
+    # with ~1 request of headroom, later arrivals must have waited
+    assert max(r.queue_delay_s for r in rep.results) > 0.0
+
+
+def test_paged_executor_validation(served):
+    """Misconfigurations fail loudly at construction, not mid-serve."""
+    model, params, batch, mm, c = served
+    with pytest.raises(NotImplementedError, match="masked"):
+        PagedExecutor(model, params, mode="structural")
+    with pytest.raises(NotImplementedError, match="int8"):
+        import jax.numpy as jnp
+        PagedExecutor(model, params, kv_dtype=jnp.int8)
+    ex = PagedExecutor(model, params)
+    with pytest.raises(ValueError, match="masked"):
+        RAPEngine(model, params, RLPolicy(c),
+                  EngineConfig(mode="structural"), executor=ex)
+    with pytest.raises(ValueError, match="strict"):
+        RAPEngine(model, params, RLPolicy(c),
+                  EngineConfig(admission="force"), executor=ex)
+    with pytest.raises(RuntimeError, match="bind_pool"):
+        ex.group_for(masks.full_mask(model.cfg.n_layers), 32)
 
 
 def test_sharded_executor_stub_places_params(served):

@@ -7,6 +7,11 @@ from numpy.testing import assert_allclose
 
 from repro.kernels import ops, ref
 
+# every test here exercises Pallas kernels in interpret mode — the
+# `pallas-interpret` CI job runs this module under JAX_PLATFORMS=cpu so
+# paged/flash kernel regressions fail without a TPU in the loop
+pytestmark = pytest.mark.pallas_interpret
+
 R = np.random.default_rng(42)
 
 
@@ -50,6 +55,74 @@ def test_decode_attention(B, H, K, D, S, nvalid):
     out = ops.decode_attention(q, k, v, valid, block_k=64)
     want = ref.decode_attention_ref(q, k, v, valid)
     assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+PAGED_CASES = [
+    # B, H, K, D, page_tokens, max_len, softcap
+    (3, 8, 2, 64, 16, 80, 0.0),
+    (2, 4, 4, 32, 8, 64, 0.0),       # MHA, small pages
+    (1, 16, 2, 64, 32, 96, 0.0),     # wide GQA group
+    (2, 6, 3, 16, 16, 48, 30.0),     # non-pow2 heads + softcap
+]
+
+
+@pytest.mark.parametrize("B,H,K,D,pt,S,cap", PAGED_CASES)
+def test_paged_decode_matches_dense_bitwise(B, H, K, D, pt, S, cap):
+    """Paged kernel == dense decode kernel, BITWISE, on random GQA shapes.
+
+    With ``page_tokens == block_k`` and pages holding the same tokens in
+    order, both kernels run the identical f32 online-softmax op sequence —
+    page indirection must not change a single ulp. Rows get random lengths
+    (ragged batch) and pages are scattered randomly through the pool."""
+    rng = np.random.default_rng(B * 1000 + S)
+    P = -(-S // pt)                       # pages per row
+    n_pages = B * P + 3                   # spare pages stay garbage
+    lengths = rng.integers(1, S + 1, size=B).astype(np.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)).astype(np.float32))
+    kd = rng.standard_normal((B, S, K, D)).astype(np.float32)
+    vd = rng.standard_normal((B, S, K, D)).astype(np.float32)
+    table = rng.permutation(n_pages)[: B * P].reshape(B, P).astype(np.int32)
+    k_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    v_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    for b in range(B):
+        for p in range(P):
+            k_pages[table[b, p]] = kd[b, p * pt:(p + 1) * pt]
+            v_pages[table[b, p]] = vd[b, p * pt:(p + 1) * pt]
+
+    out = ops.paged_decode_attention(q, jnp.asarray(k_pages),
+                                     jnp.asarray(v_pages),
+                                     jnp.asarray(table),
+                                     jnp.asarray(lengths), softcap=cap)
+    for b in range(B):
+        valid = jnp.arange(S) < lengths[b]
+        want = ops.decode_attention(q[b:b + 1], jnp.asarray(kd[b:b + 1]),
+                                    jnp.asarray(vd[b:b + 1]), valid,
+                                    softcap=cap, block_k=pt)
+        np.testing.assert_array_equal(np.asarray(out[b]), np.asarray(want[0]))
+
+
+def test_paged_decode_row_isolation():
+    """A row's output depends only on ITS pages: rewriting another row's
+    pages (and the never-referenced spares) must not change it."""
+    rng = np.random.default_rng(7)
+    B, H, K, D, pt, S = 2, 4, 2, 32, 8, 32
+    P = S // pt
+    n_pages = B * P + 2
+    lengths = np.asarray([S, S - 3], np.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)).astype(np.float32))
+    table = np.arange(B * P).reshape(B, P).astype(np.int32)
+    k_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    v_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    a = ops.paged_decode_attention(q, jnp.asarray(k_pages),
+                                   jnp.asarray(v_pages), jnp.asarray(table),
+                                   jnp.asarray(lengths))
+    k2, v2 = k_pages.copy(), v_pages.copy()
+    k2[P:] = rng.standard_normal(k2[P:].shape)  # row 1's + spare pages
+    v2[P:] = rng.standard_normal(v2[P:].shape)
+    b = ops.paged_decode_attention(q, jnp.asarray(k2), jnp.asarray(v2),
+                                   jnp.asarray(table), jnp.asarray(lengths))
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert not np.array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
 
 @pytest.mark.parametrize("T,F,act,dt", [

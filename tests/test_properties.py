@@ -13,6 +13,7 @@ from repro.core import masks, memory
 from repro.data import SyntheticCorpus
 from repro.kernels import ref
 from repro.optim import adamw
+from repro.runtime import KVPool, PoolExhausted
 
 CFG = get_smoke_config("llama2-7b").replace(n_layers=4)
 MM = memory.build_memory_model(CFG)
@@ -108,6 +109,110 @@ def test_adamw_descends_quadratic(steps):
 def test_budget_fraction_semantics(frac, bs, sql):
     b = memory.budget_bytes(MM, bs, sql, frac)
     assert abs(b - frac * MM.dense_peak(bs, sql)) < 1e-6
+
+
+# ----------------------------------------------------------------- KV pool
+def _pool_invariants(pool, n_pages, overcommits_seen):
+    """Structural invariants that must hold after EVERY pool operation."""
+    held_byte = [p for a in pool._live.values() for p in a.pages
+                 if p < n_pages]
+    held_tok = [p for a in pool._tok.values() for row in a.rows for p in row]
+    held = held_byte + held_tok
+    # page conservation: free ∪ held partitions [0, n_pages), no duplicates
+    assert sorted(pool._free + held) == sorted(set(pool._free + held))
+    # overflow ids are excluded above, so real pages always partition
+    assert sorted(pool._free + held) == list(range(n_pages))
+    # ledger: reserved tracks pages exactly; in_use never exceeds it
+    # (within fp eps) unless a byte alloc overcommitted past capacity
+    n_reserved = (sum(len(a.pages) for a in pool._live.values())
+                  + len(held_tok))
+    assert pool.bytes_reserved == pytest.approx(n_reserved * pool.page_bytes)
+    assert pool.acct.overcommit_events >= overcommits_seen[0]
+    overcommits_seen[0] = pool.acct.overcommit_events
+    # commitments: never negative, always rebuildable from live allocs
+    commit = sum(a.committed_pages - a.held_pages for a in pool._tok.values())
+    assert pool.committed_pages == commit >= 0
+    # peaks are monotone cumulative maxima
+    assert pool.acct.peak_reserved_bytes >= pool.bytes_reserved
+    assert pool.acct.peak_in_use_bytes >= pool.bytes_in_use - 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_kv_pool_byte_ops_never_leak(data):
+    """Random alloc/free (± overcommit) sequences: pages are conserved,
+    the ledger mirrors the free list, overcommit count is monotone."""
+    n_pages = data.draw(st.integers(2, 12), label="n_pages")
+    pool = KVPool(n_pages * 100, page_bytes=100)
+    seen = [0]
+    rids = [f"r{i}" for i in range(6)]
+    for step in range(data.draw(st.integers(1, 25), label="n_ops")):
+        rid = data.draw(st.sampled_from(rids), label=f"rid{step}")
+        if rid in pool._live:
+            pool.free(rid)
+        else:
+            nbytes = data.draw(st.integers(1, n_pages * 150),
+                               label=f"bytes{step}")
+            over = data.draw(st.booleans(), label=f"over{step}")
+            try:
+                pool.alloc(rid, nbytes, allow_overcommit=over)
+            except PoolExhausted:
+                # strict-only, and for a real shortage: either the free
+                # list or the ledger (held over capacity by an earlier
+                # overcommit) lacked headroom
+                need = pool.pages_needed(nbytes)
+                assert not over and (
+                    not pool.can_alloc(nbytes)
+                    or not pool.acct.can_reserve(need * pool.page_bytes))
+        _pool_invariants(pool, n_pages, seen)
+    for rid in pool.live_requests():
+        pool.free(rid)
+    assert sorted(pool._free) == list(range(n_pages))
+    assert pool.bytes_reserved == 0 and pool.bytes_in_use == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_kv_pool_token_ops_never_leak(data):
+    """Random alloc_tokens/extend/free sequences: pages conserved, the
+    reserved ≥ in-use invariant holds, commitments guarantee that every
+    extend within max_tokens succeeds."""
+    n_pages = data.draw(st.integers(2, 16), label="n_pages")
+    pt = data.draw(st.integers(1, 6), label="tokens_per_page")
+    pool = KVPool(n_pages * 64, page_bytes=64, tokens_per_page=pt)
+    seen = [0]
+    rids = [f"t{i}" for i in range(5)]
+    for step in range(data.draw(st.integers(1, 25), label="n_ops")):
+        rid = data.draw(st.sampled_from(rids), label=f"rid{step}")
+        if rid in pool._tok:
+            st_alloc = pool._tok[rid]
+            if (st_alloc.seq_tokens < st_alloc.max_tokens
+                    and data.draw(st.booleans(), label=f"ext{step}")):
+                pool.extend(rid, 1)      # within commitment: must not raise
+            else:
+                pool.free(rid)
+        else:
+            batch = data.draw(st.integers(1, 3), label=f"b{step}")
+            n_tok = data.draw(st.integers(1, 4 * pt), label=f"n{step}")
+            max_tok = data.draw(st.integers(n_tok, 6 * pt),
+                                label=f"m{step}")
+            # in-use rate chosen ≤ the physical per-token rate so the
+            # analytical cross-check can never outrun the reservation
+            rate = data.draw(st.floats(0.0, 64.0 / pt), label=f"rate{step}")
+            try:
+                pool.alloc_tokens(rid, batch, n_tok, max_tokens=max_tok,
+                                  in_use_bytes=rate * n_tok * batch,
+                                  in_use_per_token=rate * batch)
+            except PoolExhausted:
+                assert not pool.can_alloc_tokens(batch, max_tok)
+        _pool_invariants(pool, n_pages, seen)
+        assert pool.bytes_in_use <= pool.bytes_reserved + 1e-6
+    for rid in pool.live_requests():
+        pool.free(rid)
+    assert sorted(pool._free) == list(range(n_pages))
+    assert pool.committed_pages == 0
+    assert pool.bytes_reserved == 0
+    assert pool.bytes_in_use == pytest.approx(0.0, abs=1e-6)
 
 
 @settings(max_examples=20, deadline=None)
