@@ -14,6 +14,18 @@ Replays the SAME ≥16-request Poisson arrival trace through:
   * **serial** — the historical one-shot path: ``RAPServer.serve()`` per
     request, each against its own instantaneous budget.
 
+Each engine configuration is swept over the decode **horizon** H ∈
+{1, 4, 8} (``EngineConfig.decode_horizon``, DESIGN.md §4): H tokens per
+fused on-device loop with one device→host sync per horizon. Rows carry a
+``host_ms_per_tok`` column — (wall time − time inside compiled launches
+and read-backs) / generated tokens — isolating the host-side dispatch
+overhead the horizon exists to shrink. After writing its document the
+script FAILS (exit 1) if the warmed masked/paged row at the largest
+swept horizon is not faster than at the smallest (H=8 vs H=1 by
+default): the fused loop beating per-token dispatch is the point of the
+feature, and a silent regression here would invalidate the cross-PR
+trajectory.
+
 Reports aggregate tokens/sec, mean queue delay, budget-fit rate, and the
 pool's reserved/in-use peaks, and writes a machine-readable
 ``experiments/bench/BENCH_engine.json`` (schema below) so the perf
@@ -50,6 +62,9 @@ def main():
                     help="pool sized for this many concurrent dense requests")
     ap.add_argument("--modes", nargs="+",
                     default=["masked", "structural"])
+    ap.add_argument("--horizons", nargs="+", type=int, default=[1, 4, 8],
+                    help="decode_horizon sweep: tokens fused per engine "
+                         "macro-tick (one compiled launch, one sync)")
     ap.add_argument("--policy", default="rl",
                     help="pruning policy (rl or any registered baseline)")
     ap.add_argument("--scheduler", default="fifo",
@@ -113,13 +128,13 @@ def main():
                           arrival_t=trace[i].t)
             for i, p in enumerate(prompts)]
 
-    def run_engine(mode, executor_kind):
+    def run_engine(mode, executor_kind, horizon):
         executor = None
         if executor_kind == "paged":
             executor = PagedExecutor(model, params, max_active=args.slots)
         engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=args.max_new, max_active=args.slots,
-            max_len=max_total, budget_bytes=budget),
+            max_len=max_total, budget_bytes=budget, decode_horizon=horizon),
             scheduler=args.scheduler, executor=executor)
         if not args.no_warmup:      # steady-state: compiles amortize away
             for _ in range(5):
@@ -148,8 +163,9 @@ def main():
         print(f"[bench] skipping paged run: {args.arch} is not a uniform "
               f"all-attention layout")
     serial_cache = {}
-    for mode, executor_kind in run_matrix:
-        rep = run_engine(mode, executor_kind)
+    runs = [(m, e, h) for m, e in run_matrix for h in args.horizons]
+    for mode, executor_kind, horizon in runs:
+        rep = run_engine(mode, executor_kind, horizon)
 
         # ---- serial one-shot replay of the same trace (once per mode)
         def serial_replay(server):
@@ -177,9 +193,15 @@ def main():
         serial_tps, serial_fits = serial_cache[mode]
 
         speedup = rep.tokens_per_s / max(serial_tps, 1e-9)
+        # host-side share of serving: wall time not spent inside compiled
+        # launches / read-backs, per generated token — the dispatch
+        # overhead the horizon decode exists to amortize
+        host_ms = ((rep.wall_s - rep.launch_s)
+                   / max(rep.generated_tokens, 1) * 1e3)
         row = {
             "mode": mode,
             "executor": executor_kind,
+            "decode_horizon": horizon,
             "engine_tok_s": round(rep.tokens_per_s, 1),
             "serial_tok_s": round(serial_tps, 1),
             "speedup": round(speedup, 2),
@@ -187,25 +209,28 @@ def main():
             "fit_rate": round(rep.budget_fit_rate, 3),
             "decode_iters": rep.decode_iters,
             "compiles": rep.compile_events,
+            "host_ms_per_tok": round(host_ms, 4),
             "pool_peak_mb": round(rep.pool["peak_reserved_bytes"] / 1e6, 3),
             "pool_frag": round(rep.pool["fragmentation"], 3),
             "measured_frag": round(rep.measured_frag, 3),
         }
         rows.append(row)
-        print(f"[bench] {mode:10s}/{executor_kind:5s} "
+        print(f"[bench] {mode:10s}/{executor_kind:5s} H={horizon} "
               f"engine {row['engine_tok_s']:8.1f} tok/s  "
               f"serial {row['serial_tok_s']:8.1f} tok/s  "
               f"speedup ×{row['speedup']:.2f}  "
-              f"queue {row['queue_delay_ms']:.1f} ms  "
+              f"host {row['host_ms_per_tok']:.3f} ms/tok  "
               f"measured-frag {row['measured_frag']:.3f}")
         if speedup <= 1.0:
             print(f"[bench] WARNING: engine did not beat serial in {mode}")
 
-    by_exec = {(r["mode"], r["executor"]): r for r in rows}
-    slot, paged = by_exec.get(("masked", "slot")), by_exec.get(
-        ("masked", "paged"))
+    by_exec = {(r["mode"], r["executor"], r["decode_horizon"]): r
+               for r in rows}
+    h_top = max(args.horizons)
+    slot, paged = by_exec.get(("masked", "slot", h_top)), by_exec.get(
+        ("masked", "paged", h_top))
     if slot and paged:
-        print(f"[bench] paged vs slot (masked): "
+        print(f"[bench] paged vs slot (masked, H={h_top}): "
               f"frag {paged['measured_frag']:.3f} vs "
               f"{slot['measured_frag']:.3f}, "
               f"tok/s {paged['engine_tok_s']:.1f} vs "
@@ -215,13 +240,15 @@ def main():
             print("[bench] WARNING: paged fragmentation not below slot")
         if paged["engine_tok_s"] < 0.9 * slot["engine_tok_s"]:
             print("[bench] WARNING: paged throughput >10% below slot")
-
     os.makedirs(args.out, exist_ok=True)
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 2,        # v2: rows gained executor (slot|paged) +
-                            # measured_frag (physical KV fragmentation)
+        "schema": 3,        # v3: horizon sweep — rows gained decode_horizon
+                            # (tokens fused per engine macro-tick) and
+                            # host_ms_per_tok (wall − compiled-launch time,
+                            # per generated token). v2 added executor
+                            # (slot|paged) + measured_frag.
         "bench": "engine_throughput",
         "config": {
             "arch": args.arch, "layers": args.layers,
@@ -230,6 +257,7 @@ def main():
             "pool_requests": args.pool_requests, "policy": policy.name,
             "scheduler": args.scheduler, "seed": args.seed,
             "warmup": not args.no_warmup,
+            "horizons": list(args.horizons),
         },
         "rows": rows,
     }
@@ -245,6 +273,28 @@ def main():
     for r in rows:
         print(",".join(str(r[h]) for h in hdr))
     print(f"[bench] wrote {bench_out}")
+
+    # Horizon perf gate — AFTER the doc is written, so a failing run still
+    # leaves its machine-readable rows behind for diagnosis. Compares the
+    # sweep's endpoints, so custom --horizons stay gated too.
+    h_lo, h_hi = min(args.horizons), max(args.horizons)
+    lo = by_exec.get(("masked", "paged", h_lo))
+    hi = by_exec.get(("masked", "paged", h_hi))
+    if not (lo and hi) or h_lo == h_hi:
+        print("[bench] skipping horizon gate (no masked/paged rows at two "
+              "distinct horizons)")
+    elif args.no_warmup:
+        # cold runs measure per-run XLA compile latency (a bigger horizon
+        # compiles a bigger scan), not serving throughput — gate only warmed
+        print(f"[bench] skipping H={h_hi}>H={h_lo} gate (--no-warmup: "
+              f"numbers are compile-dominated)")
+    elif hi["engine_tok_s"] <= lo["engine_tok_s"]:
+        raise SystemExit(
+            f"[bench] FAIL: masked/paged H={h_hi} "
+            f"({hi['engine_tok_s']:.1f} tok/s) is not faster than "
+            f"H={h_lo} ({lo['engine_tok_s']:.1f} tok/s) — the fused "
+            f"horizon loop must beat per-token dispatch; a regression "
+            f"here invalidates the perf trajectory")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §5):
+Two serving paths (DESIGN.md §6):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -46,6 +46,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4,
                     help="engine decode slots (concurrent requests)")
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="decode tokens fused per engine macro-tick: one "
+                         "compiled on-device loop emits H tokens per "
+                         "running request with ONE device→host sync "
+                         "(results are bitwise-identical to H=1; see "
+                         "DESIGN.md §4)")
     ap.add_argument("--pool-requests", type=float, default=2.5,
                     help="KV pool sized for this many concurrent dense "
                          "requests")
@@ -134,7 +140,8 @@ def main():
         executor = PagedExecutor(model, params, max_active=slots)
     engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
-        max_len=max_total, budget_bytes=budget), scheduler=args.scheduler,
+        max_len=max_total, budget_bytes=budget,
+        decode_horizon=args.decode_horizon), scheduler=args.scheduler,
         executor=executor)
     ereqs = []
     for i, r in enumerate(reqs):

@@ -651,6 +651,70 @@ def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
     return logits, cache
 
 
+def decode_horizon(params, cfg, cache, tokens, horizon: int, *, gates=None,
+                   impl: str = "xla",
+                   layout=None) -> Tuple[jnp.ndarray, dict]:
+    """Fuse ``horizon`` greedy decode ticks into one on-device loop.
+
+    ``lax.scan`` over :func:`decode_step`: each iteration feeds the argmax
+    token of the previous step back in, so a whole *horizon* of tokens is
+    produced by ONE dispatched executable with ONE device→host read-back
+    (the ``[B, horizon]`` token matrix) instead of ``horizon`` round trips.
+    ``tokens`` is the int32 [B, 1] seed (the last emitted token per row);
+    ``gates``/``pos`` semantics are exactly :func:`decode_step`'s — per-slot
+    [L, B] gates and int32 [B] positions ride the scan unchanged/incremented.
+    Returns (toks int32 [B, horizon], cache after ``horizon`` steps).
+    Greedy only: the scan carries the argmax token, not logits.
+    """
+    horizon = int(horizon)
+    if horizon < 1:
+        raise ValueError(f"horizon must be >= 1, got {horizon}")
+
+    def body(carry, _):
+        cache, tok = carry
+        logits, cache = decode_step(params, cfg, cache, tok, gates=gates,
+                                    impl=impl, layout=layout)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (cache, nxt[:, None]), nxt
+
+    seed = jnp.asarray(tokens, jnp.int32)
+    (cache, _), toks = jax.lax.scan(body, (cache, seed), None, length=horizon)
+    return jnp.moveaxis(toks, 0, 1), cache
+
+
+def paged_decode_horizon(params, cfg, pools: dict, page_table, pos, tokens,
+                         horizon: int, *, gates=None, impl: str = "xla",
+                         layout=None) -> Tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """Fuse ``horizon`` paged decode ticks into one on-device loop.
+
+    The paged sibling of :func:`decode_horizon`: scans
+    :func:`paged_decode_step` with the page pools, per-row positions, and
+    the fed-back argmax token riding the carry. The page table is
+    *constant* across the horizon — callers pre-grant every page the
+    horizon can touch (``KVPool.extend(rid, horizon)``) before launching,
+    which the admission-time worst-case commitment guarantees can't fail.
+    Returns (toks int32 [B, horizon], pools', pos + horizon).
+    """
+    horizon = int(horizon)
+    if horizon < 1:
+        raise ValueError(f"horizon must be >= 1, got {horizon}")
+    pos = jnp.asarray(pos, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+
+    def body(carry, _):
+        pools, pos, tok = carry
+        logits, pools = paged_decode_step(params, cfg, pools, page_table,
+                                          pos, tok, gates=gates, impl=impl,
+                                          layout=layout)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (pools, pos + 1, nxt[:, None]), nxt
+
+    seed = jnp.asarray(tokens, jnp.int32)
+    (pools, pos, _), toks = jax.lax.scan(body, (pools, pos, seed), None,
+                                         length=horizon)
+    return jnp.moveaxis(toks, 0, 1), pools, pos
+
+
 def paged_decode_step(params, cfg, pools: dict, page_table, pos, tokens, *,
                       gates=None, impl: str = "xla",
                       layout=None) -> Tuple[jnp.ndarray, dict]:

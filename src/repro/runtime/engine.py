@@ -40,8 +40,14 @@ One iteration of :meth:`RAPEngine._tick`:
   3. **prefill** — newly admitted requests prefill individually (shapes
      differ) and their caches are written into free *slots* of their
      group's shared slot-batched cache;
-  4. **decode** — all running requests advance one token per occupied
-     group via the executor's fused ``decode`` (dynamic batch buckets).
+  4. **decode** — all running requests advance one *horizon* of
+     ``EngineConfig.decode_horizon`` tokens per occupied group via the
+     executor's fused ``decode_horizon`` (one compiled launch, one
+     ``[B, H]`` read-back — DESIGN.md §4). Completion (``max_new`` today;
+     an EOS-style stop condition, when one lands, would share the same
+     boundary semantics) is checked once per horizon; tokens a request
+     over-generated inside its final horizon are truncated, so results
+     are bitwise-identical to H=1.
 
 Completed requests free their pages and slots, unblocking the queue, and
 are reported back to the policy via ``feedback()``.
@@ -111,6 +117,14 @@ class EngineConfig:
     # smallest bucket that holds them instead of always paying
     # max_active-wide compute. () disables (always full width).
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    # Horizon decode (DESIGN.md §4): each engine macro-tick advances every
+    # running request up to this many tokens through ONE fused on-device
+    # loop per group, with completion checked at the horizon boundary and
+    # over-generated tokens truncated (token streams are bitwise-identical
+    # to decode_horizon=1). Clamped per tick to the largest remaining
+    # token need in the group, so short tails don't pay full-horizon
+    # compute. 1 restores per-token ticks.
+    decode_horizon: int = 8
 
     def __post_init__(self):
         if self.mode not in ("masked", "structural"):
@@ -153,6 +167,10 @@ class EngineConfig:
             raise ValueError(
                 f"decode_buckets must be positive slot counts, got "
                 f"{self.decode_buckets!r}")
+        if self.decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon must be >= 1, got {self.decode_horizon!r} "
+                f"— each macro-tick advances at least one token")
 
 
 @dataclasses.dataclass
@@ -194,9 +212,13 @@ class EngineReport:
     mean_queue_delay_s: float
     budget_fit_rate: float            # admitted requests whose peak fit
     rejected: int
-    decode_iters: int
+    decode_iters: int                 # macro-ticks (horizons), not tokens
     compile_events: int
     pool: Dict[str, float]
+    # wall time spent inside compiled-executable launches + read-backs
+    # (prefill and decode horizons): wall_s − launch_s is the host-side
+    # orchestration share the horizon decode exists to shrink
+    launch_s: float = 0.0
     # measured physical KV fragmentation: mean over decode ticks of
     # 1 − used_bytes / physical_bytes from the executor's kv_utilization()
     # (0.0 when the backend does not track it)
@@ -351,6 +373,7 @@ class RAPEngine:
         self._results = []
         self._decode_iters = 0
         self._compiles_at_run_start = self.executor.compile_events
+        self._launch_s_at_run_start = getattr(self.executor, "launch_s", 0.0)
         self._skew = 0.0
         self._t0 = time.perf_counter()
         self.executor.evict_all()             # previous run's occupants
@@ -378,6 +401,8 @@ class RAPEngine:
             compile_events=(self.executor.compile_events
                             - self._compiles_at_run_start),
             pool=self.pool.stats(),
+            launch_s=(getattr(self.executor, "launch_s", 0.0)
+                      - self._launch_s_at_run_start),
             measured_frag=(float(np.mean(self._frag_samples))
                            if self._frag_samples else 0.0))
 
@@ -558,29 +583,61 @@ class RAPEngine:
 
     # --------------------------------------------------------------- decode
     def _decode_all(self) -> None:
+        """One macro-tick: every occupied group advances a fused horizon
+        of up to ``cfg.decode_horizon`` tokens (clamped to the largest
+        remaining need in the group), then completion is checked once at
+        the boundary. A request whose ``max_new`` lands mid-horizon keeps
+        only the tokens up to it — the trailing over-generated ones are
+        truncated here, which is what makes horizon size unobservable in
+        the results (bitwise-identical to decode_horizon=1)."""
         stepped = False
         for group in self.executor.groups():
             if not group.occupied():
                 continue
-            nxt, _ = self.executor.decode(group)
+            # clamp the horizon to the group's largest remaining token
+            # need, QUANTIZED up to a power of two: executables are
+            # compiled per (batch width, horizon), and an exact clamp
+            # would mint one per remaining-need value (timing-dependent —
+            # steady state would never stop compiling). Pow2 bounds the
+            # horizon set to {1, 2, 4, ...} while short tails still skip
+            # most full-horizon compute; the overshoot is truncated below.
+            remaining = max((run.max_new - len(run.out)
+                             for run in self._running.values()
+                             if run.group is group), default=1)
+            horizon = min(self.cfg.decode_horizon,
+                          _next_pow2(max(remaining, 1)))
+            toks, _ = self.executor.decode_horizon(group, horizon)
             stepped = True
             for run in list(self._running.values()):
                 if run.group is not group:
                     continue
-                if len(run.out) >= run.max_new:
+                need = run.max_new - len(run.out)
+                if need <= 0:
                     continue
-                run.out.append(nxt[np.asarray(run.slots)])
+                cols = toks[np.asarray(run.slots)]     # [b, horizon]
+                for h in range(min(need, horizon)):
+                    run.out.append(cols[:, h])
         if stepped:
             self._decode_iters += 1
             used, phys = self.executor.kv_utilization()
             if phys > 0:
                 self._frag_samples.append(1.0 - used / phys)
-        for run in list(self._running.values()):
-            if len(run.out) >= run.max_new:
-                self._complete(run)
+        done = [run for run in self._running.values()
+                if len(run.out) >= run.max_new]
+        # batch the device-side slot resets: one fused eviction per group
+        # per macro-tick instead of one per completing request
+        by_group: Dict[int, Tuple[Any, List[int]]] = {}
+        for run in done:
+            slots = by_group.setdefault(id(run.group), (run.group, []))[1]
+            slots.extend(run.slots)
+        for group, slots in by_group.values():
+            group.evict(slots)
+        for run in done:
+            self._complete(run, evict=False)
 
-    def _complete(self, run: _Running) -> None:
-        run.group.evict(run.slots)
+    def _complete(self, run: _Running, *, evict: bool = True) -> None:
+        if evict:
+            run.group.evict(run.slots)
         self.pool.free(run.req.rid)
         now = self._now()
         d = run.decision

@@ -3,9 +3,18 @@
 The engine decides *who* runs (scheduler) and *what shape* they run in
 (pruning policy); a :class:`ModelExecutor` owns *how* the chosen masks
 execute: slot-batched caches, compiled executable families, prefill
-scattering, and the fused decode step. PR 1 inlined all of this into
+scattering, and the fused decode loop. PR 1 inlined all of this into
 ``RAPEngine``; extracting it means sharded serving is "swap the
 executor", not "rewrite the engine".
+
+Decode state is **device-resident** (DESIGN.md §4 "Horizon decode"):
+groups keep tokens, positions, gates, and (paged) page-table rows as
+device arrays that are updated *incrementally* at placement, eviction,
+and page grants — never re-uploaded per step — and decode advances in
+fused **horizons** of H tokens: one compiled ``lax.scan`` launch, one
+``[B, H]`` token read-back. A warmed horizon performs zero host↔device
+transfers between the launch and that read-back (pinned in
+``tests/test_horizon.py`` under ``jax.transfer_guard``).
 
 Executors:
   * :class:`LocalExecutor` — today's single-process path. Groups (one per
@@ -14,15 +23,18 @@ Executors:
     long-cache group instead of invalidating every compiled short one.
     Decode runs in dynamic batch buckets B ∈ {1, 2, 4, 8} (ROADMAP): the
     occupied slots are gathered into the smallest bucket that holds them,
-    stepped, and scattered back, so a lightly loaded engine does not pay
-    full-slot-count compute per token.
+    stepped H tokens, and scattered back, so a lightly loaded engine does
+    not pay full-slot-count compute per token.
   * :class:`PagedExecutor` — physically paged KV execution (DESIGN.md §3
     "Paged KV"): requests own *pages* of a global KV pool
     (``repro.runtime.kv_pool.KVPool`` holds the page arrays), prefill
-    writes KV straight into granted pages, and one fused decode step
+    writes KV straight into granted pages, and one fused horizon launch
     advances any mix of cache lengths through a per-request page table —
     no ``max_len × max_active`` slot caches, no pow2 cache-length groups,
-    and page-granular (not slot-granular) internal fragmentation.
+    and page-granular (not slot-granular) internal fragmentation. Pages
+    for the whole horizon are pre-granted in ONE bulk ``KVPool.extend``
+    before the launch (the admission-time worst-case commitment
+    guarantees it cannot fail), so no paging happens mid-loop.
   * :class:`ShardedExecutor` — mesh placement via
     ``repro.parallel.sharding``: places parameters with the production
     partition rules and lowers a sharded decode step for cost analysis
@@ -38,6 +50,7 @@ and the paged path's token-equivalence is pinned against it in
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -49,6 +62,61 @@ from repro.models import decoder
 
 __all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "PagedExecutor",
            "PagedGroup", "ShardedExecutor"]
+
+
+# Fused device-state updates. Placement/eviction touch four resident
+# tensors each; issuing the column updates as eager ``.at[].set`` chains
+# costs one dispatch (plus index-normalization work) per tensor per call,
+# which the admission/completion profile is dominated by. One shared
+# jitted executable per update kind replaces the chain with a single
+# launch; donation makes the updates in-place.
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _paged_place_upd(table, pos, tok, gates, sidx, rows, plen, first, cols):
+    return (table.at[sidx].set(rows),
+            pos.at[sidx].set(plen),
+            tok.at[sidx].set(first),
+            gates.at[:, :, sidx].set(cols[:, :, None]))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _paged_evict_upd(table, pos, tok, gates, sidx, scratch):
+    return (table.at[sidx].set(scratch),
+            pos.at[sidx].set(0),
+            tok.at[sidx].set(0),
+            gates.at[:, :, sidx].set(1.0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _paged_grant_upd(table, rows, cols, vals):
+    return table.at[rows, cols].set(vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 7))
+def _slot_place_upd(cache, tokens, req_cache, sidx, plen, first, cols, gates):
+    out = {}
+    for k, v in cache.items():
+        if k == "pos":
+            out[k] = v.at[sidx].set(plen)
+        else:
+            out[k] = jax.tree.map(
+                lambda big, small: big.at[:, sidx].set(small), v,
+                req_cache[k])
+    tokens = tokens.at[sidx, 0].set(first)
+    if gates is not None:
+        gates = gates.at[:, :, sidx].set(cols[:, :, None])
+    return out, tokens, gates
+
+
+def _cached_iidx(cache: Dict[Tuple[int, ...], Any], idx: List[int]):
+    """Device copy of a slot-index vector, cached by its pattern — the
+    hot paths (horizon launches, placement, eviction) re-use the resident
+    array instead of re-uploading the index list every call."""
+    key = tuple(idx)
+    dev = cache.get(key)
+    if dev is None:
+        dev = jnp.asarray(idx, jnp.int32)
+        cache[key] = dev
+    return dev
 
 
 def _bucket_batch(occ: List[int], free: List[int], n_slots: int,
@@ -71,7 +139,14 @@ class SlotGroup:
 
     masked mode: a single group over the full params with per-slot gates.
     structural mode: one group per bucket (compacted params, gates absorbed
-    into structure). Groups are minted per (bucket, cache_len)."""
+    into structure). Groups are minted per (bucket, cache_len).
+
+    All decode state — the cache (including int32 [n_slots] positions),
+    the per-slot seed tokens, and the [2, L, n_slots] gate tensor — lives
+    on device. Placement and eviction touch only the affected columns via
+    ``.at[...]`` updates; a horizon launch reads the resident arrays
+    directly, so the per-token hot path performs no host→device uploads.
+    """
 
     def __init__(self, key, params, layout, cfg_model, n_slots: int,
                  cache_len: int, kv_dtype, gated: bool,
@@ -90,26 +165,16 @@ class SlotGroup:
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         if gated:
             L = cfg_model.n_layers
-            self._gates_np = np.ones((2, L, n_slots), np.float32)
-            self._gates_dev = jnp.asarray(self._gates_np)
-        cfg = cfg_model
-        layout_c = layout
-
-        if gated:
-            @jax.jit
-            def step(p, cache, tok, gm, gf):
-                return decoder.decode_step(p, cfg, cache, tok,
-                                           gates={"mixer": gm, "ffn": gf})
-        else:
-            @jax.jit
-            def step(p, cache, tok):
-                return decoder.decode_step(p, cfg, cache, tok,
-                                           layout=layout_c)
-        self._step = step
-        # decode executables are cached per batch bucket inside the jitted
-        # fn (XLA retraces per shape); we track seen buckets for compile
-        # accounting
+            self._gates_dev = jnp.ones((2, L, n_slots), jnp.float32)
+        self._mcfg = cfg_model
+        # fused horizon executables, one jit per horizon length (batch
+        # widths retrace inside jit); compile accounting per (width, H)
+        self._hfns: Dict[int, Any] = {}
         self._compiled_batches: set = set()
+        # device copies of the bucket gather/scatter index vectors, keyed
+        # by the occupancy pattern — steady-state horizons re-use them
+        # instead of re-uploading the index list every launch
+        self._iidx_cache: Dict[Tuple[int, ...], Any] = {}
 
     # ----------------------------------------------------------- occupancy
     def free_slots(self) -> List[int]:
@@ -122,31 +187,29 @@ class SlotGroup:
         return any(o is not None for o in self.occupants)
 
     def place(self, rid: str, slots: List[int], req_cache: dict,
-              mask: Optional[np.ndarray], prompt_len: int) -> None:
-        """Write a freshly prefilled request cache into ``slots``."""
-        idx = jnp.asarray(slots, jnp.int32)
-        cache = dict(self.cache)
-        for k, v in cache.items():
-            if k == "pos":
-                cache[k] = v.at[idx].set(jnp.asarray(prompt_len, jnp.int32))
-            else:
-                cache[k] = jax.tree.map(
-                    lambda big, small: big.at[:, idx].set(small), v,
-                    req_cache[k])
-        self.cache = cache
+              mask: Optional[np.ndarray], prompt_len: int,
+              first: np.ndarray) -> None:
+        """Write a freshly prefilled request cache into ``slots`` — cache
+        rows, positions, seed tokens, and (masked mode) ONLY the placed
+        gate columns, all in one fused jitted update. Re-uploading the
+        full [2, L, n_slots] gate tensor per placement would scale
+        placement cost with slot count, not request size."""
         for s in slots:
             self.occupants[s] = rid
+        cols = None
         if self.gated and mask is not None:
             g = masks_lib.mask_to_gates(mask)
-            for s in slots:
-                self._gates_np[0, :, s] = np.asarray(g["mixer"])
-                self._gates_np[1, :, s] = np.asarray(g["ffn"])
-            self._gates_dev = jnp.asarray(self._gates_np)
-
-    def set_tokens(self, slots: List[int], toks: np.ndarray) -> None:
-        idx = jnp.asarray(slots, jnp.int32)
-        self.tokens = self.tokens.at[idx, 0].set(
-            jnp.asarray(toks, jnp.int32))
+            cols = np.stack([np.asarray(g["mixer"], np.float32),
+                             np.asarray(g["ffn"], np.float32)])
+        # mask=None on a gated group skips the gate write (the historical
+        # contract): the fused update traces a no-gate variant rather
+        # than scattering a None
+        gates = self._gates_dev if cols is not None else None
+        self.cache, self.tokens, gates = _slot_place_upd(
+            self.cache, self.tokens, req_cache, self._iidx(slots),
+            int(prompt_len), np.asarray(first, np.int32), cols, gates)
+        if cols is not None:
+            self._gates_dev = gates
 
     def evict(self, slots: List[int]) -> None:
         for s in slots:
@@ -157,50 +220,116 @@ class SlotGroup:
         return _bucket_batch(self.occupied_slots(), self.free_slots(),
                              self.n_slots, buckets)
 
-    def decode_once(self, buckets: Sequence[int] = ()) -> Tuple[np.ndarray,
-                                                                bool]:
-        """Advance every occupied slot one token; returns ([n_slots] next
-        tokens — unoccupied entries are stale/garbage — and whether this
-        call compiled a new executable)."""
+    def _horizon_fn(self, horizon: int, bucketed: bool):
+        """Jitted fused horizon, one executable family per (H, bucketed).
+        The bucketed variant takes the *full-width* resident state plus a
+        device index vector and performs the gather → H-step scan →
+        scatter-back entirely inside the compiled call — eager indexing
+        would smuggle a scalar host→device upload per launch (the index
+        normalization constant), which the transfer-guard test forbids."""
+        h = int(horizon)
+        key = (h, bool(bucketed))
+        if key not in self._hfns:
+            cfg, layout_c, gated = self._mcfg, self.layout, self.gated
+
+            def scan_h(p, cache, tok, gates):
+                g = ({"mixer": gates[0], "ffn": gates[1]} if gated
+                     else None)
+                return decoder.decode_horizon(p, cfg, cache, tok, h,
+                                              gates=g, layout=layout_c)
+
+            if not bucketed:
+                if gated:
+                    @functools.partial(jax.jit, donate_argnums=(1, 2))
+                    def fn(p, cache, tok, gates):
+                        toks, cache = scan_h(p, cache, tok, gates)
+                        return toks, cache, toks[:, -1:]
+                else:
+                    @functools.partial(jax.jit, donate_argnums=(1, 2))
+                    def fn(p, cache, tok):
+                        toks, cache = scan_h(p, cache, tok, None)
+                        return toks, cache, toks[:, -1:]
+            else:
+                def gather_scan_scatter(p, cache, tok, gates, iidx):
+                    sub = {k: (v[iidx] if k == "pos"
+                               else jax.tree.map(lambda a: a[:, iidx], v))
+                           for k, v in cache.items()}
+                    toks, sub = scan_h(p, sub, tok[iidx],
+                                       gates[:, :, iidx]
+                                       if gates is not None else None)
+                    out = {}
+                    for k, v in sub.items():
+                        if k == "pos":
+                            out[k] = cache[k].at[iidx].set(v)
+                        else:
+                            out[k] = jax.tree.map(
+                                lambda full, small, _i=iidx:
+                                full.at[:, _i].set(small), cache[k], v)
+                    tok = tok.at[iidx].set(toks[:, -1:])
+                    return toks, out, tok
+
+                if gated:
+                    @functools.partial(jax.jit, donate_argnums=(1, 2))
+                    def fn(p, cache, tok, gates, iidx):
+                        return gather_scan_scatter(p, cache, tok, gates,
+                                                   iidx)
+                else:
+                    @functools.partial(jax.jit, donate_argnums=(1, 2))
+                    def fn(p, cache, tok, iidx):
+                        return gather_scan_scatter(p, cache, tok, None,
+                                                   iidx)
+            self._hfns[key] = fn
+        return self._hfns[key]
+
+    def _iidx(self, idx: List[int]):
+        return _cached_iidx(self._iidx_cache, idx)
+
+    def launch_horizon(self, horizon: int,
+                       buckets: Sequence[int] = ()) -> Tuple[Any,
+                                                             Optional[List[int]],
+                                                             bool]:
+        """Device phase of a fused H-token decode: pick the batch bucket,
+        gather the stepped slots' state (on device), launch ONE compiled
+        ``lax.scan`` executable that advances them ``horizon`` tokens, and
+        fold the updated state back into the resident arrays. Returns
+        (device toks [width, horizon], stepped slot ids or None for full
+        width, new-compile flag). Once an occupancy pattern and executable
+        are warm this performs zero host↔device transfers — the caller's
+        single ``np.asarray`` on the returned tokens is the only sync."""
         idx = self._decode_batch(buckets) if buckets else None
         width = self.n_slots if idx is None else len(idx)
-        new = width not in self._compiled_batches
-        self._compiled_batches.add(width)
-        if idx is None:
-            cache, tokens = self.cache, self.tokens
-            gates = self._gates_dev if self.gated else None
-        else:
-            iidx = jnp.asarray(idx, jnp.int32)
-            cache = {k: (v[iidx] if k == "pos"
-                         else jax.tree.map(lambda a: a[:, iidx], v))
-                     for k, v in self.cache.items()}
-            tokens = self.tokens[iidx]
-            gates = self._gates_dev[:, :, iidx] if self.gated else None
+        key = (width, int(horizon))
+        new = key not in self._compiled_batches
+        self._compiled_batches.add(key)
+        fn = self._horizon_fn(horizon, bucketed=idx is not None)
+        args = (self.params, self.cache, self.tokens)
         if self.gated:
-            logits, cache = self._step(self.params, cache, tokens,
-                                       gates[0], gates[1])
-        else:
-            logits, cache = self._step(self.params, cache, tokens)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            args += (self._gates_dev,)
+        if idx is not None:
+            args += (self._iidx(idx),)
+        toks, cache, last = fn(*args)
+        self.cache = cache
+        self.tokens = last
+        return toks, idx, new
+
+    def decode_horizon(self, horizon: int,
+                       buckets: Sequence[int] = ()) -> Tuple[np.ndarray,
+                                                             bool]:
+        """Advance every occupied slot ``horizon`` tokens; returns
+        ([n_slots, horizon] tokens — unstepped rows are zero/garbage — and
+        whether this call compiled a new executable)."""
+        toks_dev, idx, new = self.launch_horizon(horizon, buckets)
         if idx is None:
-            self.cache = cache
-            self.tokens = nxt[:, None]
-            return np.asarray(nxt), new
-        # scatter the stepped sub-batch back into the full-width state
-        iidx = jnp.asarray(idx, jnp.int32)
-        big = dict(self.cache)
-        for k, v in cache.items():
-            if k == "pos":
-                big[k] = self.cache[k].at[iidx].set(v)
-            else:
-                big[k] = jax.tree.map(
-                    lambda full, small: full.at[:, iidx].set(small),
-                    self.cache[k], v)
-        self.cache = big
-        self.tokens = self.tokens.at[iidx, 0].set(nxt)
-        out = np.zeros((self.n_slots,), np.int32)
-        out[np.asarray(idx)] = np.asarray(nxt)
+            return np.asarray(toks_dev), new
+        out = np.zeros((self.n_slots, int(horizon)), np.int32)
+        out[np.asarray(idx)] = np.asarray(toks_dev)
         return out, new
+
+    def decode_once(self, buckets: Sequence[int] = ()) -> Tuple[np.ndarray,
+                                                                bool]:
+        """Single-token compatibility wrapper over :meth:`decode_horizon`."""
+        toks, new = self.decode_horizon(1, buckets)
+        return toks[:, 0], new
 
 
 # ---------------------------------------------------------------- protocol
@@ -209,8 +338,12 @@ class ModelExecutor:
 
     ``group_for`` resolves a keep-mask (+ cache length) to the slot group
     that will host the request; ``prefill_into`` seats a prefilled request;
-    ``decode`` advances one group one token. ``compile_events`` counts new
-    executables (prefill shapes + decode batch buckets).
+    ``decode_horizon`` advances one group H tokens in one fused launch
+    (``decode`` is the H=1 compatibility form). ``compile_events`` counts
+    new executables (prefill shapes + decode (batch, horizon) buckets);
+    ``launch_s`` accumulates wall time spent inside compiled-executable
+    launches and their read-backs, so benchmarks can separate host
+    orchestration overhead from device compute.
 
     ``paged`` marks backends whose KV lives in a :class:`KVPool`'s physical
     page arrays — the engine switches admission to the token-granular pool
@@ -219,6 +352,7 @@ class ModelExecutor:
     measure *physical* internal fragmentation, not just the ledger's."""
 
     compile_events: int = 0
+    launch_s: float = 0.0
     paged: bool = False
 
     def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
@@ -228,8 +362,15 @@ class ModelExecutor:
                      prompt: np.ndarray, mask: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
-    def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
+    def decode_horizon(self, group: SlotGroup,
+                       horizon: int) -> Tuple[np.ndarray, bool]:
+        """Advance every occupied slot of ``group`` by ``horizon`` tokens;
+        returns ([n_slots, horizon] next tokens, new-compile flag)."""
         raise NotImplementedError
+
+    def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
+        toks, new = self.decode_horizon(group, 1)
+        return toks[:, 0], new
 
     def groups(self) -> List[SlotGroup]:
         raise NotImplementedError
@@ -260,7 +401,8 @@ class ModelExecutor:
 # ------------------------------------------------------------------- local
 class LocalExecutor(ModelExecutor):
     """Single-process slot-batched execution (the PR 1 path, extracted),
-    plus dynamic decode-batch buckets and per-cache-length groups."""
+    plus dynamic decode-batch buckets, per-cache-length groups, and fused
+    horizon decode."""
 
     def __init__(self, model, params, *, mode: str = "masked",
                  max_active: int = 8, kv_dtype=None,
@@ -275,6 +417,7 @@ class LocalExecutor(ModelExecutor):
         self.kv_dtype = kv_dtype
         self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
         self.compile_events = 0
+        self.launch_s = 0.0
         self._groups: Dict[Tuple, SlotGroup] = {}
         self._prefill_fns: Dict[Tuple, Any] = {}
 
@@ -346,23 +489,28 @@ class LocalExecutor(ModelExecutor):
         b, S = prompt.shape
         tokens = jnp.asarray(prompt, jnp.int32)
         fn = self._prefill_fn(group, b, S)
+        t0 = time.perf_counter()
         if group.gated:
             g = masks_lib.mask_to_gates(mask)
             logits, cache = fn(self.params, tokens, g["mixer"], g["ffn"])
         else:
             logits, cache = fn(group.params, tokens)
-        cache.pop("pos")
-        group.place(rid, slots, cache, mask if group.gated else None, S)
         first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        group.set_tokens(slots, first)
+        self.launch_s += time.perf_counter() - t0
+        cache.pop("pos")
+        group.place(rid, slots, cache, mask if group.gated else None, S,
+                    first)
         return first
 
     # -------------------------------------------------------------- decode
-    def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
-        nxt, new = group.decode_once(self.decode_buckets)
+    def decode_horizon(self, group: SlotGroup,
+                       horizon: int) -> Tuple[np.ndarray, bool]:
+        t0 = time.perf_counter()
+        toks, new = group.decode_horizon(horizon, self.decode_buckets)
+        self.launch_s += time.perf_counter() - t0
         if new:
             self.compile_events += 1
-        return nxt, new
+        return toks, new
 
     # ---------------------------------------------------------- utilization
     def kv_utilization(self) -> Tuple[float, float]:
@@ -386,6 +534,10 @@ class LocalExecutor(ModelExecutor):
             if occ:
                 per_tok = attn_bytes / (g.n_slots * g.cache_len)
                 pos = np.asarray(g.cache["pos"])[np.asarray(occ)]
+                # a just-finished slot may have over-advanced inside its
+                # final horizon (truncated tokens); its cache writes past
+                # cache_len were dropped, so clamp the used-token count
+                pos = np.minimum(pos, g.cache_len)
                 used += float(pos.sum()) * per_tok
         return used, phys
 
@@ -411,8 +563,12 @@ class PagedGroup:
     Satisfies the slice of the ``SlotGroup`` surface the engine touches
     (``free_slots`` / ``occupied_slots`` / ``occupied`` / ``evict`` /
     ``n_slots`` / ``key`` / ``mask``). KV lives in the bound pool's page
-    arrays; this object owns only the host-side per-slot metadata: the
-    int32 page-table rows, write positions, next tokens, and gates."""
+    arrays; this object owns the per-slot decode state around them —
+    int32 page-table rows, write positions, next tokens, and gates — as
+    **device-resident** arrays (``table_dev``/``pos_dev``/``tokens_dev``/
+    ``gates_dev``) updated incrementally at placement, eviction, and page
+    grants, plus host numpy mirrors (``table``/``pos``/``tokens``) for
+    the engine's occupancy bookkeeping and utilization sampling."""
 
     def __init__(self, cfg_model, n_slots: int, max_row_pages: int,
                  scratch_page: int):
@@ -428,7 +584,11 @@ class PagedGroup:
         self.pos = np.zeros((n_slots,), np.int32)
         self.tokens = np.zeros((n_slots,), np.int32)
         L = cfg_model.n_layers
-        self._gates_np = np.ones((2, L, n_slots), np.float32)
+        self.table_dev = jnp.asarray(self.table)
+        self.pos_dev = jnp.asarray(self.pos)
+        self.tokens_dev = jnp.asarray(self.tokens)
+        self.gates_dev = jnp.ones((2, L, n_slots), jnp.float32)
+        self._iidx_cache: Dict[Tuple[int, ...], Any] = {}
 
     def free_slots(self) -> List[int]:
         return [i for i, o in enumerate(self.occupants) if o is None]
@@ -439,13 +599,55 @@ class PagedGroup:
     def occupied(self) -> bool:
         return any(o is not None for o in self.occupants)
 
+    def iidx(self, idx: List[int]):
+        return _cached_iidx(self._iidx_cache, idx)
+
+    def place(self, rid: str, slots: List[int], rows_np: np.ndarray,
+              prompt_len: int, first: np.ndarray, gm: np.ndarray,
+              gf: np.ndarray) -> None:
+        """Seat a prefilled request: host mirrors plus ONE fused jitted
+        update writing the placed rows of every resident tensor (nothing
+        is re-uploaded beyond the new rows themselves)."""
+        npg = rows_np.shape[1]
+        full_rows = np.full((len(slots), self.max_row_pages),
+                            self.scratch_page, np.int32)
+        full_rows[:, :npg] = rows_np
+        for i, s in enumerate(slots):
+            self.occupants[s] = rid
+            self.table[s] = full_rows[i]
+            self.pos[s] = prompt_len
+            self.tokens[s] = first[i]
+        cols = np.stack([np.asarray(gm, np.float32),
+                         np.asarray(gf, np.float32)])
+        (self.table_dev, self.pos_dev, self.tokens_dev,
+         self.gates_dev) = _paged_place_upd(
+            self.table_dev, self.pos_dev, self.tokens_dev, self.gates_dev,
+            self.iidx(slots), full_rows, int(prompt_len),
+            np.asarray(first, np.int32), cols)
+
+    def grant_pages(self, entries: List[Tuple[int, int, int]]) -> None:
+        """Extend page-table rows with freshly granted pages:
+        ``entries`` = (slot, column, page id). One fused scatter updates
+        the device table; the host mirror tracks it."""
+        if not entries:
+            return
+        rows = np.asarray([e[0] for e in entries], np.int32)
+        cols = np.asarray([e[1] for e in entries], np.int32)
+        vals = np.asarray([e[2] for e in entries], np.int32)
+        self.table[rows, cols] = vals
+        self.table_dev = _paged_grant_upd(self.table_dev, rows, cols, vals)
+
     def evict(self, slots: List[int]) -> None:
         for s in slots:
             self.occupants[s] = None
             self.table[s] = self.scratch_page
             self.pos[s] = 0
             self.tokens[s] = 0
-            self._gates_np[:, :, s] = 1.0
+        if slots:
+            (self.table_dev, self.pos_dev, self.tokens_dev,
+             self.gates_dev) = _paged_evict_upd(
+                self.table_dev, self.pos_dev, self.tokens_dev,
+                self.gates_dev, self.iidx(slots), self.scratch_page)
 
 
 class PagedExecutor(ModelExecutor):
@@ -460,11 +662,14 @@ class PagedExecutor(ModelExecutor):
         those pages* inside the same jitted call (the pool arrays are
         donated through it);
       * **decode** batches any mix of cache lengths through one fused
-        paged step (``repro.models.decoder.paged_decode_step``): per-slot
-        page-table rows + write positions replace the pow2 cache-length
-        group machinery entirely — there is ONE group regardless of
-        request length, and a new token appends a page via
-        ``KVPool.extend`` only when it crosses a page boundary.
+        paged horizon (``repro.models.decoder.paged_decode_horizon``):
+        per-slot page-table rows + write positions replace the pow2
+        cache-length group machinery entirely — there is ONE group
+        regardless of request length. Pages for the whole horizon are
+        pre-granted in one bulk ``KVPool.extend`` *before* the launch
+        (:meth:`pre_extend_horizon`); the admission-time worst-case
+        commitment guarantees the grant cannot fail, so the fused loop
+        never pages mid-flight and the page table is constant across it.
 
     Dynamic decode-batch buckets work as in ``LocalExecutor``: occupied
     slots are stepped in the smallest bucket that holds them, padded with
@@ -508,25 +713,16 @@ class PagedExecutor(ModelExecutor):
         self.kv_dtype = kv_dtype or model.cfg.jnp_dtype()
         self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
         self.compile_events = 0
+        self.launch_s = 0.0
         self.pool = None               # bound per engine run
         self._group: Optional[PagedGroup] = None
         self._prefill_fns: Dict[Tuple, Any] = {}
-        self._decode_widths: set = set()
+        self._hfns: Dict[int, Any] = {}
+        self._decode_widths: set = set()    # (width, horizon) pairs
         # "pallas" routes decode through the paged flash-decode kernel on
         # TPU; elsewhere the XLA gather fallback is the fast path (the
         # kernel still runs in CI via interpret-mode equivalence tests)
         self._impl = ("pallas" if jax.default_backend() == "tpu" else "xla")
-        cfg = self.mcfg
-
-        @functools.partial(jax.jit, donate_argnums=(1, 2))
-        def _step(p, kp, vp, table, pos, tok, gm, gf):
-            logits, pools = decoder.paged_decode_step(
-                p, cfg, {"k": kp, "v": vp}, table, pos, tok,
-                gates={"mixer": gm, "ffn": gf}, impl=self._impl)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt, pools["k"], pools["v"]
-
-        self._step = _step
 
     # ------------------------------------------------------------- binding
     def page_phys_bytes(self, tokens_per_page: int) -> int:
@@ -604,23 +800,19 @@ class PagedExecutor(ModelExecutor):
         npg = len(rows[0])
         rows_np = np.asarray(rows, np.int32)
         fn = self._prefill_fn(b, S, npg)
+        # one mask_to_gates serves both the jitted call and the group's
+        # resident gate columns
         g = masks_lib.mask_to_gates(mask)
+        t0 = time.perf_counter()
         logits, kp, vp = fn(self.params, jnp.asarray(prompt, jnp.int32),
                             g["mixer"], g["ffn"],
                             self.pool.k_pages, self.pool.v_pages,
                             jnp.asarray(rows_np))
         self.pool.k_pages, self.pool.v_pages = kp, vp
         first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-        gates = masks_lib.mask_to_gates(mask)
-        gm, gf = np.asarray(gates["mixer"]), np.asarray(gates["ffn"])
-        for i, s in enumerate(slots):
-            group.occupants[s] = rid
-            group.table[s, :npg] = rows_np[i]
-            group.table[s, npg:] = group.scratch_page
-            group.pos[s] = S
-            group.tokens[s] = first[i]
-            group._gates_np[0, :, s] = gm
-            group._gates_np[1, :, s] = gf
+        self.launch_s += time.perf_counter() - t0
+        group.place(rid, slots, rows_np, S, first,
+                    np.asarray(g["mixer"]), np.asarray(g["ffn"]))
         return first
 
     # -------------------------------------------------------------- decode
@@ -630,60 +822,137 @@ class PagedExecutor(ModelExecutor):
         # full width: every slot steps (free rows write the scratch page)
         return idx if idx is not None else list(range(group.n_slots))
 
-    def decode(self, group: PagedGroup) -> Tuple[np.ndarray, bool]:
-        """Advance every occupied slot one token. Before stepping, each
-        resident request appends one token to its pool allocation —
-        crossing a page boundary grants fresh pages whose ids extend the
-        slot's page-table row (this is where per-token paging happens)."""
+    def _horizon_fn(self, horizon: int, bucketed: bool):
+        """Jitted fused paged horizon per (H, bucketed). The bucketed
+        variant gathers the stepped rows from the full-width resident
+        state and scatters positions/tokens back *inside* the compiled
+        call (eager indexing would upload an index-normalization scalar
+        per launch — the transfer-guard test forbids it)."""
+        h = int(horizon)
+        key = (h, bool(bucketed))
+        if key not in self._hfns:
+            cfg, impl = self.mcfg, self._impl
+
+            if not bucketed:
+                @functools.partial(jax.jit, donate_argnums=(1, 2, 4, 5))
+                def fn(p, kp, vp, table, pos, tok, gates):
+                    toks, pools, pos = decoder.paged_decode_horizon(
+                        p, cfg, {"k": kp, "v": vp}, table, pos,
+                        tok[:, None], h,
+                        gates={"mixer": gates[0], "ffn": gates[1]},
+                        impl=impl)
+                    return toks, pools["k"], pools["v"], pos, toks[:, -1]
+            else:
+                @functools.partial(jax.jit, donate_argnums=(1, 2, 4, 5))
+                def fn(p, kp, vp, table, pos, tok, gates, iidx):
+                    g = gates[:, :, iidx]
+                    toks, pools, pos_out = decoder.paged_decode_horizon(
+                        p, cfg, {"k": kp, "v": vp}, table[iidx], pos[iidx],
+                        tok[iidx][:, None], h,
+                        gates={"mixer": g[0], "ffn": g[1]}, impl=impl)
+                    pos = pos.at[iidx].set(pos_out)
+                    tok = tok.at[iidx].set(toks[:, -1])
+                    return toks, pools["k"], pools["v"], pos, tok
+
+            self._hfns[key] = fn
+        return self._hfns[key]
+
+    def pre_extend_horizon(self, group: PagedGroup, horizon: int) -> int:
+        """Pre-grant every page the coming horizon can touch: ONE bulk
+        ``KVPool.extend`` per resident request (clamped to its admission
+        commitment — ``alloc_tokens``' worst-case reservation guarantees
+        the grant can't fail), folding any new page ids into the device
+        page table in one scatter. Positions past the commitment (a
+        request over-generating inside its final horizon) resolve to the
+        scratch page / its own last page and are truncated by the engine.
+        Returns the number of pages granted (0 in the steady state)."""
         occ = group.occupied_slots()
+        entries: List[Tuple[int, int, int]] = []
         seen = set()
         for s in occ:
             rid = group.occupants[s]
             if rid in seen:
                 continue
             seen.add(rid)
+            n = min(int(horizon), self.pool.remaining_commitment(rid))
+            if n <= 0:
+                continue
+            # pages currently held per row (alloc/extend keep rows at
+            # exactly ceil(seq/page) — no need to copy the id lists)
+            have = self.pool.pages_per_row(self.pool.seq_tokens(rid))
+            new_rows = self.pool.extend(rid, n)    # [batch][granted pages]
+            if not any(new_rows):
+                continue
             rid_slots = [t for t in occ if group.occupants[t] == rid]
-            new_rows = self.pool.extend(rid, 1)    # [batch][0 or 1] pages
-            if any(new_rows):
-                npg_now = len(self.pool.row_pages(rid)[0])
-                for i, t in enumerate(rid_slots):
-                    for j, page in enumerate(new_rows[i]):
-                        group.table[t, npg_now - len(new_rows[i]) + j] = page
+            for i, t in enumerate(rid_slots):
+                for j, page in enumerate(new_rows[i]):
+                    entries.append((t, have + j, page))
+        group.grant_pages(entries)
+        return len(entries)
+
+    def launch_horizon(self, group: PagedGroup,
+                       horizon: int) -> Tuple[Any, List[int], bool]:
+        """Device phase of a fused paged horizon: gather the stepped
+        slots' resident state, launch ONE compiled ``lax.scan`` that
+        advances them ``horizon`` tokens against the page pools, and fold
+        positions/tokens back. Pages must already be granted
+        (:meth:`pre_extend_horizon`). Returns (device toks [width, H],
+        stepped slot ids, new-compile flag); zero host↔device transfers
+        once warm — the caller's single ``np.asarray`` is the only sync."""
         idx = self._decode_batch(group)
         width = len(idx)
-        new = width not in self._decode_widths
-        self._decode_widths.add(width)
+        key = (width, int(horizon))
+        new = key not in self._decode_widths
+        self._decode_widths.add(key)
         if new:
             self.compile_events += 1
-        iidx = np.asarray(idx)
-        nxt, kp, vp = self._step(
-            self.params, self.pool.k_pages, self.pool.v_pages,
-            jnp.asarray(group.table[iidx]), jnp.asarray(group.pos[iidx]),
-            jnp.asarray(group.tokens[iidx])[:, None],
-            jnp.asarray(group._gates_np[0][:, iidx]),
-            jnp.asarray(group._gates_np[1][:, iidx]))
+        full = width == group.n_slots
+        fn = self._horizon_fn(horizon, bucketed=not full)
+        args = (self.params, self.pool.k_pages, self.pool.v_pages,
+                group.table_dev, group.pos_dev, group.tokens_dev,
+                group.gates_dev)
+        if not full:
+            args += (group.iidx(idx),)
+        toks, kp, vp, pos, tok = fn(*args)
         self.pool.k_pages, self.pool.v_pages = kp, vp
-        nxt = np.asarray(nxt)
-        out = np.zeros((group.n_slots,), np.int32)
+        group.pos_dev = pos
+        group.tokens_dev = tok
+        return toks, idx, new
+
+    def decode_horizon(self, group: PagedGroup,
+                       horizon: int) -> Tuple[np.ndarray, bool]:
+        """Advance every occupied slot ``horizon`` tokens: bulk page
+        pre-grant, one fused launch, one [width, horizon] read-back."""
+        self.pre_extend_horizon(group, horizon)
+        t0 = time.perf_counter()
+        toks_dev, idx, new = self.launch_horizon(group, horizon)
+        nxt = np.asarray(toks_dev)        # the single device→host sync
+        self.launch_s += time.perf_counter() - t0
+        out = np.zeros((group.n_slots, int(horizon)), np.int32)
         for j, s in enumerate(idx):
             if group.occupants[s] is not None:
                 out[s] = nxt[j]
-                group.tokens[s] = nxt[j]
-                group.pos[s] += 1
+                group.tokens[s] = nxt[j, -1]
+                group.pos[s] += int(horizon)
         return out, new
 
     # ---------------------------------------------------------- utilization
     def kv_utilization(self) -> Tuple[float, float]:
         """used = tokens actually written by resident requests; physical =
         bytes of the pages they hold. Waste is bounded by one partial page
-        per row — the whole point of paging."""
+        per row plus the pre-granted horizon tail — the whole point of
+        paging."""
         if self.pool is None or self._group is None:
             return 0.0, 0.0
         pt = self.pool.tokens_per_page
         tok_bytes = self.pool.page_bytes / pt
-        occ = self._group.occupied_slots()
-        used = float(self._group.pos[np.asarray(occ)].sum()) * tok_bytes \
-            if occ else 0.0
+        used = 0.0
+        for s in self._group.occupied_slots():
+            rid = self._group.occupants[s]
+            # clamp to the granted backing: a request over-generating in
+            # its final horizon advances pos past its page-backed tokens
+            used += min(int(self._group.pos[s]),
+                        self.pool.seq_tokens(rid)) * tok_bytes
         return used, self.pool.bytes_reserved
 
     # --------------------------------------------------------------- stats
@@ -769,6 +1038,9 @@ class ShardedExecutor(ModelExecutor):
         self._todo()
 
     def prefill_into(self, group, slots, rid, prompt, mask):
+        self._todo()
+
+    def decode_horizon(self, group, horizon):
         self._todo()
 
     def decode(self, group):

@@ -277,16 +277,36 @@ class KVPool:
         self._tok[rid] = alloc
         return alloc
 
-    def extend(self, rid: str, n_tokens: int = 1) -> List[List[int]]:
-        """Append ``n_tokens`` decode tokens to ``rid``'s rows; returns the
-        newly granted page ids per row (usually empty — a page boundary is
-        crossed once every ``tokens_per_page`` tokens). Cannot exceed the
-        admission commitment; within it, strict-mode extends never fail."""
+    def seq_tokens(self, rid: str) -> int:
+        """Tokens per row with granted page backing for a live token
+        allocation (the physical write frontier — positions beyond it have
+        no page of their own)."""
+        return self._tok_state(rid, "seq_tokens").seq_tokens
+
+    def remaining_commitment(self, rid: str) -> int:
+        """Tokens per row still extendable under ``rid``'s admission
+        commitment (``max_tokens − seq_tokens``). The horizon decode path
+        pre-grants ``min(H, remaining_commitment)`` tokens in ONE
+        :meth:`extend` before launching a fused H-step loop — within the
+        commitment that bulk extend can never fail in strict mode."""
+        st = self._tok_state(rid, "remaining_commitment")
+        return st.max_tokens - st.seq_tokens
+
+    def _tok_state(self, rid: str, op: str) -> TokenAllocation:
         st = self._tok.get(rid)
         if st is None:
             raise ValueError(
-                f"extend({rid!r}): unknown request id; live token "
+                f"{op}({rid!r}): unknown request id; live token "
                 f"allocations: {sorted(self._tok)}")
+        return st
+
+    def extend(self, rid: str, n_tokens: int = 1) -> List[List[int]]:
+        """Append ``n_tokens`` decode tokens to ``rid``'s rows; returns the
+        newly granted page ids per row (usually empty — a page boundary is
+        crossed once every ``tokens_per_page`` tokens; a bulk horizon
+        extend may grant several pages per row at once). Cannot exceed the
+        admission commitment; within it, strict-mode extends never fail."""
+        st = self._tok_state(rid, "extend")
         new_seq = st.seq_tokens + int(n_tokens)
         if new_seq > st.max_tokens:
             raise ValueError(
@@ -316,11 +336,7 @@ class KVPool:
 
     def row_pages(self, rid: str) -> List[List[int]]:
         """Current per-row page ids of a live token allocation."""
-        st = self._tok.get(rid)
-        if st is None:
-            raise ValueError(
-                f"row_pages({rid!r}): unknown request id; live token "
-                f"allocations: {sorted(self._tok)}")
+        st = self._tok_state(rid, "row_pages")
         return [list(r) for r in st.rows]
 
     def free(self, rid: str, *, missing_ok: bool = False) -> float:

@@ -1,0 +1,187 @@
+"""Horizon decode (DESIGN.md §4): device-resident state + fused H-token
+decode loops.
+
+Pins the two properties the horizon refactor exists for:
+
+  * a *warmed* horizon launch performs ZERO host↔device transfers between
+    the launch and the single ``[B, H]`` token read-back — all decode
+    state (cache/pos/tokens/gates/page tables) is device-resident and the
+    bucket index vectors are cached (``jax.transfer_guard``);
+  * the horizon size is unobservable in results: engine token streams for
+    ``decode_horizon ∈ {1, 4, 8}`` are bitwise-identical per request on
+    BOTH executors, including ``max_new`` values that land mid-horizon
+    (over-generated tokens truncated at the boundary).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl, dqn, masks, memory
+from repro.core.policy import RLPolicy
+from repro.models import decoder
+from repro.runtime import (EngineConfig, EngineRequest, KVPool,
+                           LocalExecutor, PagedExecutor, RAPEngine)
+
+
+@pytest.fixture(scope="module")
+def served(tiny_model):
+    model, params, batch = tiny_model
+    mm = memory.build_memory_model(model.cfg)
+    qp = dqn.init_qnet(jax.random.key(0), 2 * model.cfg.n_layers + 4,
+                       2 * model.cfg.n_layers + 1, 32)
+    c = ctl.RAPController(model, params, batch, mm, qp)
+    return model, params, batch, mm, c
+
+
+def _reqs(prompts, max_new=None, rate=1000.0, seed=0):
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for i, p in enumerate(prompts):
+        t += float(rng.exponential(1.0 / rate))
+        out.append(EngineRequest(rid=f"r{i}", prompt=np.asarray(p, np.int32),
+                                 arrival_t=t, max_new=max_new))
+    return out
+
+
+def _engine(model, params, c, *, horizon, executor=None, budget,
+            max_new=6, slots=4, max_len=32):
+    ex = None
+    if executor == "paged":
+        ex = PagedExecutor(model, params, max_active=slots)
+    return RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=max_new, max_active=slots,
+        max_len=max_len, budget_bytes=budget, tokens_per_page=8,
+        decode_horizon=horizon), executor=ex)
+
+
+# ---------------------------------------------------------- equivalence
+@pytest.mark.parametrize("executor", ["local", "paged"])
+def test_engine_horizon_token_equivalence(served, executor):
+    """decode_horizon ∈ {1, 4, 8} must emit bitwise-identical per-request
+    token streams — max_new=6 deliberately lands mid-horizon for H=4 and
+    H=8, exercising boundary truncation."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :24], toks[:1, :16]]
+    outs = {}
+    for horizon in (1, 4, 8):
+        eng = _engine(model, params, c, horizon=horizon, executor=executor,
+                      budget=budget)
+        rep = eng.run(_reqs(prompts))
+        assert all(r.status == "done" for r in rep.results)
+        outs[horizon] = {r.rid: r.tokens for r in rep.results}
+        for r in rep.results:
+            assert r.tokens.shape == (1, 6)    # truncated, never padded
+    for horizon in (4, 8):
+        for rid, t in outs[1].items():
+            np.testing.assert_array_equal(
+                t, outs[horizon][rid],
+                err_msg=f"H={horizon} diverged from H=1 on {rid}")
+
+
+def test_horizon_matches_reference_rollout(served):
+    """decoder.decode_horizon == H separate decode_step calls, bitwise."""
+    model, params, batch, mm, c = served
+    cfg = model.cfg
+    import jax.numpy as jnp
+    prompt = jnp.asarray(np.asarray(batch["tokens"])[:2, :12], jnp.int32)
+    logits, cache = decoder.prefill(params, cfg, prompt, 24)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    ref_cache = jax.tree.map(lambda x: x, cache)
+    ref, rtok = [], tok
+    for _ in range(5):
+        lg, ref_cache = decoder.decode_step(params, cfg, ref_cache, rtok)
+        rtok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        ref.append(np.asarray(rtok)[:, 0])
+    hor, _ = decoder.decode_horizon(params, cfg, cache, tok, 5)
+    np.testing.assert_array_equal(np.asarray(hor), np.stack(ref, axis=1))
+
+
+# --------------------------------------------------------- transfer guard
+def test_local_horizon_zero_transfers_when_warm(tiny_model):
+    """After one warming call, a LocalExecutor horizon launch moves no
+    bytes between host and device: cache, positions, seed tokens, gates,
+    and the bucket index vector are all device-resident. The only sync is
+    the single [B, H] token read-back after the launch."""
+    model, params, batch = tiny_model
+    full = masks.full_mask(model.cfg.n_layers)
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = LocalExecutor(model, params, mode="masked", max_active=4)
+    group = ex.group_for(full, 32)
+    ex.prefill_into(group, [0], "r0", prompt, full)
+    ex.decode_horizon(group, 4)                     # warm (compiles)
+    with jax.transfer_guard("disallow"):
+        toks_dev, idx, new = group.launch_horizon(4, ex.decode_buckets)
+    assert not new                                  # warmed executable
+    toks = np.asarray(toks_dev)                     # the one read-back
+    assert toks.shape == (1, 4)                     # bucket width 1
+    assert idx == [0]
+
+
+def test_paged_horizon_zero_transfers_when_warm(tiny_model):
+    """Paged sibling: page table, positions, tokens, and gates are
+    device-resident; the bulk page pre-grant runs host-side before the
+    launch (here sized so no page boundary is crossed) and the launch
+    itself moves nothing."""
+    model, params, batch = tiny_model
+    full = masks.full_mask(model.cfg.n_layers)
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = PagedExecutor(model, params, max_active=4)
+    pt = 64                       # horizon stays inside the prompt's page
+    page_bytes = ex.page_phys_bytes(pt)
+    pool = KVPool(16 * page_bytes, page_bytes=page_bytes,
+                  tokens_per_page=pt)
+    ex.bind_pool(pool, max_len=64)
+    pool.alloc_tokens("r0", 1, 16, max_tokens=64)
+    group = ex.group_for(full, 0)
+    ex.prefill_into(group, [0], "r0", prompt, full)
+    ex.decode_horizon(group, 4)                     # warm (compiles)
+    with jax.transfer_guard("disallow"):
+        granted = ex.pre_extend_horizon(group, 4)   # host-only bookkeeping
+        toks_dev, idx, new = ex.launch_horizon(group, 4)
+    assert granted == 0 and not new
+    toks = np.asarray(toks_dev)                     # the one read-back
+    assert toks.shape == (1, 4)
+    assert idx == [0]
+    pool.free("r0")
+
+
+def test_paged_horizon_bulk_pre_grant(tiny_model):
+    """A horizon crossing a page boundary pre-grants ALL its pages in one
+    bulk extend before the launch, and the grant lands in both the host
+    mirror and the device page table."""
+    model, params, batch = tiny_model
+    full = masks.full_mask(model.cfg.n_layers)
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = PagedExecutor(model, params, max_active=4)
+    pt = 8
+    page_bytes = ex.page_phys_bytes(pt)
+    pool = KVPool(16 * page_bytes, page_bytes=page_bytes,
+                  tokens_per_page=pt)
+    ex.bind_pool(pool, max_len=64)
+    pool.alloc_tokens("r0", 1, 16, max_tokens=32)   # 2 pages, commits 4
+    group = ex.group_for(full, 0)
+    ex.prefill_into(group, [0], "r0", prompt, full)
+    # 16 tokens backed; an 8-token horizon needs page 3 (tokens 17–24)
+    granted = ex.pre_extend_horizon(group, 8)
+    assert granted == 1
+    assert pool.seq_tokens("r0") == 24
+    assert group.table[0, 2] != group.scratch_page
+    np.testing.assert_array_equal(np.asarray(group.table_dev), group.table)
+    # beyond the commitment the pre-grant clamps instead of raising
+    ex.pre_extend_horizon(group, 8)
+    assert pool.seq_tokens("r0") == 32
+    ex.pre_extend_horizon(group, 8)                 # fully committed: no-op
+    assert pool.seq_tokens("r0") == 32
+    pool.free("r0")
+
+
+# ------------------------------------------------------------- validation
+def test_decode_horizon_validation(served):
+    model, params, batch, mm, c = served
+    with pytest.raises(ValueError, match="decode_horizon"):
+        EngineConfig(decode_horizon=0)
+    with pytest.raises(ValueError, match="horizon"):
+        decoder.decode_horizon(params, model.cfg, {}, np.zeros((1, 1)), 0)
