@@ -11,6 +11,16 @@ Replays the SAME ≥16-request Poisson arrival trace through:
     measuring what paging buys in *physical* internal fragmentation
     (``measured_frag``: 1 − tokens-written / cache-bytes-allocated,
     sampled per decode tick) at equal-or-better throughput;
+  * **engine/sharded** — the same trace through ``ShardedExecutor``
+    (masked mode): mesh-resident slot groups over a DP-majority host
+    mesh (DESIGN.md §5). On a multi-device host the warmed sharded row
+    must not be SLOWER than single-device local at equal batch — the
+    horizon amortizes the collectives, and a regressive mesh would mean
+    sharding costs more than it parallelizes. Gated below like the
+    horizon gate, hard-failing on real accelerator meshes; fake
+    host-platform CPU devices report the ratio loudly instead (threads
+    on one socket measure the partition overhead without the silicon
+    that pays for it);
   * **serial** — the historical one-shot path: ``RAPServer.serve()`` per
     request, each against its own instantaneous budget.
 
@@ -85,9 +95,10 @@ def main():
     from repro.core.policy import make_policy
     from repro.core.workload import PoissonConfig, poisson_requests
     from repro.data import SyntheticCorpus
+    from repro.launch.mesh import make_serve_mesh
     from repro.models import registry
     from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
-                               RAPEngine, RAPServer)
+                               RAPEngine, RAPServer, ShardedExecutor)
 
     cfg = get_smoke_config(args.arch).replace(n_layers=args.layers)
     model = registry.build(cfg)
@@ -128,10 +139,15 @@ def main():
                           arrival_t=trace[i].t)
             for i, p in enumerate(prompts)]
 
+    serve_mesh = make_serve_mesh(args.slots)
+
     def run_engine(mode, executor_kind, horizon):
         executor = None
         if executor_kind == "paged":
             executor = PagedExecutor(model, params, max_active=args.slots)
+        elif executor_kind == "sharded":
+            executor = ShardedExecutor(model, serve_mesh, params=params,
+                                       max_active=args.slots)
         engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=args.max_new, max_active=args.slots,
             max_len=max_total, budget_bytes=budget, decode_horizon=horizon),
@@ -162,6 +178,13 @@ def main():
     elif "masked" in args.modes:
         print(f"[bench] skipping paged run: {args.arch} is not a uniform "
               f"all-attention layout")
+    if "masked" in args.modes:
+        # sharded serves ANY layout in masked mode (gated groups); on a
+        # single-device host this is the (1, 1) degenerate mesh and the
+        # row measures the jit-with-shardings overhead floor
+        run_matrix.append(("masked", "sharded"))
+        print(f"[bench] sharded mesh: {dict(serve_mesh.shape)} over "
+              f"{serve_mesh.size} of {len(jax.devices())} devices")
     serial_cache = {}
     runs = [(m, e, h) for m, e in run_matrix for h in args.horizons]
     for mode, executor_kind, horizon in runs:
@@ -244,11 +267,12 @@ def main():
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 3,        # v3: horizon sweep — rows gained decode_horizon
-                            # (tokens fused per engine macro-tick) and
-                            # host_ms_per_tok (wall − compiled-launch time,
-                            # per generated token). v2 added executor
-                            # (slot|paged) + measured_frag.
+        "schema": 4,        # v4: sharded executor rows (mesh-resident slot
+                            # groups, DESIGN.md §5) — executor gains
+                            # "sharded" and config gains mesh (axis sizes)
+                            # + devices. v3 added the horizon sweep
+                            # (decode_horizon, host_ms_per_tok). v2 added
+                            # executor (slot|paged) + measured_frag.
         "bench": "engine_throughput",
         "config": {
             "arch": args.arch, "layers": args.layers,
@@ -258,6 +282,8 @@ def main():
             "scheduler": args.scheduler, "seed": args.seed,
             "warmup": not args.no_warmup,
             "horizons": list(args.horizons),
+            "mesh": {str(k): int(v) for k, v in serve_mesh.shape.items()},
+            "devices": len(jax.devices()),
         },
         "rows": rows,
     }
@@ -295,6 +321,49 @@ def main():
             f"H={h_lo} ({lo['engine_tok_s']:.1f} tok/s) — the fused "
             f"horizon loop must beat per-token dispatch; a regression "
             f"here invalidates the perf trajectory")
+
+    # Sharded gate — on a multi-device host, the warmed sharded row at the
+    # top horizon must not be slower than single-device local at equal
+    # batch: the horizon pays the mesh's collectives once per H tokens, so
+    # sharding must amortize, not regress. Enforced on real accelerator
+    # meshes only: fake host-platform CPU "devices"
+    # (XLA_FLAGS=--xla_force_host_platform_device_count) are threads on
+    # one socket, so the partition/dispatch overhead they measure is real
+    # but the parallel speedup that would pay for it is structurally
+    # impossible — there, the ratio is reported loudly instead of failing.
+    # Also skipped on one device (the (1, 1) mesh row only tracks the
+    # jit-with-shardings overhead floor) and on cold runs.
+    sh = by_exec.get(("masked", "sharded", h_hi))
+    sl = by_exec.get(("masked", "slot", h_hi))
+    if not (sh and sl):
+        print("[bench] skipping sharded gate (no masked sharded+slot rows)")
+    elif args.no_warmup:
+        print("[bench] skipping sharded gate (--no-warmup: numbers are "
+              "compile-dominated)")
+    elif serve_mesh.size <= 1:
+        print("[bench] skipping sharded gate (single-device mesh)")
+    else:
+        ratio = sh["engine_tok_s"] / max(sl["engine_tok_s"], 1e-9)
+        print(f"[bench] sharded vs local (masked, H={h_hi}, "
+              f"{serve_mesh.size}-device mesh): "
+              f"{sh['engine_tok_s']:.1f} vs {sl['engine_tok_s']:.1f} tok/s "
+              f"(×{ratio:.2f})")
+        if sh["engine_tok_s"] >= sl["engine_tok_s"]:
+            pass
+        elif jax.default_backend() == "cpu":
+            print(f"[bench] WARNING: sharded slower than local ×{ratio:.2f} "
+                  f"— expected on fake host-platform CPU devices (shared "
+                  f"socket); the gate hard-fails on real accelerator "
+                  f"meshes")
+        else:
+            raise SystemExit(
+                f"[bench] FAIL: masked/sharded H={h_hi} on a "
+                f"{serve_mesh.size}-device mesh ({sh['engine_tok_s']:.1f} "
+                f"tok/s) is slower than single-device local "
+                f"({sl['engine_tok_s']:.1f} tok/s) at equal batch — "
+                f"collectives must be amortized by the horizon, not "
+                f"regressive; a regression here invalidates the sharded "
+                f"serve path")
 
 
 if __name__ == "__main__":

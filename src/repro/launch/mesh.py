@@ -39,6 +39,26 @@ def make_host_mesh(shape: Tuple[int, ...] = None, axes=None):
                      devices=jax.devices()[: int(np.prod(shape))])
 
 
+def make_serve_mesh(n_slots: Optional[int] = None, *, model: int = 1):
+    """DP-majority serve mesh over the host's devices (DESIGN.md §5).
+
+    The engine's slot axis is the data-parallel dimension, so the "data"
+    axis is the largest power of two that (a) fits the devices left after
+    the requested "model" (TP) axis and (b) divides ``n_slots`` — a data
+    axis that does not divide the slot count would make
+    ``serve_state_pspecs`` fall back to replication. One device yields
+    the degenerate (1, 1) mesh; the 8-fake-device CI host
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) with 8
+    slots yields (8, 1)."""
+    import jax
+
+    n = len(jax.devices()) // max(int(model), 1)
+    d = 1
+    while d * 2 <= n and (n_slots is None or int(n_slots) % (d * 2) == 0):
+        d *= 2
+    return make_host_mesh((d, int(model)), ("data", "model"))
+
+
 # Hardware constants for the roofline (TPU v5e per chip).
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §6):
+Two serving paths (DESIGN.md §7):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -34,12 +34,20 @@ def main():
                          "random | mha_drop | ffn_skip | oneshot | dense)")
     ap.add_argument("--scheduler", choices=("fifo", "sjf", "priority"),
                     default="fifo", help="engine admission ordering")
-    ap.add_argument("--executor", choices=("local", "paged"),
+    ap.add_argument("--executor", choices=("local", "paged", "sharded"),
                     default="local",
                     help="execution backend: 'local' = slot-batched caches "
                          "(reference, any mode/arch); 'paged' = physically "
                          "paged KV pool with per-request page tables "
-                         "(masked mode, uniform-attention archs)")
+                         "(masked mode, uniform-attention archs); "
+                         "'sharded' = mesh-resident slot groups, TP/DP "
+                         "horizon decode (masked mode; see --mesh — works "
+                         "on CPU via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--mesh", default="auto",
+                    help="sharded executor mesh as DATAxMODEL (e.g. 4x2); "
+                         "'auto' picks a DP-majority mesh over the host's "
+                         "devices whose data axis divides --slots")
     ap.add_argument("--serial", action="store_true",
                     help="one-shot RAPServer replay instead of the engine")
     ap.add_argument("--episodes", type=int, default=20)
@@ -70,11 +78,15 @@ def main():
     from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
                                RAPEngine, RAPServer)
 
-    if args.executor == "paged" and args.serial:
-        ap.error("--executor paged drives the batching engine; drop --serial")
+    if args.executor != "local" and args.serial:
+        ap.error(f"--executor {args.executor} drives the batching engine; "
+                 f"drop --serial")
     if args.executor == "paged" and args.mode != "masked":
         ap.error("--executor paged serves masked mode (structural paged "
                  "serving is a ROADMAP item); add --mode masked")
+    if args.executor == "sharded" and args.mode != "masked":
+        ap.error("--executor sharded serves masked mode (structural sharded "
+                 "buckets are a ROADMAP item); add --mode masked")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = registry.build(cfg)
@@ -138,6 +150,33 @@ def main():
     executor = None
     if args.executor == "paged":
         executor = PagedExecutor(model, params, max_active=slots)
+    elif args.executor == "sharded":
+        from repro.launch.mesh import make_host_mesh, make_serve_mesh
+        from repro.runtime import ShardedExecutor
+        if args.mesh == "auto":
+            mesh = make_serve_mesh(slots)
+        else:
+            try:
+                d, m = (int(x) for x in args.mesh.lower().split("x"))
+            except ValueError:
+                ap.error(f"--mesh must be DATAxMODEL (e.g. 4x2), got "
+                         f"{args.mesh!r}")
+            if d * m > len(jax.devices()):
+                ap.error(f"--mesh {args.mesh} needs {d * m} devices, host "
+                         f"has {len(jax.devices())} (on CPU set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N)")
+            if slots % d != 0:
+                # serve_state_pspecs would silently fall back to full
+                # replication — N-way dispatch overhead, zero DP sharding
+                print(f"WARNING: data axis {d} does not divide {slots} "
+                      f"slots — the slot axis will replicate instead of "
+                      f"sharding (pick --slots a multiple of {d}, or "
+                      f"--mesh auto)")
+            mesh = make_host_mesh((d, m), ("data", "model"))
+        print(f"sharded mesh: {dict(mesh.shape)} over {mesh.size} of "
+              f"{len(jax.devices())} devices")
+        executor = ShardedExecutor(model, mesh, params=params,
+                                   max_active=slots)
     engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
         max_len=max_total, budget_bytes=budget,

@@ -1,4 +1,6 @@
 from repro.parallel.sharding import (batch_pspecs, cache_pspecs,
-                                     param_pspecs, shardings_for)
+                                     param_pspecs, serve_slot_pspec,
+                                     serve_state_pspecs, shardings_for)
 
-__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "shardings_for"]
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs",
+           "serve_state_pspecs", "serve_slot_pspec", "shardings_for"]

@@ -217,6 +217,49 @@ def cache_pspecs(cache_tree, mesh: Mesh, *, batch: int,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+# ------------------------------------------------------------- serve state
+def serve_state_pspecs(state_tree, mesh: Mesh, *, n_slots: int):
+    """Slot-group decode-state shardings for the sharded serve path
+    (DESIGN.md §5 "Sharded serving").
+
+    The engine's slot axis is the data-parallel dimension: every leaf with
+    ``n_slots`` in position 1 (attention KV ``[L, B, S, K, Dh]``, recurrent
+    state ``[L, B, ...]``) shards its slot axis over ("pod", "data"), and
+    rank-5 KV leaves additionally shard the KV-head axis over "model" —
+    the tensor-parallel split matching ``param_pspecs``' wq/wk/wv
+    out-feature sharding, so the per-head KV a TP shard writes lives on
+    the shard that computed it. Per-slot positions (rank-1 ``[n_slots]``)
+    follow the slot axis. Every rule falls back per-axis on divisibility
+    (`_pick`), so smoke meshes and odd head counts degrade to replication
+    instead of GSPMD errors.
+    """
+    dp = _dp_axes(mesh)
+
+    def rule(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 1:
+            return _pick(shape, mesh, P(dp)) if shape[0] == n_slots else P()
+        if len(shape) >= 2 and shape[1] == n_slots:
+            rest = [None] * (len(shape) - 2)
+            if len(shape) == 5:      # attn KV (+ int8 scales): heads on TP
+                return _pick(shape, mesh,
+                             P(None, dp, None, "model", None),
+                             P(None, dp, None, None, None),
+                             P(None, None, None, "model", None))
+            return _pick(shape, mesh, P(None, dp, *rest))
+        return P()
+
+    return jax.tree.map(rule, state_tree)
+
+
+def serve_slot_pspec(shape, mesh: Mesh) -> P:
+    """Leading-axis (slot) DP spec with divisibility fallback — the
+    per-slot seed-token ``[n_slots, 1]`` companion of
+    :func:`serve_state_pspecs`."""
+    shape = tuple(shape)
+    return _pick(shape, mesh, P(_dp_axes(mesh), *([None] * (len(shape) - 1))))
+
+
 # ------------------------------------------------------------------ helper
 def shardings_for(tree_of_pspecs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,

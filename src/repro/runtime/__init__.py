@@ -3,7 +3,8 @@ from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
                                   RAPEngine, RequestResult)
 from repro.runtime.executor import (LocalExecutor, ModelExecutor,
                                     PagedExecutor, PagedGroup,
-                                    ShardedExecutor, SlotGroup)
+                                    ShardedExecutor, ShardedSlotGroup,
+                                    SlotGroup)
 from repro.runtime.kv_pool import (KVPool, PageAllocation, PoolExhausted,
                                    TokenAllocation)
 from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
@@ -19,4 +20,5 @@ __all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer", "ServeResult",
            "PoolExhausted", "Scheduler", "SchedulerOutput", "FIFOScheduler",
            "SJFScheduler", "PriorityScheduler", "SCHEDULERS",
            "make_scheduler", "ModelExecutor", "LocalExecutor",
-           "PagedExecutor", "PagedGroup", "ShardedExecutor", "SlotGroup"]
+           "PagedExecutor", "PagedGroup", "ShardedExecutor",
+           "ShardedSlotGroup", "SlotGroup"]

@@ -35,17 +35,21 @@ Executors:
     for the whole horizon are pre-granted in ONE bulk ``KVPool.extend``
     before the launch (the admission-time worst-case commitment
     guarantees it cannot fail), so no paging happens mid-loop.
-  * :class:`ShardedExecutor` — mesh placement via
-    ``repro.parallel.sharding``: places parameters with the production
-    partition rules and lowers a sharded decode step for cost analysis
-    (``launch/rap_sweep.py``). The slot-batched serve path on a mesh is a
-    ROADMAP item; serve-path methods raise ``NotImplementedError`` with
-    that pointer.
+  * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §5
+    "Sharded serving"): parameters placed with the production partition
+    rules of ``repro.parallel.sharding`` (and a sharded decode-step
+    lowering for cost analysis, ``launch/rap_sweep.py``), groups are
+    :class:`ShardedSlotGroup` whose decode state lives sharded on the
+    mesh — KV over slots (DP) and KV heads (TP), gates replicated — and
+    whose horizon scan is ONE mesh-lowered executable per macro-tick,
+    paying collectives once per H tokens. Masked mode only; structural
+    sharded buckets are a ROADMAP item.
 
 ``LocalExecutor`` remains the reference backend: it serves every layout
 (heterogeneous mixers keep per-request slot state) and both pruning modes,
-and the paged path's token-equivalence is pinned against it in
-``tests/test_engine.py``.
+and every other backend's token-equivalence is pinned against it by the
+cross-executor conformance suite (``tests/test_executors.py``) — a new
+executor only registers a fixture there.
 """
 from __future__ import annotations
 
@@ -61,7 +65,7 @@ from repro.core import masks as masks_lib
 from repro.models import decoder
 
 __all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "PagedExecutor",
-           "PagedGroup", "ShardedExecutor"]
+           "PagedGroup", "ShardedExecutor", "ShardedSlotGroup"]
 
 
 # Fused device-state updates. Placement/eviction touch four resident
@@ -91,8 +95,8 @@ def _paged_grant_upd(table, rows, cols, vals):
     return table.at[rows, cols].set(vals)
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 7))
-def _slot_place_upd(cache, tokens, req_cache, sidx, plen, first, cols, gates):
+def _slot_place_body(cache, tokens, req_cache, sidx, plen, first, cols,
+                     gates):
     out = {}
     for k, v in cache.items():
         if k == "pos":
@@ -105,6 +109,11 @@ def _slot_place_upd(cache, tokens, req_cache, sidx, plen, first, cols, gates):
     if gates is not None:
         gates = gates.at[:, :, sidx].set(cols[:, :, None])
     return out, tokens, gates
+
+
+# undecorated body kept separate: ShardedSlotGroup re-jits it with explicit
+# output shardings so placement cannot silently re-shard the resident state
+_slot_place_upd = jax.jit(_slot_place_body, donate_argnums=(0, 1, 7))
 
 
 def _cached_iidx(cache: Dict[Tuple[int, ...], Any], idx: List[int]):
@@ -205,11 +214,16 @@ class SlotGroup:
         # contract): the fused update traces a no-gate variant rather
         # than scattering a None
         gates = self._gates_dev if cols is not None else None
-        self.cache, self.tokens, gates = _slot_place_upd(
+        self.cache, self.tokens, gates = self._place_fn(cols is not None)(
             self.cache, self.tokens, req_cache, self._iidx(slots),
             int(prompt_len), np.asarray(first, np.int32), cols, gates)
         if cols is not None:
             self._gates_dev = gates
+
+    def _place_fn(self, with_gates: bool):
+        """The fused placement executable — mesh-resident subclasses
+        override to pin output shardings to the group's layout."""
+        return _slot_place_upd
 
     def evict(self, slots: List[int]) -> None:
         for s in slots:
@@ -219,6 +233,28 @@ class SlotGroup:
     def _decode_batch(self, buckets: Sequence[int]) -> Optional[List[int]]:
         return _bucket_batch(self.occupied_slots(), self.free_slots(),
                              self.n_slots, buckets)
+
+    def _full_width_horizon(self, horizon: int):
+        """Un-jitted full-width fused horizon:
+        ``(p, cache, tok[, gates]) → (toks [B, H], cache', last [B, 1])``.
+        Shared between the local jit and the sharded re-jit
+        (:class:`ShardedSlotGroup` pins ``out_shardings`` on it), so the
+        horizon step itself is defined exactly once."""
+        h = int(horizon)
+        cfg, layout_c, gated = self._mcfg, self.layout, self.gated
+        if gated:
+            def fn(p, cache, tok, gates):
+                toks, cache = decoder.decode_horizon(
+                    p, cfg, cache, tok, h,
+                    gates={"mixer": gates[0], "ffn": gates[1]},
+                    layout=layout_c)
+                return toks, cache, toks[:, -1:]
+        else:
+            def fn(p, cache, tok):
+                toks, cache = decoder.decode_horizon(p, cfg, cache, tok, h,
+                                                     layout=layout_c)
+                return toks, cache, toks[:, -1:]
+        return fn
 
     def _horizon_fn(self, horizon: int, bucketed: bool):
         """Jitted fused horizon, one executable family per (H, bucketed).
@@ -232,24 +268,16 @@ class SlotGroup:
         if key not in self._hfns:
             cfg, layout_c, gated = self._mcfg, self.layout, self.gated
 
-            def scan_h(p, cache, tok, gates):
-                g = ({"mixer": gates[0], "ffn": gates[1]} if gated
-                     else None)
-                return decoder.decode_horizon(p, cfg, cache, tok, h,
-                                              gates=g, layout=layout_c)
-
             if not bucketed:
-                if gated:
-                    @functools.partial(jax.jit, donate_argnums=(1, 2))
-                    def fn(p, cache, tok, gates):
-                        toks, cache = scan_h(p, cache, tok, gates)
-                        return toks, cache, toks[:, -1:]
-                else:
-                    @functools.partial(jax.jit, donate_argnums=(1, 2))
-                    def fn(p, cache, tok):
-                        toks, cache = scan_h(p, cache, tok, None)
-                        return toks, cache, toks[:, -1:]
+                fn = jax.jit(self._full_width_horizon(h),
+                             donate_argnums=(1, 2))
             else:
+                def scan_h(p, cache, tok, gates):
+                    g = ({"mixer": gates[0], "ffn": gates[1]} if gated
+                         else None)
+                    return decoder.decode_horizon(p, cfg, cache, tok, h,
+                                                  gates=g, layout=layout_c)
+
                 def gather_scan_scatter(p, cache, tok, gates, iidx):
                     sub = {k: (v[iidx] if k == "pos"
                                else jax.tree.map(lambda a: a[:, iidx], v))
@@ -966,25 +994,135 @@ class PagedExecutor(ModelExecutor):
 
 
 # ----------------------------------------------------------------- sharded
-class ShardedExecutor(ModelExecutor):
-    """Mesh-placed execution (ROADMAP: sharded serving).
+class ShardedSlotGroup(SlotGroup):
+    """A :class:`SlotGroup` whose decode state is **mesh-resident**
+    (DESIGN.md §5 "Sharded serving").
 
-    Today this stub owns the *placement* half: parameters are sharded with
-    the production partition rules (``repro.parallel.sharding``) and a
-    sharded decode step can be lowered for roofline/cost analysis — the
-    path ``launch/rap_sweep.py`` drives. The slot-batched serve methods
-    raise until per-group mesh execution lands.
+    The slot axis is the mesh's data-parallel dimension: the KV cache is
+    sharded over slots ("data") and KV heads ("model"), positions and
+    seed tokens over slots, gates replicated — the partition rules from
+    ``repro.parallel.sharding.serve_state_pspecs``, with per-axis
+    divisibility fallback so smoke shapes degrade to replication instead
+    of GSPMD errors. The fused placement update and the horizon scan are
+    re-jitted with explicit ``out_shardings`` pinned to that layout, so
+    placement writes only the placed columns of the *sharded* arrays and
+    a warmed horizon launch never re-shards (or re-uploads) the resident
+    state. Groups always step full width — the slot axis IS the mesh
+    axis, so there is no bucketed gather variant (``ShardedExecutor``
+    passes ``decode_buckets=()``)."""
+
+    def __init__(self, key, params, layout, cfg_model, n_slots: int,
+                 cache_len: int, kv_dtype, gated: bool, mesh,
+                 mask: Optional[np.ndarray] = None):
+        if not gated:
+            raise NotImplementedError(
+                "sharded slot groups are gated (masked mode) only — "
+                "structural sharded buckets (per-bucket compacted params "
+                "re-placed on the mesh) are a ROADMAP item")
+        super().__init__(key, params, layout, cfg_model, n_slots, cache_len,
+                         kv_dtype, gated, mask=mask)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.parallel import (serve_slot_pspec, serve_state_pspecs,
+                                    shardings_for)
+        self.mesh = mesh
+        self._rep = NamedSharding(mesh, P())
+        self._cache_sh = shardings_for(
+            serve_state_pspecs(self.cache, mesh, n_slots=n_slots), mesh)
+        self.cache = jax.device_put(self.cache, self._cache_sh)
+        self._tok_sh = NamedSharding(mesh,
+                                     serve_slot_pspec(self.tokens.shape,
+                                                      mesh))
+        self.tokens = jax.device_put(self.tokens, self._tok_sh)
+        # gates are replicated: [2, L, n_slots] is tiny, placement updates
+        # single columns, and every TP shard reads every layer's gate row
+        self._gates_dev = jax.device_put(self._gates_dev, self._rep)
+        self._place_fns: Dict[bool, Any] = {}
+
+    def _iidx(self, idx: List[int]):
+        key = tuple(idx)
+        dev = self._iidx_cache.get(key)
+        if dev is None:
+            dev = jax.device_put(np.asarray(idx, np.int32), self._rep)
+            self._iidx_cache[key] = dev
+        return dev
+
+    def _place_fn(self, with_gates: bool):
+        fn = self._place_fns.get(with_gates)
+        if fn is None:
+            fn = jax.jit(_slot_place_body, donate_argnums=(0, 1, 7),
+                         out_shardings=(self._cache_sh, self._tok_sh,
+                                        self._rep if with_gates else None))
+            self._place_fns[with_gates] = fn
+        return fn
+
+    def _horizon_fn(self, horizon: int, bucketed: bool):
+        """Fused horizon lowered under the mesh: the SAME full-width
+        horizon body as the local path (``_full_width_horizon``), jitted
+        with the resident state's shardings pinned on the outputs (the
+        inputs carry theirs), so ONE mesh-partitioned ``lax.scan``
+        executable advances every slot H tokens and pays its collectives
+        once per horizon. Tokens come back replicated — the macro-tick's
+        single read-back."""
+        if bucketed:
+            raise NotImplementedError(
+                "sharded slot groups always step full width — the slot "
+                "axis is the mesh's DP dimension (ShardedExecutor runs "
+                "with decode_buckets=())")
+        h = int(horizon)
+        key = (h, False)
+        if key not in self._hfns:
+            self._hfns[key] = jax.jit(
+                self._full_width_horizon(h), donate_argnums=(1, 2),
+                out_shardings=(self._rep, self._cache_sh, self._tok_sh))
+        return self._hfns[key]
+
+
+class ShardedExecutor(LocalExecutor):
+    """Mesh-resident slot-group execution (DESIGN.md §5 "Sharded serving").
+
+    Owns both mesh roles of the serving stack:
+
+      * **placement / lowering** — parameters placed under the production
+        partition rules (``repro.parallel.sharding.param_pspecs``: TP over
+        feature dims, optional ZeRO-3 over "data") and a sharded decode
+        step lowered for HLO cost / memory / collective analysis
+        (:meth:`lower_decode`, the path ``launch/rap_sweep.py`` drives);
+      * **the slot-batched serve path** — groups are
+        :class:`ShardedSlotGroup`: decode state lives sharded on the mesh
+        (KV over slots=DP and heads=TP, gates replicated), placement /
+        eviction stay fused column updates of the sharded arrays, and
+        each engine macro-tick launches ONE mesh-lowered horizon scan, so
+        TP collectives are paid once per H tokens instead of per token
+        (the PR 4 horizon decode is what makes sharded ticks affordable).
+
+    Masked mode only — one gated group serves every keep-mask, which is
+    exactly what keeps the sharded executable set small. Structural
+    sharded buckets are a ROADMAP item; use ``LocalExecutor`` for
+    structural serving. Works on CPU via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+    multi-device CI job) as well as on real accelerator meshes.
     """
 
     def __init__(self, model, mesh, *, params=None, fsdp: bool = False,
-                 shard_seq: bool = False, kv_int8: bool = False):
-        self.model = model
-        self.mcfg = model.cfg
+                 shard_seq: bool = False, kv_int8: bool = False,
+                 mode: str = "masked", max_active: int = 8, kv_dtype=None):
+        if mode != "masked":
+            raise NotImplementedError(
+                f"sharded serving is masked-mode only (got {mode!r}); "
+                "structural sharded buckets are a ROADMAP item — use "
+                "LocalExecutor for structural serving")
         self.mesh = mesh
         self.policy = {"fsdp": bool(fsdp), "shard_seq": bool(shard_seq),
                        "kv_int8": bool(kv_int8)}
-        self.compile_events = 0
-        self.params = self.place_params(params) if params is not None else None
+        self.model = model          # place_params resolves shapes via model
+        placed = self.place_params(params) if params is not None else None
+        # decode_buckets=(): sharded groups step full width — the slot
+        # axis is the mesh's DP dimension, and a bucketed gather would
+        # change the sharded state shape per occupancy pattern
+        super().__init__(model, placed, mode="masked",
+                         max_active=max_active, kv_dtype=kv_dtype,
+                         decode_buckets=())
 
     # ----------------------------------------------------------- placement
     def param_shardings(self):
@@ -1028,23 +1166,23 @@ class ShardedExecutor(ModelExecutor):
             return jfn.lower(params_shape, cache_shape, specs["tokens"])
 
     # ------------------------------------------------------------ serve API
-    def _todo(self):
-        raise NotImplementedError(
-            "sharded slot-batched serving is a ROADMAP item ('Sharded "
-            "serving'); construct RAPEngine with a LocalExecutor, or use "
-            "ShardedExecutor.lower_decode() for mesh cost analysis")
+    def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
+        """One gated mesh-resident group per cache length (masked mode:
+        every keep-mask shares it, exactly as on the local path)."""
+        if self.params is None:
+            raise RuntimeError(
+                "ShardedExecutor has no params — construct with params= "
+                "to serve (mesh cost analysis via lower_decode() does not "
+                "need them)")
+        gkey = ("masked", cache_len)
+        if gkey not in self._groups:
+            self._groups[gkey] = ShardedSlotGroup(
+                "masked", self.params, None, self.mcfg, self.max_active,
+                cache_len, self.kv_dtype, gated=True, mesh=self.mesh)
+        return self._groups[gkey]
 
-    def group_for(self, mask, cache_len):
-        self._todo()
-
-    def prefill_into(self, group, slots, rid, prompt, mask):
-        self._todo()
-
-    def decode_horizon(self, group, horizon):
-        self._todo()
-
-    def decode(self, group):
-        self._todo()
-
-    def groups(self) -> List[SlotGroup]:
-        return []
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, int]:
+        s = super().stats()
+        s["mesh_devices"] = int(self.mesh.size)
+        return s

@@ -22,6 +22,22 @@ def tiny_model():
     return model, params, batch
 
 
+@pytest.fixture(scope="module")
+def served(tiny_model):
+    """tiny_model plus its memory model and a random-Q RAPController —
+    the shared substrate of the engine/horizon/executor suites.
+    Module-scoped: the controller memoizes decisions per (bucket, shape),
+    and cross-module sharing would let one suite's memo warm another's."""
+    from repro.core import controller as ctl, dqn, memory
+
+    model, params, batch = tiny_model
+    mm = memory.build_memory_model(model.cfg)
+    qp = dqn.init_qnet(jax.random.key(0), 2 * model.cfg.n_layers + 4,
+                       2 * model.cfg.n_layers + 1, 32)
+    c = ctl.RAPController(model, params, batch, mm, qp)
+    return model, params, batch, mm, c
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

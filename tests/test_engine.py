@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import controller as ctl, dqn, masks, memory
+from repro.core import masks, memory
 from repro.core.policy import RLPolicy
 from repro.core.workload import PoissonConfig, poisson_requests
 from repro.models import decoder
@@ -182,14 +182,8 @@ def test_pool_accounting_ledger():
 
 
 # ------------------------------------------------------------------- engine
-@pytest.fixture(scope="module")
-def served(tiny_model):
-    model, params, batch = tiny_model
-    mm = memory.build_memory_model(model.cfg)
-    qp = dqn.init_qnet(jax.random.key(0), 2 * model.cfg.n_layers + 4,
-                       2 * model.cfg.n_layers + 1, 32)
-    c = ctl.RAPController(model, params, batch, mm, qp)
-    return model, params, batch, mm, c
+# `served` (tiny model + memory model + random-Q controller) comes from
+# tests/conftest.py — shared with the horizon and executor suites.
 
 
 def _engine(model, params, c, mm, *, mode="masked", budget, max_new=4,
@@ -525,38 +519,9 @@ def _paged_engine(model, params, c, mm, *, budget, max_new=2, slots=4,
         tokens_per_page=tokens_per_page), scheduler=scheduler, executor=ex)
 
 
-def test_engine_paged_matches_local_executor(served):
-    """Acceptance: PagedExecutor greedy tokens == LocalExecutor on the
-    engine test trace (fp32 decode), with measured physical fragmentation
-    strictly below the slot-cache baseline and the pool fully drained."""
-    model, params, batch, mm, c = served
-    cfg = model.cfg
-    toks = np.asarray(batch["tokens"])
-    full = masks.full_mask(cfg.n_layers)
-    prompts = [toks[:1, : (16 if i % 2 else 24)] for i in range(8)]
-    budget = mm.param_bytes(full) + 2.5 * mm.state_bytes(full, 1, 26)
-    reqs = _reqs(prompts)
-
-    local = _engine(model, params, c, mm, budget=budget, max_new=2,
-                    slots=4, max_len=32)
-    rep_l = local.run(reqs)
-    paged = _paged_engine(model, params, c, mm, budget=budget, max_new=2,
-                          slots=4, max_len=32)
-    rep_p = paged.run(reqs)
-
-    done_l = {r.rid: r for r in rep_l.results if r.status == "done"}
-    done_p = {r.rid: r for r in rep_p.results if r.status == "done"}
-    assert len(done_l) == len(done_p) == 8 and rep_p.rejected == 0
-    for rid, r in done_l.items():
-        np.testing.assert_array_equal(r.tokens, done_p[rid].tokens)
-        np.testing.assert_array_equal(r.mask, done_p[rid].mask)
-    # paged pages grow per token; slot caches pin max_len per occupant
-    assert 0.0 < rep_p.measured_frag < rep_l.measured_frag
-    pool = rep_p.pool
-    assert pool["peak_reserved_bytes"] <= pool["capacity_bytes"] + 1e-6
-    assert pool["reserved_bytes"] == 0 and pool["in_use_bytes"] == 0
-    assert pool["committed_pages"] == 0
-    assert pool["overcommit_events"] == 0
+# NOTE: the paged-vs-local token-equivalence acceptance test moved into
+# the cross-executor conformance suite (tests/test_executors.py), which
+# runs EVERY backend — local, paged, sharded — through the same trace.
 
 
 def test_engine_paged_mixed_lengths_one_group(served):
@@ -623,9 +588,12 @@ def test_paged_executor_validation(served):
         ex.group_for(masks.full_mask(model.cfg.n_layers), 32)
 
 
-def test_sharded_executor_stub_places_params(served):
-    """ShardedExecutor owns mesh placement; its serve path points at the
-    ROADMAP instead of failing obscurely."""
+def test_sharded_executor_places_params_and_serves(served):
+    """Single-device smoke of the sharded serve path (the mesh-sharded
+    variants run in the multi-device CI job — tests/test_executors.py):
+    params placed under the production rules, a degenerate (1, 1) mesh
+    serves a trace bitwise-identical to LocalExecutor, and the
+    still-unimplemented corners point at the ROADMAP."""
     import jax
     from repro.launch.mesh import make_host_mesh
     from repro.runtime import ShardedExecutor
@@ -637,7 +605,26 @@ def test_sharded_executor_stub_places_params(served):
         assert a.shape == b.shape
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert ex.groups() == []
+
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :24]]
+    rep_l = _engine(model, params, c, mm, budget=budget,
+                    max_new=2).run(_reqs(prompts))
+    eng = RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=2, max_active=4, max_len=32,
+        budget_bytes=budget),
+        executor=ShardedExecutor(model, mesh, params=params, max_active=4))
+    rep_s = eng.run(_reqs(prompts))
+    for r in rep_l.results:
+        s = next(x for x in rep_s.results if x.rid == r.rid)
+        assert r.status == s.status == "done"
+        np.testing.assert_array_equal(r.tokens, s.tokens)
+    assert eng.stats()["mesh_devices"] == 1
+
+    # unimplemented corners fail loudly with the ROADMAP pointer
     with pytest.raises(NotImplementedError, match="ROADMAP"):
-        ex.group_for(masks.full_mask(model.cfg.n_layers), 32)
-    with pytest.raises(NotImplementedError, match="ROADMAP"):
-        ex.decode(None)
+        ShardedExecutor(model, mesh, params=params, mode="structural")
+    with pytest.raises(RuntimeError, match="params"):
+        ShardedExecutor(model, mesh).group_for(full, 32)

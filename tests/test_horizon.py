@@ -7,78 +7,21 @@ Pins the two properties the horizon refactor exists for:
     the launch and the single ``[B, H]`` token read-back — all decode
     state (cache/pos/tokens/gates/page tables) is device-resident and the
     bucket index vectors are cached (``jax.transfer_guard``);
-  * the horizon size is unobservable in results: engine token streams for
-    ``decode_horizon ∈ {1, 4, 8}`` are bitwise-identical per request on
-    BOTH executors, including ``max_new`` values that land mid-horizon
-    (over-generated tokens truncated at the boundary).
+  * ``decoder.decode_horizon`` is bitwise-equal to H separate decode
+    steps. (The engine-level H ∈ {1, 4, 8} token-equivalence pins moved
+    into the cross-executor conformance suite, ``tests/test_executors.py``,
+    which runs them on every backend — local, paged, sharded.)
 """
 import jax
 import numpy as np
 import pytest
 
-from repro.core import controller as ctl, dqn, masks, memory
-from repro.core.policy import RLPolicy
+from repro.core import masks
 from repro.models import decoder
-from repro.runtime import (EngineConfig, EngineRequest, KVPool,
-                           LocalExecutor, PagedExecutor, RAPEngine)
+from repro.runtime import (EngineConfig, KVPool, LocalExecutor,
+                           PagedExecutor)
 
-
-@pytest.fixture(scope="module")
-def served(tiny_model):
-    model, params, batch = tiny_model
-    mm = memory.build_memory_model(model.cfg)
-    qp = dqn.init_qnet(jax.random.key(0), 2 * model.cfg.n_layers + 4,
-                       2 * model.cfg.n_layers + 1, 32)
-    c = ctl.RAPController(model, params, batch, mm, qp)
-    return model, params, batch, mm, c
-
-
-def _reqs(prompts, max_new=None, rate=1000.0, seed=0):
-    rng = np.random.default_rng(seed)
-    t, out = 0.0, []
-    for i, p in enumerate(prompts):
-        t += float(rng.exponential(1.0 / rate))
-        out.append(EngineRequest(rid=f"r{i}", prompt=np.asarray(p, np.int32),
-                                 arrival_t=t, max_new=max_new))
-    return out
-
-
-def _engine(model, params, c, *, horizon, executor=None, budget,
-            max_new=6, slots=4, max_len=32):
-    ex = None
-    if executor == "paged":
-        ex = PagedExecutor(model, params, max_active=slots)
-    return RAPEngine(model, params, RLPolicy(c), EngineConfig(
-        mode="masked", max_new_tokens=max_new, max_active=slots,
-        max_len=max_len, budget_bytes=budget, tokens_per_page=8,
-        decode_horizon=horizon), executor=ex)
-
-
-# ---------------------------------------------------------- equivalence
-@pytest.mark.parametrize("executor", ["local", "paged"])
-def test_engine_horizon_token_equivalence(served, executor):
-    """decode_horizon ∈ {1, 4, 8} must emit bitwise-identical per-request
-    token streams — max_new=6 deliberately lands mid-horizon for H=4 and
-    H=8, exercising boundary truncation."""
-    model, params, batch, mm, c = served
-    toks = np.asarray(batch["tokens"])
-    full = masks.full_mask(model.cfg.n_layers)
-    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
-    prompts = [toks[:1, :16], toks[:1, :24], toks[:1, :16]]
-    outs = {}
-    for horizon in (1, 4, 8):
-        eng = _engine(model, params, c, horizon=horizon, executor=executor,
-                      budget=budget)
-        rep = eng.run(_reqs(prompts))
-        assert all(r.status == "done" for r in rep.results)
-        outs[horizon] = {r.rid: r.tokens for r in rep.results}
-        for r in rep.results:
-            assert r.tokens.shape == (1, 6)    # truncated, never padded
-    for horizon in (4, 8):
-        for rid, t in outs[1].items():
-            np.testing.assert_array_equal(
-                t, outs[horizon][rid],
-                err_msg=f"H={horizon} diverged from H=1 on {rid}")
+# `served` comes from tests/conftest.py
 
 
 def test_horizon_matches_reference_rollout(served):

@@ -1,0 +1,110 @@
+"""Partition-rule consistency properties (DESIGN.md §5).
+
+Every PartitionSpec the sharding rules emit must *fit*: each sharded dim
+divides the product of its mesh axes. `_pick` enforces this inside
+`repro.parallel.sharding`, so these hypothesis sweeps over every
+registered model config × mesh shape exist to catch a rule that bypasses
+the fallback (a hand-written P() on a new param kind, a rank pattern the
+rules misread) before it manifests as a GSPMD error mid-serve.
+
+Marked ``multi_device``: the (2, 1)/(1, 2)/(2, 2) meshes need real
+devices, which only the multi-device CI job provides
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import all_configs, get_smoke_config  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.models import registry  # noqa: E402
+from repro.parallel import (cache_pspecs, param_pspecs,  # noqa: E402
+                            serve_slot_pspec, serve_state_pspecs)
+
+pytestmark = pytest.mark.multi_device
+
+ARCHS = sorted(all_configs())
+MESH_SHAPES = [(1, 1), (2, 1), (1, 2), (2, 2)]
+
+_SHAPES_CACHE = {}
+
+
+def _model_shapes(arch):
+    """eval_shape of init params + a decode cache, once per arch."""
+    if arch not in _SHAPES_CACHE:
+        cfg = get_smoke_config(arch)
+        model = registry.build(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.key(0)))
+        _SHAPES_CACHE[arch] = (cfg, model, params)
+    return _SHAPES_CACHE[arch]
+
+
+def _axis_size(mesh, axis):
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _assert_specs_fit(shape_tree, spec_tree, mesh, what):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(shape_tree)
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves) == len(specs)
+    for (path, leaf), spec in zip(leaves, specs):
+        assert len(spec) <= len(leaf.shape), (what, path, spec, leaf.shape)
+        for dim, axis in zip(leaf.shape, spec):
+            n = _axis_size(mesh, axis)
+            assert dim % n == 0, (
+                f"{what}: {jax.tree_util.keystr(path)} dim {dim} does not "
+                f"divide mesh axis {axis!r} (size {n}) under "
+                f"{dict(mesh.shape)}")
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _needs_devices():
+    if len(jax.devices()) < 4:
+        pytest.skip("needs ≥4 devices for the (2, 2) mesh (multi-device "
+                    "CI job)")
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_param_and_state_shardings_always_fit(data):
+    arch = data.draw(st.sampled_from(ARCHS), label="arch")
+    mesh_shape = data.draw(st.sampled_from(MESH_SHAPES), label="mesh")
+    fsdp = data.draw(st.booleans(), label="fsdp")
+    batch = data.draw(st.sampled_from([1, 2, 4, 8]), label="batch")
+    seq = data.draw(st.sampled_from([16, 64, 256]), label="seq")
+    mesh = make_host_mesh(mesh_shape, ("data", "model"))
+    cfg, model, params_shape = _model_shapes(arch)
+
+    specs = param_pspecs(params_shape, mesh, fsdp=fsdp)
+    _assert_specs_fit(params_shape, specs, mesh, f"{arch} params")
+
+    cache_shape = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    _assert_specs_fit(cache_shape,
+                      cache_pspecs(cache_shape, mesh, batch=batch),
+                      mesh, f"{arch} cache")
+
+    # serve-path slot-group state: the decoder cache keyed by slots, plus
+    # the seed-token companion (encoder–decoder archs are not served by
+    # the engine, so the slot-state rules do not apply to them)
+    if not getattr(cfg, "is_encoder_decoder", False):
+        from repro.models import decoder
+        slot_shape = jax.eval_shape(
+            lambda: decoder.init_cache(cfg, batch, seq))
+        slot_shape["pos"] = jax.ShapeDtypeStruct((batch,), np.int32)
+        _assert_specs_fit(
+            slot_shape,
+            serve_state_pspecs(slot_shape, mesh, n_slots=batch),
+            mesh, f"{arch} serve state")
+        tok_spec = serve_slot_pspec((batch, 1), mesh)
+        for dim, axis in zip((batch, 1), tok_spec):
+            assert dim % _axis_size(mesh, axis) == 0
