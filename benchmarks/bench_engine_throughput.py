@@ -13,7 +13,7 @@ Replays the SAME ≥16-request Poisson arrival trace through:
     sampled per decode tick) at equal-or-better throughput;
   * **engine/sharded** — the same trace through ``ShardedExecutor``
     (masked mode): mesh-resident slot groups over a DP-majority host
-    mesh (DESIGN.md §5). On a multi-device host the warmed sharded row
+    mesh (DESIGN.md §6). On a multi-device host the warmed sharded row
     must not be SLOWER than single-device local at equal batch — the
     horizon amortizes the collectives, and a regressive mesh would mean
     sharding costs more than it parallelizes. Gated below like the
@@ -35,6 +35,16 @@ swept horizon is not faster than at the smallest (H=8 vs H=1 by
 default): the fused loop beating per-token dispatch is the point of the
 feature, and a silent regression here would invalidate the cross-PR
 trajectory.
+
+Every engine row also reports request-level latency percentiles
+(DESIGN.md §5): **TTFT** (arrival → first token, p50/p90/p99 ms) and
+**ITL** (inter-token latency, per generated token). After the sweep an
+**interference** section replays a decode-heavy trace three ways —
+alone, with a long prompt injected mid-serve prefilled monolithically,
+and with the same prompt prefilled in chunks
+(``EngineConfig.max_prefill_tokens``) — and gates the async engine's
+reason to exist: warmed decode p99 ITL under a concurrent chunked long
+prefill must stay ≤ 3× the no-prefill baseline (exit 1 otherwise).
 
 Reports aggregate tokens/sec, mean queue delay, budget-fit rate, and the
 pool's reserved/in-use peaks, and writes a machine-readable
@@ -79,6 +89,15 @@ def main():
                     help="pruning policy (rl or any registered baseline)")
     ap.add_argument("--scheduler", default="fifo",
                     choices=("fifo", "sjf", "priority"))
+    ap.add_argument("--min-tok-s", type=float, default=0.0,
+                    help="absolute floor for the warmed masked/paged row "
+                         "at the top horizon (0 disables); machine-"
+                         "specific, so off by default — the committed "
+                         "repo-root BENCH_engine.json is produced with "
+                         "--min-tok-s 1500 to pin the PR 4 level")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="max_prefill_tokens for the interference "
+                         "section's chunked run (0 disables the section)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip the compile warm-up replay (reports cold "
@@ -140,6 +159,12 @@ def main():
             for i, p in enumerate(prompts)]
 
     serve_mesh = make_serve_mesh(args.slots)
+
+    def _ms_pcts(summary):
+        # {"p50","p90","p99"} in milliseconds from an EngineReport latency
+        # summary (seconds)
+        return {k: round(summary.get(k, 0.0) * 1e3, 3)
+                for k in ("p50", "p90", "p99")}
 
     def run_engine(mode, executor_kind, horizon):
         executor = None
@@ -236,6 +261,10 @@ def main():
             "pool_peak_mb": round(rep.pool["peak_reserved_bytes"] / 1e6, 3),
             "pool_frag": round(rep.pool["fragmentation"], 3),
             "measured_frag": round(rep.measured_frag, 3),
+            # request-level latency percentiles (DESIGN.md §5): TTFT is
+            # arrival → first token; ITL per generated decode token
+            "ttft_ms": _ms_pcts(rep.ttft),
+            "itl_ms": _ms_pcts(rep.itl),
         }
         rows.append(row)
         print(f"[bench] {mode:10s}/{executor_kind:5s} H={horizon} "
@@ -243,6 +272,9 @@ def main():
               f"serial {row['serial_tok_s']:8.1f} tok/s  "
               f"speedup ×{row['speedup']:.2f}  "
               f"host {row['host_ms_per_tok']:.3f} ms/tok  "
+              f"ttft p50/p99 {row['ttft_ms']['p50']:.1f}/"
+              f"{row['ttft_ms']['p99']:.1f} ms  "
+              f"itl p99 {row['itl_ms']['p99']:.2f} ms  "
               f"measured-frag {row['measured_frag']:.3f}")
         if speedup <= 1.0:
             print(f"[bench] WARNING: engine did not beat serial in {mode}")
@@ -263,12 +295,77 @@ def main():
             print("[bench] WARNING: paged fragmentation not below slot")
         if paged["engine_tok_s"] < 0.9 * slot["engine_tok_s"]:
             print("[bench] WARNING: paged throughput >10% below slot")
+
+    # ---- interference: decode ITL under a concurrent long prefill ----
+    # A decode-heavy trace (3 short requests generating 64 tokens each at
+    # H=2) is replayed three ways: alone (baseline), with a long prompt
+    # injected shortly after decode starts and prefilled monolithically,
+    # and with the same prompt prefilled in `--chunk`-token slices
+    # interleaved between decode launches. The chunked run is what the
+    # async engine promises: the long prefill's host/device time is
+    # amortized across macro-ticks instead of stalling the running
+    # decodes for the whole prompt.
+    interference = None
+    if args.chunk > 0:
+        i_short_new, i_long_len, i_horizon = 64, 96, 2
+        i_max_len = 128
+        i_budget = (mm.param_bytes(full)
+                    + 4.5 * mm.state_bytes(full, 1, i_max_len))
+        shorts = [EngineRequest(
+            rid=f"d{i}", prompt=np.asarray(
+                corpus.sample_tokens(rng, 1, 16), np.int32),
+            arrival_t=0.0) for i in range(3)]
+        long_req = EngineRequest(
+            rid="long", prompt=np.asarray(
+                corpus.sample_tokens(rng, 1, i_long_len), np.int32),
+            arrival_t=0.01, max_new=2)
+
+        def run_interference(reqs_i, chunk):
+            engine = RAPEngine(model, params, policy, EngineConfig(
+                mode="masked", max_new_tokens=i_short_new,
+                max_active=args.slots, max_len=i_max_len,
+                budget_bytes=i_budget, decode_horizon=i_horizon,
+                max_prefill_tokens=chunk), scheduler=args.scheduler)
+            if not args.no_warmup:
+                for _ in range(5):
+                    if engine.run(reqs_i).compile_events == 0:
+                        break
+            rep = engine.run(reqs_i)
+            assert rep.rejected == 0
+            return rep
+
+        base_rep = run_interference(shorts, 0)
+        mono_rep = run_interference(shorts + [long_req], 0)
+        chunk_rep = run_interference(shorts + [long_req], args.chunk)
+        interference = {
+            "config": {"decode_requests": len(shorts),
+                       "decode_new_tokens": i_short_new,
+                       "long_prompt_len": i_long_len,
+                       "decode_horizon": i_horizon,
+                       "chunk": args.chunk},
+            "baseline_itl_ms": _ms_pcts(base_rep.itl),
+            "monolithic_itl_ms": _ms_pcts(mono_rep.itl),
+            "chunked_itl_ms": _ms_pcts(chunk_rep.itl),
+            "monolithic_ttft_ms": _ms_pcts(mono_rep.ttft),
+            "chunked_ttft_ms": _ms_pcts(chunk_rep.ttft),
+        }
+        print(f"[bench] interference (decode p99 ITL): baseline "
+              f"{interference['baseline_itl_ms']['p99']:.2f} ms, "
+              f"+long monolithic "
+              f"{interference['monolithic_itl_ms']['p99']:.2f} ms, "
+              f"+long chunked({args.chunk}) "
+              f"{interference['chunked_itl_ms']['p99']:.2f} ms")
     os.makedirs(args.out, exist_ok=True)
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 4,        # v4: sharded executor rows (mesh-resident slot
-                            # groups, DESIGN.md §5) — executor gains
+        "schema": 5,        # v5: async engine latency (DESIGN.md §5) —
+                            # rows gain ttft_ms/itl_ms {p50,p90,p99} and
+                            # the document gains the "interference"
+                            # section (decode ITL under a concurrent
+                            # monolithic vs chunked long prefill). v4
+                            # added sharded executor rows (mesh-resident
+                            # slot groups, DESIGN.md §6) — executor gains
                             # "sharded" and config gains mesh (axis sizes)
                             # + devices. v3 added the horizon sweep
                             # (decode_horizon, host_ms_per_tok). v2 added
@@ -286,6 +383,7 @@ def main():
             "devices": len(jax.devices()),
         },
         "rows": rows,
+        "interference": interference,
     }
     bench_out = os.path.join(args.out, "BENCH_engine.json")
     with open(bench_out, "w") as f:
@@ -294,7 +392,9 @@ def main():
     legacy_out = os.path.join(args.out, "engine_throughput.json")
     with open(legacy_out, "w") as f:
         json.dump(rows, f, indent=1)
-    hdr = list(rows[0])
+    # CSV summary: scalar columns only (nested percentile dicts live in
+    # the JSON document)
+    hdr = [k for k in rows[0] if not isinstance(rows[0][k], dict)]
     print(",".join(hdr))
     for r in rows:
         print(",".join(str(r[h]) for h in hdr))
@@ -321,6 +421,43 @@ def main():
             f"H={h_lo} ({lo['engine_tok_s']:.1f} tok/s) — the fused "
             f"horizon loop must beat per-token dispatch; a regression "
             f"here invalidates the perf trajectory")
+
+    # Absolute-throughput gate (opt-in, machine-specific): the warmed
+    # masked/paged row at the top horizon must hold the floor the
+    # previous PR's committed run established on the same machine.
+    if args.min_tok_s > 0 and not args.no_warmup:
+        anchor = by_exec.get(("masked", "paged", h_top)) or \
+            by_exec.get(("masked", "slot", h_top))
+        if anchor and anchor["engine_tok_s"] < args.min_tok_s:
+            raise SystemExit(
+                f"[bench] FAIL: warmed masked/{anchor['executor']} "
+                f"H={h_top} ({anchor['engine_tok_s']:.1f} tok/s) is below "
+                f"the --min-tok-s floor ({args.min_tok_s:.0f} tok/s) — "
+                f"throughput regressed against the committed trajectory")
+
+    # Chunked-prefill interference gate — AFTER the doc write, like the
+    # horizon gate. The async engine's latency contract: with a long
+    # prompt prefilled in chunks interleaved between decode launches,
+    # warmed decode p99 ITL must stay within 3× the no-prefill baseline.
+    # Monolithic prefill is reported but not gated — stalling for the
+    # whole prompt is exactly the behaviour chunking replaces. A 50 µs
+    # floor keeps degenerate sub-tick baselines from making 3× meaningless.
+    if interference is None:
+        print("[bench] skipping interference gate (--chunk 0)")
+    elif args.no_warmup:
+        print("[bench] skipping interference gate (--no-warmup: numbers "
+              "are compile-dominated)")
+    else:
+        base_p99 = interference["baseline_itl_ms"]["p99"]
+        chunk_p99 = interference["chunked_itl_ms"]["p99"]
+        limit = 3.0 * max(base_p99, 0.05)
+        if chunk_p99 > limit:
+            raise SystemExit(
+                f"[bench] FAIL: decode p99 ITL under a concurrent chunked "
+                f"long prefill ({chunk_p99:.2f} ms) exceeds 3× the "
+                f"no-prefill baseline ({base_p99:.2f} ms) — chunked "
+                f"prefill must bound decode latency interference; a "
+                f"regression here invalidates the async-engine contract")
 
     # Sharded gate — on a multi-device host, the warmed sharded row at the
     # top horizon must not be slower than single-device local at equal

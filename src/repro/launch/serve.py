@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §7):
+Two serving paths (DESIGN.md §8):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -60,11 +60,23 @@ def main():
                          "running request with ONE device→host sync "
                          "(results are bitwise-identical to H=1; see "
                          "DESIGN.md §4)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="prefill prompts in pow2-bucketed chunks "
+                         "interleaved with decode macro-ticks (async "
+                         "engine, DESIGN.md §5) so a long prompt cannot "
+                         "stall running decodes; chunk cap defaults to 64 "
+                         "tokens unless --max-prefill-tokens is given")
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="cap on prompt tokens prefilled per engine tick "
+                         "(implies --chunked-prefill; 0 = monolithic "
+                         "prefill unless --chunked-prefill is set)")
     ap.add_argument("--pool-requests", type=float, default=2.5,
                     help="KV pool sized for this many concurrent dense "
                          "requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.chunked_prefill and args.max_prefill_tokens <= 0:
+        args.max_prefill_tokens = 64
 
     import jax
     import numpy as np
@@ -180,8 +192,9 @@ def main():
     engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
         max_len=max_total, budget_bytes=budget,
-        decode_horizon=args.decode_horizon), scheduler=args.scheduler,
-        executor=executor)
+        decode_horizon=args.decode_horizon,
+        max_prefill_tokens=args.max_prefill_tokens),
+        scheduler=args.scheduler, executor=executor)
     ereqs = []
     for i, r in enumerate(reqs):
         sql = min(r.seq_len, 256)
@@ -210,6 +223,10 @@ def main():
           f"{rep.decode_iters} decode iters, "
           f"mean queue {rep.mean_queue_delay_s*1e3:.0f}ms, "
           f"fit-rate {rep.budget_fit_rate:.2f}")
+    if rep.ttft.get("count"):
+        print(f"latency: ttft p50/p99 {rep.ttft['p50']*1e3:.0f}/"
+              f"{rep.ttft['p99']*1e3:.0f}ms, itl p50/p99 "
+              f"{rep.itl['p50']*1e3:.2f}/{rep.itl['p99']*1e3:.2f}ms")
     print(f"pool: peak {rep.pool['peak_reserved_bytes']/1e6:.2f}MB "
           f"of {rep.pool['capacity_bytes']/1e6:.2f}MB, "
           f"frag {rep.pool['fragmentation']:.2f}, "

@@ -277,6 +277,91 @@ def paged_decode_attention(params, cfg, x, kv: dict, page_table, pos, *,
     return y, kv
 
 
+def chunk_attention(params, cfg, x, kv: dict, start, *,
+                    impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    """Prefill one prompt *chunk* against a partially filled KV cache.
+
+    x: [B, C, D] — C consecutive prompt tokens starting at absolute
+    position ``start`` (an int32 scalar, traced: executables key on the
+    chunk width C, never on the offset); kv: one layer's cache entry with
+    leaves [B, S_max, K, Dh]. The chunk's K/V is RoPE'd at its absolute
+    positions and written contiguously at ``[start, start+C)``, then the C
+    queries attend the full cache width under the causal mask
+    ``kpos <= start + qi`` — positions beyond the write frontier are
+    masked to exactly-zero probability, so chunk-by-chunk prefill is
+    bitwise-identical to the monolithic pass (DESIGN.md §5). Returns
+    (out [B, C, D], kv').
+    """
+    B, C = x.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x)
+    positions = start + jnp.arange(C)[None, :]
+    if cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    new = store_kv(kv, k, v)
+    kv = dict(kv)
+    for key, val in new.items():
+        kv[key] = jax.lax.dynamic_update_slice(
+            kv[key], val, (0, start) + (0,) * (kv[key].ndim - 2))
+    S = kv["k"].shape[1]
+    ck, cv = load_kv(kv, q.dtype)
+    mask = _causal_mask(C, S, 0, q_offset=start)
+    out = _sdpa(cfg, q, ck, cv, mask)
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(B, C, -1),
+                   params["wo"].astype(x.dtype))
+    return y, kv
+
+
+def paged_chunk_attention(params, cfg, x, kv: dict, page_table, start, *,
+                          scratch_page: int,
+                          impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
+    """Paged sibling of :func:`chunk_attention`: prefill C prompt tokens
+    straight into granted pages.
+
+    x: [B, C, D]; kv: {"k","v"} page pools [n_pages, page_tokens, K, Dh];
+    page_table: int32 [B, max_pages]; start: int32 scalar — the chunk's
+    first absolute position (every row of a chunked-prefill request sits
+    at the same offset). Tokens whose position falls past the table width
+    are routed to the scratch page (a write sink) instead of letting the
+    gather clamp onto a live page. Attention runs through the same
+    gather fallback as ``paged_decode_attention``'s XLA path. Returns
+    (out [B, C, D], kv').
+    """
+    if "ks" in kv:
+        raise NotImplementedError("paged prefill does not support int8 KV "
+                                  "pools yet (per-page scales)")
+    B, C = x.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    page_tokens = kv["k"].shape[1]
+    max_pages = page_table.shape[1]
+    q, k, v = _project_qkv(params, cfg, x)
+    tok_pos = start + jnp.arange(C)                        # [C]
+    positions = jnp.broadcast_to(tok_pos[None, :], (B, C))
+    if cfg.use_rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    cols = tok_pos // page_tokens                          # [C]
+    in_range = cols < max_pages
+    rows = jnp.arange(B)[:, None]                          # [B, 1]
+    page_ids = page_table[rows, jnp.minimum(cols, max_pages - 1)[None, :]]
+    page_ids = jnp.where(in_range[None, :], page_ids, scratch_page)  # [B, C]
+    offs = jnp.broadcast_to((tok_pos % page_tokens)[None, :], (B, C))
+    kv = dict(kv)
+    kv["k"] = kv["k"].at[page_ids, offs].set(k.astype(kv["k"].dtype))
+    kv["v"] = kv["v"].at[page_ids, offs].set(v.astype(kv["v"].dtype))
+    # gather fallback view [B, max_pages*page_tokens, K, Dh] + causal mask
+    S = max_pages * page_tokens
+    ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
+    cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
+    mask = _causal_mask(C, S, 0, q_offset=start)
+    out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    y = jnp.einsum("bsq,qm->bsm", out.reshape(B, C, -1),
+                   params["wo"].astype(x.dtype))
+    return y, kv
+
+
 def decode_attention(params, cfg, x, kv: dict, pos, *, window: int = 0,
                      impl: str = "xla") -> Tuple[jnp.ndarray, dict]:
     """One-token decode. x: [B,1,D]; kv: cache entry (no layer axis), leaves

@@ -543,6 +543,117 @@ def _ssd_prefill(pm, cfg, hn):
     return out, final, xBC[:, -(K - 1):, :]
 
 
+def prefill_chunk(params, cfg, cache, tokens, start, *, gates=None,
+                  impl: str = "xla",
+                  layout=None) -> Tuple[jnp.ndarray, dict]:
+    """Process one prompt chunk against a partially filled slot cache.
+
+    The chunked-prefill hot path (DESIGN.md §5): ``tokens`` [B, C] are C
+    consecutive prompt tokens at absolute offset ``start`` (int32 scalar,
+    traced — executables key on the chunk width, never the offset). Layers
+    scan with the KV cache riding the carry exactly like
+    :func:`decode_step`; each layer's chunk K/V lands at ``[start,
+    start+C)`` and the chunk's queries attend everything written so far.
+    Running a prompt chunk-by-chunk (any split) then reading the final
+    chunk's last-position logits is bitwise-identical to :func:`prefill`.
+    Returns (last-position logits [B, Vp], cache).
+
+    Uniform all-attention layouts only — recurrent/SSD state has no
+    positional write frontier to resume from; heterogeneous models stay
+    on the monolithic prefill.
+    """
+    layout = layout or default_layout(cfg)
+    if not (_is_uniform(layout) and layout[0].mixer == "attn"):
+        raise NotImplementedError(
+            "prefill_chunk serves uniform all-attention layouts; "
+            f"got mixers {sorted({str(s.mixer) for s in layout})} — use "
+            "prefill (monolithic) for heterogeneous models")
+    L = len(layout)
+    gates = gates or _ones_gates(L)
+    start = jnp.asarray(start, jnp.int32)
+    h = _embed(params, cfg, tokens, None)
+    mixer_stack = params["stacks"]["attn"]
+    ffn_stack = params["stacks"][layout[0].ffn] if layout[0].ffn else None
+    state0 = cache["attn"]
+
+    def body(carry, xs):
+        h, state = carry
+        pm, pf, gm, gf, i = xs
+        hn = layers.apply_norm(cfg, pm["norm"], h)
+        kv = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+            state)
+        out, kv = attention.chunk_attention(pm, cfg, hn, kv, start, impl=impl)
+        state = jax.tree.map(
+            lambda s, n: jax.lax.dynamic_update_index_in_dim(s, n, i, 0),
+            state, kv)
+        h = h + _bgate(gm, h) * out
+        if pf is not None:
+            h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf, cfg, h,
+                                               impl=impl)
+        return (h, state), None
+
+    xs = (mixer_stack, ffn_stack, gates["mixer"], gates["ffn"],
+          jnp.arange(L, dtype=jnp.int32))
+    (h, state), _ = jax.lax.scan(body, (h, state0), xs)
+    cache["attn"] = state
+    logits = _unembed(params, cfg, h[:, -1:, :])[:, 0]
+    cache["pos"] = start + tokens.shape[1]
+    return logits, cache
+
+
+def paged_prefill_chunk(params, cfg, pools: dict, page_table, tokens, start,
+                        *, scratch_page: int, gates=None, impl: str = "xla",
+                        layout=None) -> Tuple[jnp.ndarray, dict]:
+    """Paged sibling of :func:`prefill_chunk`: one prompt chunk appended
+    straight into granted pages.
+
+    pools: {"k","v"} [L, n_pages, page_tokens, K, Dh]; page_table: int32
+    [B, max_pages]; tokens [B, C] at absolute offset ``start``. The pool
+    arrays ride the layer scan's carry (donated, in-place) exactly like
+    :func:`paged_decode_step`; the same uniform all-attention restriction
+    applies. Returns (last-position logits [B, Vp], pools').
+    """
+    layout = layout or default_layout(cfg)
+    if not (len(layout) > 0
+            and all(s.mixer == "attn" and s.ffn == layout[0].ffn
+                    for s in layout)):
+        raise NotImplementedError(
+            "paged prefill serves uniform all-attention layouts; "
+            f"got mixers {sorted({str(s.mixer) for s in layout})} — use "
+            "prefill (slot caches) for heterogeneous models")
+    L = len(layout)
+    gates = gates or _ones_gates(L)
+    start = jnp.asarray(start, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    h = _embed(params, cfg, tokens, None)
+    mixer_stack = params["stacks"]["attn"]
+    ffn_stack = params["stacks"][layout[0].ffn] if layout[0].ffn else None
+
+    def body(carry, xs):
+        h, pk, pv = carry
+        pm, pf, gm, gf, i = xs
+        hn = layers.apply_norm(cfg, pm["norm"], h)
+        kv = {"k": jax.lax.dynamic_index_in_dim(pk, i, 0, keepdims=False),
+              "v": jax.lax.dynamic_index_in_dim(pv, i, 0, keepdims=False)}
+        out, kv = attention.paged_chunk_attention(
+            pm, cfg, hn, kv, page_table, start, scratch_page=scratch_page,
+            impl=impl)
+        pk = jax.lax.dynamic_update_index_in_dim(pk, kv["k"], i, 0)
+        pv = jax.lax.dynamic_update_index_in_dim(pv, kv["v"], i, 0)
+        h = h + _bgate(gm, h) * out
+        if pf is not None:
+            h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf, cfg, h,
+                                               impl=impl)
+        return (h, pk, pv), None
+
+    xs = (mixer_stack, ffn_stack, gates["mixer"], gates["ffn"],
+          jnp.arange(L, dtype=jnp.int32))
+    (h, pk, pv), _ = jax.lax.scan(body, (h, pools["k"], pools["v"]), xs)
+    logits = _unembed(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, {"k": pk, "v": pv}
+
+
 # --------------------------------------------------------------------- decode
 def decode_step(params, cfg, cache, tokens, *, gates=None, impl: str = "xla",
                 layout=None) -> Tuple[jnp.ndarray, dict]:

@@ -1,10 +1,10 @@
-from repro.runtime import steps
+from repro.runtime import latency, steps
 from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
                                   RAPEngine, RequestResult)
 from repro.runtime.executor import (LocalExecutor, ModelExecutor,
                                     PagedExecutor, PagedGroup,
                                     ShardedExecutor, ShardedSlotGroup,
-                                    SlotGroup)
+                                    SlotGroup, chunk_widths)
 from repro.runtime.kv_pool import (KVPool, PageAllocation, PoolExhausted,
                                    TokenAllocation)
 from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
@@ -14,11 +14,12 @@ from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
 from repro.runtime.server import RAPServer, ServeResult
 from repro.runtime.trainer import Trainer, TrainerConfig
 
-__all__ = ["steps", "Trainer", "TrainerConfig", "RAPServer", "ServeResult",
-           "RAPEngine", "EngineConfig", "EngineRequest", "EngineReport",
-           "RequestResult", "KVPool", "PageAllocation", "TokenAllocation",
-           "PoolExhausted", "Scheduler", "SchedulerOutput", "FIFOScheduler",
-           "SJFScheduler", "PriorityScheduler", "SCHEDULERS",
-           "make_scheduler", "ModelExecutor", "LocalExecutor",
-           "PagedExecutor", "PagedGroup", "ShardedExecutor",
-           "ShardedSlotGroup", "SlotGroup"]
+__all__ = ["steps", "latency", "Trainer", "TrainerConfig", "RAPServer",
+           "ServeResult", "RAPEngine", "EngineConfig", "EngineRequest",
+           "EngineReport", "RequestResult", "KVPool", "PageAllocation",
+           "TokenAllocation", "PoolExhausted", "Scheduler",
+           "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
+           "PriorityScheduler", "SCHEDULERS", "make_scheduler",
+           "ModelExecutor", "LocalExecutor", "PagedExecutor", "PagedGroup",
+           "ShardedExecutor", "ShardedSlotGroup", "SlotGroup",
+           "chunk_widths"]

@@ -25,29 +25,32 @@ orchestration loop over four seams:
     token appends a page when it crosses a boundary (``KVPool.extend``),
     and completion frees the pages.
 
-One iteration of :meth:`RAPEngine._tick`:
+One iteration of :meth:`RAPEngine._tick` (the async macro-tick,
+DESIGN.md §5 — device work is dispatched FIRST so host scheduling
+overlaps the in-flight scans):
 
-  1. **arrivals** — requests become visible at their trace timestamps
+  1. **launch** — every occupied group in the scheduler's decode plan
+     dispatches one fused horizon of up to ``EngineConfig.decode_horizon``
+     tokens (DESIGN.md §4). JAX async dispatch returns token futures
+     immediately; nothing syncs yet;
+  2. **arrivals** — requests become visible at their trace timestamps
      (virtual clock; idle gaps are skipped, compute time is real) and
      enter the scheduler's waiting set;
-  2. **admission** — the scheduler orders candidates; for each, the
+  3. **admission** — the scheduler orders candidates; for each, the
      policy decides a keep-mask against the *remaining* shared budget and
      the request's analytical KV/state bytes are allocated from the pool.
      A deferral (no pages / no free slots) ends the admission loop, so
      the scheduler's ordering is never overtaken within a tick. ``force``
      mode (the one-shot compatibility path) admits regardless and records
-     the overcommit;
-  3. **prefill** — newly admitted requests prefill individually (shapes
-     differ) and their caches are written into free *slots* of their
-     group's shared slot-batched cache;
-  4. **decode** — all running requests advance one *horizon* of
-     ``EngineConfig.decode_horizon`` tokens per occupied group via the
-     executor's fused ``decode_horizon`` (one compiled launch, one
-     ``[B, H]`` read-back — DESIGN.md §4). Completion (``max_new`` today;
-     an EOS-style stop condition, when one lands, would share the same
-     boundary semantics) is checked once per horizon; tokens a request
-     over-generated inside its final horizon are truncated, so results
-     are bitwise-identical to H=1.
+     the overcommit. Prefill is monolithic by default; with
+     ``EngineConfig.max_prefill_tokens > 0`` prompts are split into pow2
+     chunks advanced one per tick, interleaved with running decodes;
+  4. **finish** — the single device→host read-back folds each horizon's
+     tokens into the requests that were resident at launch. Completion
+     (``max_new`` today; an EOS-style stop condition, when one lands,
+     would share the same boundary semantics) is checked once per
+     horizon; tokens a request over-generated inside its final horizon
+     are truncated, so results are bitwise-identical to H=1.
 
 Completed requests free their pages and slots, unblocking the queue, and
 are reported back to the policy via ``feedback()``.
@@ -63,7 +66,9 @@ import numpy as np
 from repro.core import masks as masks_lib
 from repro.core.controller import RAPController
 from repro.core.policy import Decision, PolicyState, PruningPolicy
-from repro.runtime.executor import LocalExecutor, ModelExecutor, SlotGroup
+from repro.runtime.executor import (LocalExecutor, ModelExecutor, SlotGroup,
+                                    chunk_widths)
+from repro.runtime.latency import summarize as _lat_summarize
 from repro.runtime.kv_pool import KVPool, default_page_bytes
 from repro.runtime.scheduler import Scheduler, make_scheduler
 
@@ -125,6 +130,15 @@ class EngineConfig:
     # token need in the group, so short tails don't pay full-horizon
     # compute. 1 restores per-token ticks.
     decode_horizon: int = 8
+    # Chunked prefill (DESIGN.md §5): 0 (default) prefills each prompt in
+    # one monolithic pass; >0 caps the prompt tokens prefilled per engine
+    # macro-tick — long prompts are split into power-of-two chunks
+    # (largest-first, e.g. 13 → 8+4+1 under a cap of 8) interleaved with
+    # the running requests' decode horizons, so a long prefill no longer
+    # stalls every in-flight decode for its full length. Token streams are
+    # bitwise-identical with chunking on or off. Backends without a
+    # chunked path (heterogeneous layouts) fall back to monolithic.
+    max_prefill_tokens: int = 0
 
     def __post_init__(self):
         if self.mode not in ("masked", "structural"):
@@ -171,6 +185,12 @@ class EngineConfig:
             raise ValueError(
                 f"decode_horizon must be >= 1, got {self.decode_horizon!r} "
                 f"— each macro-tick advances at least one token")
+        if self.max_prefill_tokens < 0:
+            raise ValueError(
+                f"max_prefill_tokens must be >= 0, got "
+                f"{self.max_prefill_tokens!r} (0 prefills prompts "
+                f"monolithically; >0 caps prompt tokens prefilled per "
+                f"engine tick)")
 
 
 @dataclasses.dataclass
@@ -200,6 +220,9 @@ class RequestResult:
     peak_bytes: float
     kv_bytes: float
     reason: str = ""
+    # time to first token, measured from ARRIVAL (so it decomposes as
+    # queue_delay_s + prefill time; -1.0 for rejected requests)
+    ttft_s: float = -1.0
 
 
 @dataclasses.dataclass
@@ -223,6 +246,13 @@ class EngineReport:
     # 1 − used_bytes / physical_bytes from the executor's kv_utilization()
     # (0.0 when the backend does not track it)
     measured_frag: float = 0.0
+    # latency percentiles (repro.runtime.latency.summarize dicts, seconds):
+    # ttft pools per-request time-to-first-token (arrival → first token);
+    # itl pools per-token inter-token latencies across every request's
+    # decode stream (a fused H-token horizon contributes H samples of its
+    # per-token share)
+    ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
+    itl: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def result(self, rid: str) -> RequestResult:
         for r in self.results:
@@ -242,6 +272,25 @@ class _Running:
     max_new: int
     out: List[np.ndarray]            # per generated step: [b] tokens
     bucket: Tuple
+    # token-emission events (virtual-clock time, tokens appended): the
+    # first entry is the prefill's token #1 (TTFT anchor); each decode
+    # horizon appends one entry covering its H tokens (ITL samples)
+    events: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """A request admitted (pool charged, slots reserved) whose prompt is
+    still being prefilled chunk-by-chunk across engine ticks."""
+    req: EngineRequest
+    decision: Decision
+    group: SlotGroup
+    slots: List[int]
+    admitted_t: float
+    kv_bytes: float
+    max_new: int
+    bucket: Tuple
+    task: Any                        # executor _PrefillTask
 
 
 # ------------------------------------------------------------------- engine
@@ -299,7 +348,10 @@ class RAPEngine:
         # run state
         self._pending: List[EngineRequest] = []
         self._running: "Dict[str, _Running]" = {}
+        self._prefilling: "Dict[str, _Prefilling]" = {}
         self._results: List[RequestResult] = []
+        self._ttft_samples: List[float] = []
+        self._itl_samples: List[float] = []
         self._decode_iters = 0
         self._compiles_at_run_start = 0
         self._t0 = 0.0
@@ -370,14 +422,18 @@ class RAPEngine:
         self._pending = sorted(requests, key=lambda r: r.arrival_t)
         self.scheduler.clear()
         self._running.clear()
+        self._prefilling.clear()
         self._results = []
+        self._ttft_samples = []
+        self._itl_samples = []
         self._decode_iters = 0
         self._compiles_at_run_start = self.executor.compile_events
         self._launch_s_at_run_start = getattr(self.executor, "launch_s", 0.0)
         self._skew = 0.0
         self._t0 = time.perf_counter()
         self.executor.evict_all()             # previous run's occupants
-        while self._pending or len(self.scheduler) or self._running:
+        while (self._pending or len(self.scheduler) or self._running
+               or self._prefilling):
             self._tick()
         # makespan is on the VIRTUAL clock (skipped idle gaps included) —
         # the same clock request timestamps live on, so throughput is
@@ -404,14 +460,38 @@ class RAPEngine:
             launch_s=(getattr(self.executor, "launch_s", 0.0)
                       - self._launch_s_at_run_start),
             measured_frag=(float(np.mean(self._frag_samples))
-                           if self._frag_samples else 0.0))
+                           if self._frag_samples else 0.0),
+            ttft=_lat_summarize(self._ttft_samples),
+            itl=_lat_summarize(self._itl_samples))
 
     # ------------------------------------------------------------ one tick
     def _tick(self) -> None:
+        """One engine macro-tick, host work overlapped with device work:
+
+          1. **launch** — dispatch this tick's fused decode horizons (the
+             scheduler's decode plan). JAX async dispatch returns the
+             token futures immediately, so the scans run on device while…
+          2. **host phase** — arrivals, admission (policy decision, pool
+             allocation, page granting), and one chunk of every in-flight
+             chunked prefill all execute on the host with the scans still
+             in flight (pinned by the transfer-guard overlap tests in
+             tests/test_horizon.py);
+          3. **finish** — the single device→host read-back folds the
+             horizon's tokens into the running requests and completions
+             are processed.
+
+        A request admitted during the host phase joins decode from the
+        NEXT tick — its slots were free padding (or reserved) when this
+        tick's scan launched, so this tick's rows for them are garbage
+        and are never read (the launch's captured occupancy pins this)."""
         now = self._now()
+        plan = self.scheduler.schedule(now, running=list(self._running))
+        launches = self._launch_decode(plan.decode)
+        # ---- host phase (device scans in flight from here to finish) ----
         while self._pending and self._pending[0].arrival_t <= now:
             req = self._pending.pop(0)
-            if req.rid in self.scheduler or req.rid in self._running:
+            if (req.rid in self.scheduler or req.rid in self._running
+                    or req.rid in self._prefilling):
                 self._reject(req, f"duplicate request id {req.rid!r} "
                                   f"(already in flight)")
                 continue
@@ -432,19 +512,28 @@ class RAPEngine:
                 deferred = req
                 break
             self.scheduler.remove(req.rid)
-        if not self._running:
-            if deferred is not None:
-                # deferred head with an idle engine: nothing will ever
-                # free memory — reject the scheduler's choice instead of
-                # spinning (defensive; strict capacity misfits are
-                # rejected in _try_admit already)
+        # a deferral is "stuck" only if judged NOW, before this tick's
+        # in-flight work lands: with nothing launched, running, or
+        # prefilling, no completion can ever free the memory it waits on.
+        # (Work finishing later this tick frees capacity — the deferred
+        # request simply retries next tick.)
+        stuck = (deferred is not None and not launches
+                 and not self._running and not self._prefilling)
+        self._advance_prefills()
+        # ---- finish: the tick's one sync point --------------------------
+        if launches:
+            self._finish_decode(launches)
+        if not self._running and not self._prefilling:
+            if stuck:
+                # deferred head with an idle engine: reject the
+                # scheduler's choice instead of spinning (defensive;
+                # strict capacity misfits are rejected in _try_admit
+                # already)
                 self.scheduler.remove(deferred.rid)
                 self._reject(deferred, "deferred with idle engine")
-            elif self._pending:
+            elif deferred is None and self._pending:
                 # fast-forward the virtual clock across the idle gap
                 self._skew += self._pending[0].arrival_t - self._now() + 1e-9
-            return
-        self._decode_all()
 
     # ----------------------------------------------------------- admission
     def _reject(self, req: EngineRequest, reason: str) -> None:
@@ -465,7 +554,7 @@ class RAPEngine:
         # request is served as prefill-only next-token prediction)
         max_new = max(max_new, 1)
         total = S + max_new
-        if req.rid in self._running:
+        if req.rid in self._running or req.rid in self._prefilling:
             self._reject(req, f"duplicate request id {req.rid!r} "
                               f"(already in flight)")
             return "rejected"
@@ -526,24 +615,50 @@ class RAPEngine:
         if len(free) < b:
             return "defer"
         slots = free[:b]
+        # admission ends HERE: admitted_t (and so queue_delay_s) measures
+        # time spent queued, not queueing + prefill — TTFT decomposes as
+        # queue_delay_s + prefill time
+        admitted_t = self._now()
+        bucket = group.key if self.cfg.mode == "structural" else ()
+        chunked = (self.cfg.max_prefill_tokens > 0 and S >= 1
+                   and self.executor.supports_chunked_prefill(group))
         if self._paged:
             # grant pages backing the prompt now; commit the decode tail.
             # The ledger's in-use side stays analytical (the Eq. (3)–(4)
             # bytes) as a cross-check against the physical reservation.
-            prompt_bytes = self.mm.state_bytes(d.mask, b, S)
-            rate = max(kv_bytes - prompt_bytes, 0.0) / max(total - S, 1)
-            self.pool.alloc_tokens(req.rid, b, S, max_tokens=total,
-                                   in_use_bytes=prompt_bytes,
-                                   in_use_per_token=rate)
+            # Chunked prefill grants only the FIRST chunk's pages here —
+            # each later chunk extends the allocation just before it runs
+            # (the commitment above covers them, so the grants can't fail).
+            if chunked:
+                c1 = chunk_widths(S, self.cfg.max_prefill_tokens)[0]
+                rate = kv_bytes / max(total, 1)
+                self.pool.alloc_tokens(req.rid, b, c1, max_tokens=total,
+                                       in_use_bytes=rate * c1,
+                                       in_use_per_token=rate)
+            else:
+                prompt_bytes = self.mm.state_bytes(d.mask, b, S)
+                rate = max(kv_bytes - prompt_bytes, 0.0) / max(total - S, 1)
+                self.pool.alloc_tokens(req.rid, b, S, max_tokens=total,
+                                       in_use_bytes=prompt_bytes,
+                                       in_use_per_token=rate)
         else:
             self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
-        first = self.executor.prefill_into(group, slots, req.rid,
-                                           np.asarray(req.prompt, np.int32),
+        prompt = np.asarray(req.prompt, np.int32)
+        if chunked:
+            task = self.executor.prefill_begin(
+                group, slots, req.rid, prompt, d.mask,
+                max_chunk=self.cfg.max_prefill_tokens)
+            self._prefilling[req.rid] = _Prefilling(
+                req=req, decision=d, group=group, slots=slots,
+                admitted_t=admitted_t, kv_bytes=kv_bytes, max_new=max_new,
+                bucket=bucket, task=task)
+            return "admitted"
+        first = self.executor.prefill_into(group, slots, req.rid, prompt,
                                            d.mask)
-        bucket = group.key if self.cfg.mode == "structural" else ()
         run = _Running(req=req, decision=d, group=group, slots=slots,
-                       admitted_t=self._now(), kv_bytes=kv_bytes,
-                       max_new=max_new, out=[first], bucket=bucket)
+                       admitted_t=admitted_t, kv_bytes=kv_bytes,
+                       max_new=max_new, out=[first], bucket=bucket,
+                       events=[(self._now(), 1)])
         self._running[req.rid] = run
         # the prefill already produced token #1
         if run.max_new <= len(run.out):
@@ -581,18 +696,50 @@ class RAPEngine:
         return Decision(mask=group.mask.copy(), steps=0, peak_bytes=peak,
                         fits=True, latency_s=0.0, cached=True)
 
+    # ------------------------------------------------------ chunked prefill
+    def _advance_prefills(self) -> None:
+        """Advance every in-flight chunked prefill by ONE chunk (at most
+        ``cfg.max_prefill_tokens`` prompt tokens) — the interleave grain
+        that bounds how long a long prompt can stall running decodes. A
+        completing prefill seats its request (it joins decode next tick)
+        and stamps its first-token event."""
+        for rid in list(self._prefilling):
+            pf = self._prefilling[rid]
+            first = self.executor.prefill_step(pf.task)
+            if first is None:
+                continue
+            del self._prefilling[rid]
+            run = _Running(req=pf.req, decision=pf.decision, group=pf.group,
+                           slots=pf.slots, admitted_t=pf.admitted_t,
+                           kv_bytes=pf.kv_bytes, max_new=pf.max_new,
+                           out=[first], bucket=pf.bucket,
+                           events=[(self._now(), 1)])
+            self._running[rid] = run
+            if run.max_new <= len(run.out):
+                self._complete(run)
+
     # --------------------------------------------------------------- decode
-    def _decode_all(self) -> None:
-        """One macro-tick: every occupied group advances a fused horizon
-        of up to ``cfg.decode_horizon`` tokens (clamped to the largest
-        remaining need in the group), then completion is checked once at
-        the boundary. A request whose ``max_new`` lands mid-horizon keeps
-        only the tokens up to it — the trailing over-generated ones are
-        truncated here, which is what makes horizon size unobservable in
-        the results (bitwise-identical to decode_horizon=1)."""
-        stepped = False
+    def _launch_decode(self, decode_plan: Optional[List[str]]
+                       ) -> List[Tuple[Any, set]]:
+        """Dispatch one fused horizon per occupied group named in the
+        scheduler's decode plan, WITHOUT syncing. Returns the in-flight
+        launches paired with the rids resident at launch time (the only
+        requests this tick's tokens belong to). Plans are per-request but
+        execution is per-group: a group steps if any of its residents are
+        planned (the fused scan advances every occupant regardless — an
+        unplanned co-resident's tokens are still folded back, since
+        skipping them would discard real device work)."""
+        launches: List[Tuple[Any, set]] = []
+        if not self._running:
+            return launches
+        allowed = None if decode_plan is None else set(decode_plan)
         for group in self.executor.groups():
             if not group.occupied():
+                continue
+            runs = [run for run in self._running.values()
+                    if run.group is group]
+            if not runs or (allowed is not None
+                            and not any(r.req.rid in allowed for r in runs)):
                 continue
             # clamp the horizon to the group's largest remaining token
             # need, QUANTIZED up to a power of two: executables are
@@ -600,28 +747,45 @@ class RAPEngine:
             # would mint one per remaining-need value (timing-dependent —
             # steady state would never stop compiling). Pow2 bounds the
             # horizon set to {1, 2, 4, ...} while short tails still skip
-            # most full-horizon compute; the overshoot is truncated below.
-            remaining = max((run.max_new - len(run.out)
-                             for run in self._running.values()
-                             if run.group is group), default=1)
+            # most full-horizon compute; the overshoot is truncated at
+            # fold-back.
+            remaining = max((run.max_new - len(run.out) for run in runs),
+                            default=1)
             horizon = min(self.cfg.decode_horizon,
                           _next_pow2(max(remaining, 1)))
-            toks, _ = self.executor.decode_horizon(group, horizon)
-            stepped = True
-            for run in list(self._running.values()):
-                if run.group is not group:
+            launches.append((self.executor.decode_launch(group, horizon),
+                             {run.req.rid for run in runs}))
+        return launches
+
+    def _finish_decode(self, launches: List[Tuple[Any, set]]) -> None:
+        """The tick's sync point: read back each launched horizon and fold
+        its tokens into the requests that were resident at launch (a
+        request admitted during the overlapped host phase gets nothing
+        from this tick — its slot's rows are garbage). Completion is
+        checked once at the horizon boundary; a request whose ``max_new``
+        lands mid-horizon keeps only the tokens up to it — the trailing
+        over-generated ones are truncated here, which is what makes
+        horizon size unobservable in the results (bitwise-identical to
+        decode_horizon=1)."""
+        for launch, rids in launches:
+            toks, _ = self.executor.decode_finish(launch)
+            now = self._now()
+            for rid in rids:
+                run = self._running.get(rid)
+                if run is None:
                     continue
                 need = run.max_new - len(run.out)
                 if need <= 0:
                     continue
                 cols = toks[np.asarray(run.slots)]     # [b, horizon]
-                for h in range(min(need, horizon)):
+                n = min(need, launch.horizon)
+                for h in range(n):
                     run.out.append(cols[:, h])
-        if stepped:
-            self._decode_iters += 1
-            used, phys = self.executor.kv_utilization()
-            if phys > 0:
-                self._frag_samples.append(1.0 - used / phys)
+                run.events.append((now, n))
+        self._decode_iters += 1
+        used, phys = self.executor.kv_utilization()
+        if phys > 0:
+            self._frag_samples.append(1.0 - used / phys)
         done = [run for run in self._running.values()
                 if len(run.out) >= run.max_new]
         # batch the device-side slot resets: one fused eviction per group
@@ -641,6 +805,18 @@ class RAPEngine:
         self.pool.free(run.req.rid)
         now = self._now()
         d = run.decision
+        # latency samples from the run's token-emission events: TTFT is
+        # first token minus ARRIVAL (it includes the queue delay); each
+        # later event covers one fused horizon and contributes its
+        # per-token share n times, so long horizons don't undercount
+        ttft = (run.events[0][0] - run.req.arrival_t if run.events
+                else -1.0)
+        if run.events:
+            self._ttft_samples.append(ttft)
+            prev = run.events[0][0]
+            for t, n in run.events[1:]:
+                self._itl_samples.extend([(t - prev) / max(n, 1)] * n)
+                prev = t
         result = RequestResult(
             rid=run.req.rid, status="done",
             tokens=np.stack(run.out, axis=1),       # [b, generated]
@@ -648,11 +824,20 @@ class RAPEngine:
             arrival_t=run.req.arrival_t, admitted_t=run.admitted_t,
             finished_t=now, queue_delay_s=run.admitted_t - run.req.arrival_t,
             decide_s=d.latency_s, fits=d.fits, cached_decision=d.cached,
-            peak_bytes=d.peak_bytes, kv_bytes=run.kv_bytes)
+            peak_bytes=d.peak_bytes, kv_bytes=run.kv_bytes, ttft_s=ttft)
         self._results.append(result)
         del self._running[run.req.rid]
         self.policy.feedback(result)
 
     # ---------------------------------------------------------------- stats
-    def stats(self) -> Dict[str, int]:
-        return dict(self.executor.stats())
+    def stats(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.executor.stats())
+        # per-request TTFT decomposition (queueing vs prefill) for the
+        # most recent run: ttft_s − queue_delay_s is time from admission
+        # to first token, i.e. the prefill share
+        out["requests"] = {
+            r.rid: {"queue_delay_s": r.queue_delay_s, "ttft_s": r.ttft_s,
+                    "prefill_s": max(r.ttft_s - r.queue_delay_s, 0.0)}
+            for r in self._results
+            if r.status == "done" and r.ttft_s >= 0.0}
+        return out

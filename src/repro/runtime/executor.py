@@ -35,7 +35,7 @@ Executors:
     for the whole horizon are pre-granted in ONE bulk ``KVPool.extend``
     before the launch (the admission-time worst-case commitment
     guarantees it cannot fail), so no paging happens mid-loop.
-  * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §5
+  * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §6
     "Sharded serving"): parameters placed with the production partition
     rules of ``repro.parallel.sharding`` (and a sharded decode-step
     lowering for cost analysis, ``launch/rap_sweep.py``), groups are
@@ -53,6 +53,7 @@ executor only registers a fixture there.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -65,7 +66,75 @@ from repro.core import masks as masks_lib
 from repro.models import decoder
 
 __all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "PagedExecutor",
-           "PagedGroup", "ShardedExecutor", "ShardedSlotGroup"]
+           "PagedGroup", "ShardedExecutor", "ShardedSlotGroup",
+           "chunk_widths"]
+
+
+def chunk_widths(n_tokens: int, max_chunk: int) -> List[int]:
+    """Split a prompt into power-of-two chunk widths for chunked prefill.
+
+    Greedy largest-power-of-two-first: 13 tokens under an 8-token cap
+    chunk as [8, 4, 1]. Every width is an exact power of two ≤ the cap,
+    so the chunked-prefill executable set is bounded at log2(cap)+1
+    widths per (batch, group) — and chunks are never padded, which is
+    what keeps chunked prefill bitwise-identical to the monolithic pass
+    (no garbage K/V ever lands in the cache)."""
+    n = int(n_tokens)
+    cap = int(max_chunk)
+    if n < 1:
+        raise ValueError(f"n_tokens must be >= 1, got {n_tokens!r}")
+    if cap < 1:
+        raise ValueError(f"max_chunk must be >= 1, got {max_chunk!r}")
+    cap = 1 << (cap.bit_length() - 1)          # pow2 floor of the cap
+    widths: List[int] = []
+    while n > 0:
+        c = min(cap, 1 << (n.bit_length() - 1))
+        widths.append(c)
+        n -= c
+    return widths
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """One in-flight chunked prefill (``prefill_begin``/``prefill_step``).
+
+    The request's slots are *reserved* in its group for the task's
+    lifetime (they pad no decode bucket and admit no other request) and
+    seated only when the final chunk completes. ``state`` is the
+    backend's partial cache (Local: the request-sized attn cache the
+    chunks accumulate into; Paged: None — chunks write straight into the
+    pool's granted pages)."""
+    group: Any
+    slots: List[int]
+    rid: str
+    prompt: np.ndarray                # int32 [b, S]
+    mask: Optional[np.ndarray]
+    gates: Optional[dict]             # mask_to_gates(mask) for gated groups
+    widths: List[int]                 # pow2 chunk widths, sum == S
+    pos: int = 0                      # prompt tokens processed so far
+    step: int = 0                     # chunks processed so far
+    state: Any = None
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= self.prompt.shape[1]
+
+
+@dataclasses.dataclass
+class _InFlightHorizon:
+    """A launched-but-unsynced fused decode horizon.
+
+    ``decode_launch`` returns one; ``decode_finish`` performs the single
+    device→host read-back. Occupancy is captured at launch so host work
+    overlapped with the in-flight scan (admission may seat new requests
+    into slots that were free/padding when the scan launched) cannot
+    corrupt the finish-side bookkeeping."""
+    group: Any
+    horizon: int
+    toks_dev: Any                     # device [width, horizon] tokens
+    idx: Optional[List[int]]          # stepped slots (None = full width)
+    occupants: List[Optional[str]]    # per stepped slot, at launch time
+    new: bool                         # compiled a new executable
 
 
 # Fused device-state updates. Placement/eviction touch four resident
@@ -168,6 +237,10 @@ class SlotGroup:
         self.cache_len = cache_len
         self.gated = gated
         self.occupants: List[Optional[str]] = [None] * n_slots
+        # slots held by an in-flight chunked prefill: not yet occupied
+        # (no decode steps them) but not free either (no other admission
+        # may claim them). Cleared by place()/evict().
+        self.reserved: set = set()
         self.cache = decoder.init_cache(cfg_model, n_slots, cache_len,
                                         layout, kv_dtype)
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
@@ -187,7 +260,8 @@ class SlotGroup:
 
     # ----------------------------------------------------------- occupancy
     def free_slots(self) -> List[int]:
-        return [i for i, o in enumerate(self.occupants) if o is None]
+        return [i for i, o in enumerate(self.occupants)
+                if o is None and i not in self.reserved]
 
     def occupied_slots(self) -> List[int]:
         return [i for i, o in enumerate(self.occupants) if o is not None]
@@ -203,6 +277,7 @@ class SlotGroup:
         gate columns, all in one fused jitted update. Re-uploading the
         full [2, L, n_slots] gate tensor per placement would scale
         placement cost with slot count, not request size."""
+        self.reserved.difference_update(slots)
         for s in slots:
             self.occupants[s] = rid
         cols = None
@@ -226,6 +301,7 @@ class SlotGroup:
         return _slot_place_upd
 
     def evict(self, slots: List[int]) -> None:
+        self.reserved.difference_update(slots)
         for s in slots:
             self.occupants[s] = None
 
@@ -390,10 +466,52 @@ class ModelExecutor:
                      prompt: np.ndarray, mask: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
+    # ------------------------------------------------- chunked prefill seam
+    def supports_chunked_prefill(self, group: SlotGroup) -> bool:
+        """Whether ``prefill_begin``/``prefill_step`` work for this group.
+        Default False: backends without a chunked path fall back to
+        monolithic ``prefill_into`` transparently."""
+        return False
+
+    def prefill_begin(self, group: SlotGroup, slots: List[int], rid: str,
+                      prompt: np.ndarray, mask: np.ndarray, *,
+                      max_chunk: int) -> _PrefillTask:
+        """Reserve ``slots`` and open a chunked prefill over ``prompt``
+        (pow2 widths per :func:`chunk_widths`). Advance it one chunk at a
+        time with :meth:`prefill_step`."""
+        raise NotImplementedError
+
+    def prefill_step(self, task: _PrefillTask) -> Optional[np.ndarray]:
+        """Process the task's next chunk. Returns None while the prompt is
+        incomplete; on the final chunk, seats the request into its slots
+        (``place``) and returns the first sampled tokens ``[b]`` — the
+        same contract as monolithic ``prefill_into``'s return."""
+        raise NotImplementedError
+
+    # ------------------------------------------------- decode launch/finish
+    def decode_launch(self, group: SlotGroup,
+                      horizon: int) -> "_InFlightHorizon":
+        """Dispatch one fused H-token decode for ``group`` and return
+        WITHOUT syncing — JAX async dispatch means the host is free to do
+        scheduling/admission work while the scan runs on device. Pair with
+        :meth:`decode_finish` for the read-back."""
+        raise NotImplementedError
+
+    def decode_finish(self,
+                      launch: "_InFlightHorizon") -> Tuple[np.ndarray, bool]:
+        """Block on ``launch``'s device tokens (the tick's single sync) and
+        fold them back to host form: ([n_slots, horizon] tokens,
+        new-compile flag). Slots whose occupant changed since launch (host
+        work seated a new request into a then-free padding slot) are left
+        untouched."""
+        raise NotImplementedError
+
     def decode_horizon(self, group: SlotGroup,
                        horizon: int) -> Tuple[np.ndarray, bool]:
         """Advance every occupied slot of ``group`` by ``horizon`` tokens;
-        returns ([n_slots, horizon] next tokens, new-compile flag)."""
+        returns ([n_slots, horizon] next tokens, new-compile flag).
+        Equivalent to ``decode_finish(decode_launch(...))`` with no host
+        work in between."""
         raise NotImplementedError
 
     def decode(self, group: SlotGroup) -> Tuple[np.ndarray, bool]:
@@ -530,15 +648,113 @@ class LocalExecutor(ModelExecutor):
                     first)
         return first
 
-    # -------------------------------------------------------------- decode
-    def decode_horizon(self, group: SlotGroup,
-                       horizon: int) -> Tuple[np.ndarray, bool]:
+    # ----------------------------------------------------- chunked prefill
+    def supports_chunked_prefill(self, group: SlotGroup) -> bool:
+        """Chunked prefill resumes a positional KV write frontier — only
+        uniform all-attention layouts have one (recurrent/SSD state can't
+        be re-entered mid-prompt)."""
+        layout = group.layout or decoder.default_layout(self.mcfg)
+        return bool(layout) and decoder._is_uniform(layout) \
+            and layout[0].mixer == "attn"
+
+    def _chunk_fn(self, group: SlotGroup, b: int, C: int):
+        """Jitted one-chunk prefill step, keyed by chunk *width* only (the
+        chunk's absolute offset is a traced int32 scalar): a prompt split
+        into pow2 widths reuses log2(cap)+1 executables per (group, b)
+        regardless of prompt length or how far along the chunk sits."""
+        key = ("chunk", group.key, group.cache_len, b, C)
+        if key not in self._prefill_fns:
+            cfg, layout = self.mcfg, group.layout
+            if group.gated:
+                @functools.partial(jax.jit, donate_argnums=(1,))
+                def fn(p, attn, tokens, start, gm, gf):
+                    logits, cache = decoder.prefill_chunk(
+                        p, cfg, {"attn": attn}, tokens, start,
+                        gates={"mixer": gm, "ffn": gf}, layout=layout)
+                    return logits, cache["attn"]
+            else:
+                @functools.partial(jax.jit, donate_argnums=(1,))
+                def fn(p, attn, tokens, start):
+                    logits, cache = decoder.prefill_chunk(
+                        p, cfg, {"attn": attn}, tokens, start,
+                        layout=layout)
+                    return logits, cache["attn"]
+            self._prefill_fns[key] = fn
+            self.compile_events += 1
+        return self._prefill_fns[key]
+
+    def prefill_begin(self, group: SlotGroup, slots: List[int], rid: str,
+                      prompt: np.ndarray, mask: np.ndarray, *,
+                      max_chunk: int) -> _PrefillTask:
+        """Open a chunked prefill: reserve the slots and mint the
+        request-sized partial cache the chunks accumulate into (placed
+        into the group only when the last chunk lands)."""
+        prompt = np.asarray(prompt, np.int32)
+        b, S = prompt.shape
+        attn = decoder.init_cache(self.mcfg, b, group.cache_len,
+                                  group.layout, self.kv_dtype)["attn"]
+        group.reserved.update(slots)
+        gates = masks_lib.mask_to_gates(mask) if group.gated else None
+        return _PrefillTask(group=group, slots=list(slots), rid=rid,
+                            prompt=prompt, mask=mask, gates=gates,
+                            widths=chunk_widths(S, max_chunk), state=attn)
+
+    def prefill_step(self, task: _PrefillTask) -> Optional[np.ndarray]:
+        group = task.group
+        b, S = task.prompt.shape
+        c = task.widths[task.step]
+        tokens = jnp.asarray(task.prompt[:, task.pos:task.pos + c],
+                             jnp.int32)
+        fn = self._chunk_fn(group, b, c)
         t0 = time.perf_counter()
-        toks, new = group.decode_horizon(horizon, self.decode_buckets)
+        if group.gated:
+            logits, task.state = fn(self.params, task.state, tokens,
+                                    np.int32(task.pos),
+                                    task.gates["mixer"], task.gates["ffn"])
+        else:
+            logits, task.state = fn(group.params, task.state, tokens,
+                                    np.int32(task.pos))
+        task.pos += c
+        task.step += 1
+        if not task.done:
+            self.launch_s += time.perf_counter() - t0
+            return None
+        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        self.launch_s += time.perf_counter() - t0
+        group.place(task.rid, task.slots, {"attn": task.state},
+                    task.mask if group.gated else None, S, first)
+        task.state = None
+        return first
+
+    # -------------------------------------------------------------- decode
+    def decode_launch(self, group: SlotGroup,
+                      horizon: int) -> _InFlightHorizon:
+        t0 = time.perf_counter()
+        toks_dev, idx, new = group.launch_horizon(horizon,
+                                                  self.decode_buckets)
         self.launch_s += time.perf_counter() - t0
         if new:
             self.compile_events += 1
-        return toks, new
+        occ = (list(group.occupants) if idx is None
+               else [group.occupants[s] for s in idx])
+        return _InFlightHorizon(group=group, horizon=int(horizon),
+                                toks_dev=toks_dev, idx=idx, occupants=occ,
+                                new=new)
+
+    def decode_finish(self,
+                      launch: _InFlightHorizon) -> Tuple[np.ndarray, bool]:
+        t0 = time.perf_counter()
+        nxt = np.asarray(launch.toks_dev)  # the single device→host sync
+        self.launch_s += time.perf_counter() - t0
+        if launch.idx is None:
+            return nxt, launch.new
+        out = np.zeros((launch.group.n_slots, launch.horizon), np.int32)
+        out[np.asarray(launch.idx)] = nxt
+        return out, launch.new
+
+    def decode_horizon(self, group: SlotGroup,
+                       horizon: int) -> Tuple[np.ndarray, bool]:
+        return self.decode_finish(self.decode_launch(group, horizon))
 
     # ---------------------------------------------------------- utilization
     def kv_utilization(self) -> Tuple[float, float]:
@@ -607,6 +823,8 @@ class PagedGroup:
         self.max_row_pages = max_row_pages
         self.scratch_page = scratch_page
         self.occupants: List[Optional[str]] = [None] * n_slots
+        # slots held by an in-flight chunked prefill (see SlotGroup.reserved)
+        self.reserved: set = set()
         # padded decode rows write their garbage KV into the scratch page
         self.table = np.full((n_slots, max_row_pages), scratch_page, np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
@@ -619,7 +837,8 @@ class PagedGroup:
         self._iidx_cache: Dict[Tuple[int, ...], Any] = {}
 
     def free_slots(self) -> List[int]:
-        return [i for i, o in enumerate(self.occupants) if o is None]
+        return [i for i, o in enumerate(self.occupants)
+                if o is None and i not in self.reserved]
 
     def occupied_slots(self) -> List[int]:
         return [i for i, o in enumerate(self.occupants) if o is not None]
@@ -640,6 +859,7 @@ class PagedGroup:
         full_rows = np.full((len(slots), self.max_row_pages),
                             self.scratch_page, np.int32)
         full_rows[:, :npg] = rows_np
+        self.reserved.difference_update(slots)
         for i, s in enumerate(slots):
             self.occupants[s] = rid
             self.table[s] = full_rows[i]
@@ -666,6 +886,7 @@ class PagedGroup:
         self.table_dev = _paged_grant_upd(self.table_dev, rows, cols, vals)
 
     def evict(self, slots: List[int]) -> None:
+        self.reserved.difference_update(slots)
         for s in slots:
             self.occupants[s] = None
             self.table[s] = self.scratch_page
@@ -843,6 +1064,81 @@ class PagedExecutor(ModelExecutor):
                     np.asarray(g["mixer"]), np.asarray(g["ffn"]))
         return first
 
+    # ----------------------------------------------------- chunked prefill
+    def supports_chunked_prefill(self, group: PagedGroup) -> bool:
+        # the constructor already pins masked + uniform all-attention +
+        # non-int8, which is exactly what the paged chunk path serves
+        return True
+
+    def _chunk_fn(self, b: int, C: int):
+        """Jitted paged one-chunk prefill, keyed by chunk width (offset is
+        traced): the chunk's K/V scatter straight into the granted pages
+        (pool arrays donated through the call, as in monolithic paged
+        prefill)."""
+        scratch = self.pool.scratch_page
+        key = ("chunk", b, C, scratch)
+        if key not in self._prefill_fns:
+            cfg = self.mcfg
+
+            @functools.partial(jax.jit, donate_argnums=(1, 2))
+            def fn(p, kp, vp, table, tokens, start, gm, gf):
+                logits, pools = decoder.paged_prefill_chunk(
+                    p, cfg, {"k": kp, "v": vp}, table, tokens, start,
+                    scratch_page=scratch,
+                    gates={"mixer": gm, "ffn": gf})
+                return logits, pools["k"], pools["v"]
+
+            self._prefill_fns[key] = fn
+            self.compile_events += 1
+        return self._prefill_fns[key]
+
+    def prefill_begin(self, group: PagedGroup, slots: List[int], rid: str,
+                      prompt: np.ndarray, mask: np.ndarray, *,
+                      max_chunk: int) -> _PrefillTask:
+        """Open a chunked paged prefill. The pool allocation (made at
+        admission) covers only the first chunk; each later chunk extends
+        the request's pages just before it runs, so a long prompt's pages
+        materialize incrementally instead of all up front."""
+        prompt = np.asarray(prompt, np.int32)
+        b, S = prompt.shape
+        group.reserved.update(slots)
+        return _PrefillTask(group=group, slots=list(slots), rid=rid,
+                            prompt=prompt, mask=mask,
+                            gates=masks_lib.mask_to_gates(mask),
+                            widths=chunk_widths(S, max_chunk))
+
+    def prefill_step(self, task: _PrefillTask) -> Optional[np.ndarray]:
+        group, rid = task.group, task.rid
+        b, S = task.prompt.shape
+        c = task.widths[task.step]
+        if task.pos > 0:
+            # the admission alloc covered chunk 0; grant this chunk's pages
+            self.pool.extend(rid, c)
+        rows = self.pool.row_pages(rid)
+        table = np.full((b, self.max_row_pages), self.pool.scratch_page,
+                        np.int32)
+        table[:, :len(rows[0])] = np.asarray(rows, np.int32)
+        fn = self._chunk_fn(b, c)
+        t0 = time.perf_counter()
+        logits, kp, vp = fn(
+            self.params, self.pool.k_pages, self.pool.v_pages,
+            jnp.asarray(table),
+            jnp.asarray(task.prompt[:, task.pos:task.pos + c], jnp.int32),
+            np.int32(task.pos), task.gates["mixer"], task.gates["ffn"])
+        self.pool.k_pages, self.pool.v_pages = kp, vp
+        task.pos += c
+        task.step += 1
+        if not task.done:
+            self.launch_s += time.perf_counter() - t0
+            return None
+        first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        self.launch_s += time.perf_counter() - t0
+        rows_np = np.asarray(self.pool.row_pages(rid), np.int32)
+        group.place(rid, task.slots, rows_np, S, first,
+                    np.asarray(task.gates["mixer"]),
+                    np.asarray(task.gates["ffn"]))
+        return first
+
     # -------------------------------------------------------------- decode
     def _decode_batch(self, group: PagedGroup) -> List[int]:
         idx = _bucket_batch(group.occupied_slots(), group.free_slots(),
@@ -947,22 +1243,42 @@ class PagedExecutor(ModelExecutor):
         group.tokens_dev = tok
         return toks, idx, new
 
+    def decode_launch(self, group: PagedGroup,
+                      horizon: int) -> _InFlightHorizon:
+        """Bulk page pre-grant + one fused launch, no sync: the host is
+        free to schedule/admit while the scan runs on device."""
+        self.pre_extend_horizon(group, horizon)
+        t0 = time.perf_counter()
+        toks_dev, idx, new = self.launch_horizon(group, horizon)
+        self.launch_s += time.perf_counter() - t0
+        return _InFlightHorizon(group=group, horizon=int(horizon),
+                                toks_dev=toks_dev, idx=idx,
+                                occupants=[group.occupants[s] for s in idx],
+                                new=new)
+
+    def decode_finish(self,
+                      launch: _InFlightHorizon) -> Tuple[np.ndarray, bool]:
+        group, h = launch.group, launch.horizon
+        t0 = time.perf_counter()
+        nxt = np.asarray(launch.toks_dev)  # the single device→host sync
+        self.launch_s += time.perf_counter() - t0
+        out = np.zeros((group.n_slots, h), np.int32)
+        for j, s in enumerate(launch.idx):
+            # fold back only slots whose occupant is unchanged since
+            # launch: overlapped host admission may have re-seated a slot
+            # that was free padding when the scan dispatched
+            if (launch.occupants[j] is not None
+                    and group.occupants[s] == launch.occupants[j]):
+                out[s] = nxt[j]
+                group.tokens[s] = nxt[j, -1]
+                group.pos[s] += h
+        return out, launch.new
+
     def decode_horizon(self, group: PagedGroup,
                        horizon: int) -> Tuple[np.ndarray, bool]:
         """Advance every occupied slot ``horizon`` tokens: bulk page
         pre-grant, one fused launch, one [width, horizon] read-back."""
-        self.pre_extend_horizon(group, horizon)
-        t0 = time.perf_counter()
-        toks_dev, idx, new = self.launch_horizon(group, horizon)
-        nxt = np.asarray(toks_dev)        # the single device→host sync
-        self.launch_s += time.perf_counter() - t0
-        out = np.zeros((group.n_slots, int(horizon)), np.int32)
-        for j, s in enumerate(idx):
-            if group.occupants[s] is not None:
-                out[s] = nxt[j]
-                group.tokens[s] = nxt[j, -1]
-                group.pos[s] += int(horizon)
-        return out, new
+        return self.decode_finish(self.decode_launch(group, horizon))
 
     # ---------------------------------------------------------- utilization
     def kv_utilization(self) -> Tuple[float, float]:
@@ -996,7 +1312,7 @@ class PagedExecutor(ModelExecutor):
 # ----------------------------------------------------------------- sharded
 class ShardedSlotGroup(SlotGroup):
     """A :class:`SlotGroup` whose decode state is **mesh-resident**
-    (DESIGN.md §5 "Sharded serving").
+    (DESIGN.md §6 "Sharded serving").
 
     The slot axis is the mesh's data-parallel dimension: the KV cache is
     sharded over slots ("data") and KV heads ("model"), positions and
@@ -1079,7 +1395,7 @@ class ShardedSlotGroup(SlotGroup):
 
 
 class ShardedExecutor(LocalExecutor):
-    """Mesh-resident slot-group execution (DESIGN.md §5 "Sharded serving").
+    """Mesh-resident slot-group execution (DESIGN.md §6 "Sharded serving").
 
     Owns both mesh roles of the serving stack:
 

@@ -6,8 +6,14 @@ behind a small protocol so admission *policy* is swappable without
 touching the engine loop:
 
     Scheduler.add(request, cost=…)      requests enter the waiting set
-    Scheduler.schedule(now) ──► SchedulerOutput(admit=[…ordered…])
+    Scheduler.schedule(now, running=…) ──► SchedulerOutput(admit, decode)
     Scheduler.remove(rid)               admitted / rejected requests leave
+
+A :class:`SchedulerOutput` carries two separate plans (the async-engine
+split): ``admit`` is the **prefill plan** — waiting requests in admission
+order — and ``decode`` the **decode plan** — which *running* requests
+step this macro-tick (every scheduler here steps all of them; a
+preemption/SLO-tier scheduler would return a subset).
 
 The engine walks ``SchedulerOutput.admit`` in order, attempting admission
 (policy decision → pool allocation → prefill) per candidate, and stops at
@@ -21,13 +27,16 @@ Schedulers:
   * :class:`SJFScheduler`      — shortest job first, by the request's
     total token cost (prompt + decode length), ties broken by arrival;
   * :class:`PriorityScheduler` — explicit ``EngineRequest.priority``
-    (lower = sooner), ties broken by arrival.
+    (lower = sooner) with an **aging** term: priority improves linearly
+    with waiting time (one level per ``aging_s`` seconds), so a
+    low-priority request behind a steady high-priority stream is
+    eventually ordered first instead of starving.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["Scheduler", "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
            "PriorityScheduler", "SCHEDULERS", "make_scheduler"]
@@ -35,9 +44,13 @@ __all__ = ["Scheduler", "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
 
 @dataclasses.dataclass
 class SchedulerOutput:
-    """An explicit admission plan for one engine tick."""
-    admit: List                     # EngineRequests, in admission order
+    """Explicit per-tick plans: who prefills, who decodes."""
+    admit: List                     # prefill plan: EngineRequests, in order
     n_waiting: int = 0
+    # decode plan: rids of running requests to step this macro-tick. Every
+    # built-in scheduler steps all of them; None means "caller passed no
+    # running set" (legacy schedule(now) calls) and is treated as "all".
+    decode: Optional[List[str]] = None
 
 
 @dataclasses.dataclass
@@ -78,27 +91,33 @@ class Scheduler:
         return rid in self._waiting
 
     # ------------------------------------------------------------- ordering
-    def _key(self, entry: _Entry) -> Tuple:
+    def _key(self, entry: _Entry, now: float) -> Tuple:
         raise NotImplementedError
 
-    def schedule(self, now: float) -> SchedulerOutput:
-        """Order the waiting set into this tick's admission plan."""
-        entries = sorted(self._waiting.values(), key=self._key)
+    def schedule(self, now: float,
+                 running: Sequence[str] = ()) -> SchedulerOutput:
+        """Order the waiting set into this tick's prefill plan; plan the
+        decode step for every running request."""
+        entries = sorted(self._waiting.values(),
+                         key=lambda e: self._key(e, now))
         return SchedulerOutput(admit=[e.req for e in entries],
-                               n_waiting=len(entries))
+                               n_waiting=len(entries),
+                               decode=list(running))
 
 
 class FIFOScheduler(Scheduler):
     name = "fifo"
 
-    def _key(self, entry: _Entry) -> Tuple:
+    def _key(self, entry: _Entry, now: float) -> Tuple:
         return (entry.seq,)
 
-    def schedule(self, now: float) -> SchedulerOutput:
+    def schedule(self, now: float,
+                 running: Sequence[str] = ()) -> SchedulerOutput:
         # insertion order IS arrival order — skip the O(W log W) sort the
         # generic path pays per tick
         return SchedulerOutput(admit=[e.req for e in self._waiting.values()],
-                               n_waiting=len(self._waiting))
+                               n_waiting=len(self._waiting),
+                               decode=list(running))
 
 
 class SJFScheduler(Scheduler):
@@ -109,17 +128,40 @@ class SJFScheduler(Scheduler):
 
     name = "sjf"
 
-    def _key(self, entry: _Entry) -> Tuple:
+    def _key(self, entry: _Entry, now: float) -> Tuple:
         return (entry.cost, entry.seq)
 
 
 class PriorityScheduler(Scheduler):
-    """Explicit request priority (lower = sooner); FIFO within a level."""
+    """Explicit request priority (lower = sooner); FIFO within a level.
+
+    The effective priority **ages**: it improves by one level per
+    ``aging_s`` seconds of waiting (measured from the request's
+    ``arrival_t`` on the engine's clock), so a steady stream of
+    high-priority arrivals can delay a low-priority request only
+    ``aging_s × Δpriority`` seconds before it sorts ahead of them —
+    bounded starvation instead of indefinite deferral (pinned in
+    ``tests/test_engine.py::test_priority_scheduler_aging_prevents_starvation``).
+    Ties (same arrival time) keep the pure priority order unchanged.
+    ``aging_s=float('inf')`` restores the unaged behaviour.
+    """
 
     name = "priority"
 
-    def _key(self, entry: _Entry) -> Tuple:
-        return (getattr(entry.req, "priority", 0), entry.seq)
+    def __init__(self, aging_s: float = 10.0):
+        super().__init__()
+        if not aging_s > 0:
+            raise ValueError(
+                f"aging_s must be > 0 seconds per priority level, got "
+                f"{aging_s!r} (use float('inf') to disable aging)")
+        self.aging_s = float(aging_s)
+
+    def _key(self, entry: _Entry, now: float) -> Tuple:
+        prio = getattr(entry.req, "priority", 0)
+        waited = max(now - getattr(entry.req, "arrival_t", 0.0), 0.0)
+        aged = prio - (waited / self.aging_s if self.aging_s != float("inf")
+                       else 0.0)
+        return (aged, entry.seq)
 
 
 SCHEDULERS: Dict[str, type] = {

@@ -1,4 +1,4 @@
-"""Cross-executor conformance suite (DESIGN.md §5).
+"""Cross-executor conformance suite (DESIGN.md §6).
 
 Every ``ModelExecutor`` backend must be observationally identical on the
 engine's serve path: the SAME trace yields bitwise-identical per-request
@@ -57,12 +57,13 @@ def _reqs(prompts, max_new=None, rate=1000.0, seed=0):
 
 
 def _engine(model, params, c, kind, *, budget, max_new, slots=4, max_len=32,
-            horizon=8):
+            horizon=8, chunk=0):
     return RAPEngine(model, params, RLPolicy(c), EngineConfig(
         mode="masked", max_new_tokens=max_new, max_active=slots,
         max_len=max_len, budget_bytes=budget, tokens_per_page=8,
-        decode_horizon=horizon), executor=EXECUTORS[kind](model, params,
-                                                          slots))
+        decode_horizon=horizon,
+        max_prefill_tokens=chunk), executor=EXECUTORS[kind](model, params,
+                                                            slots))
 
 
 # ------------------------------------------------------- canonical trace
@@ -125,6 +126,21 @@ def test_report_invariants(served, kind):
         assert r.queue_delay_s >= 0.0
         assert r.finished_t >= r.admitted_t
         assert r.tokens.shape == (1, 2)       # truncated, never padded
+        # TTFT is measured from arrival, so queue delay is a lower bound
+        assert r.ttft_s >= r.queue_delay_s - 1e-9
+    # latency summaries: one TTFT per served request, ordered percentiles
+    assert rep.ttft["count"] == 8.0
+    assert rep.ttft["p50"] <= rep.ttft["p90"] + 1e-12 <= rep.ttft["p99"] + 2e-12
+    assert rep.itl["count"] >= 8.0            # ≥1 decode token per request
+    assert rep.itl["p50"] <= rep.itl["p90"] + 1e-12 <= rep.itl["p99"] + 2e-12
+    # stats() decomposes TTFT into queueing + prefill per request
+    per_req = eng.stats()["requests"]
+    assert set(per_req) == {r.rid for r in done}
+    for rid, d in per_req.items():
+        r = rep.result(rid)
+        assert d["ttft_s"] == r.ttft_s
+        np.testing.assert_allclose(
+            d["queue_delay_s"] + d["prefill_s"], r.ttft_s, atol=1e-9)
     pool = rep.pool
     assert pool["peak_in_use_bytes"] <= pool["peak_reserved_bytes"] + 1e-6
     assert pool["peak_reserved_bytes"] <= pool["capacity_bytes"] + 1e-6
@@ -157,6 +173,60 @@ def test_horizon_token_equivalence(served, kind):
             np.testing.assert_array_equal(
                 t, outs[horizon][rid],
                 err_msg=f"{kind}: H={horizon} diverged from H=1 on {rid}")
+
+
+@pytest.mark.parametrize("chunk", [1, 8, 64],
+                         ids=["slice1", "horizon8", "whole"])
+@pytest.mark.parametrize("kind", EXECUTOR_PARAMS)
+def test_chunked_prefill_bitwise_conformance(served, reference_run, kind,
+                                             chunk):
+    """Chunked prefill is unobservable in results: the canonical trace
+    served with ``max_prefill_tokens`` ∈ {1 (single-token slices), 8
+    (horizon-sized), 64 (≥ whole prompt)} emits token streams and masks
+    bitwise-identical to the monolithic reference, on every backend.
+    Pow2 chunk decomposition never pads, so no garbage K/V can perturb
+    the attention math."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    eng = _engine(model, params, c, kind, budget=budget, max_new=2,
+                  chunk=chunk)
+    rep = eng.run(_reqs(prompts))
+    done_ref = {r.rid: r for r in reference_run.results
+                if r.status == "done"}
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert len(done) == len(done_ref) == 8 and rep.rejected == 0
+    for rid, r in done_ref.items():
+        np.testing.assert_array_equal(
+            r.tokens, done[rid].tokens,
+            err_msg=f"{kind} chunk={chunk} diverged from monolithic "
+                    f"on {rid}")
+        np.testing.assert_array_equal(r.mask, done[rid].mask)
+
+
+@pytest.mark.parametrize("kind", EXECUTOR_PARAMS)
+def test_chunked_horizon_equivalence(served, kind):
+    """Chunked prefill composed with every decode horizon H ∈ {1, 4, 8}
+    matches the monolithic H=1 stream bitwise — chunking and horizon are
+    independently and jointly unobservable."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :24], toks[:1, :16]]
+    base = _engine(model, params, c, kind, budget=budget, max_new=6,
+                   horizon=1).run(_reqs(prompts))
+    ref = {r.rid: r.tokens for r in base.results}
+    assert all(r.status == "done" for r in base.results)
+    for horizon in (1, 4, 8):
+        eng = _engine(model, params, c, kind, budget=budget, max_new=6,
+                      horizon=horizon, chunk=8)
+        rep = eng.run(_reqs(prompts))
+        assert all(r.status == "done" for r in rep.results)
+        for r in rep.results:
+            np.testing.assert_array_equal(
+                ref[r.rid], r.tokens,
+                err_msg=f"{kind}: chunked H={horizon} diverged from "
+                        f"monolithic H=1 on {r.rid}")
 
 
 def test_paged_fragmentation_below_slot(served, reference_run):

@@ -18,8 +18,8 @@ import pytest
 
 from repro.core import masks
 from repro.models import decoder
-from repro.runtime import (EngineConfig, KVPool, LocalExecutor,
-                           PagedExecutor)
+from repro.runtime import (EngineConfig, EngineRequest, FIFOScheduler,
+                           KVPool, LocalExecutor, PagedExecutor)
 
 # `served` comes from tests/conftest.py
 
@@ -119,6 +119,110 @@ def test_paged_horizon_bulk_pre_grant(tiny_model):
     ex.pre_extend_horizon(group, 8)                 # fully committed: no-op
     assert pool.seq_tokens("r0") == 32
     pool.free("r0")
+
+
+# ------------------------------------------------- host/device overlap
+def _host_phase_work(now=0.0):
+    """Representative host-side scheduling work the async engine runs
+    while a launched scan is in flight: waiting-set bookkeeping and plan
+    construction. Must perform zero host↔device transfers."""
+    sched = FIFOScheduler()
+    sched.add(EngineRequest(rid="w0", prompt=np.zeros((1, 8), np.int32),
+                            arrival_t=now), cost=16.0)
+    plan = sched.schedule(now, running=["r0"])
+    assert [r.rid for r in plan.admit] == ["w0"]
+    assert plan.decode == ["r0"]
+
+
+def test_local_decode_launch_overlaps_host_work(tiny_model):
+    """The async-tick contract on the local backend: ``decode_launch``
+    dispatches the fused scan and returns without syncing, host
+    scheduling work runs with the scan in flight, and the only transfer
+    of the whole sequence is ``decode_finish``'s token read-back — the
+    launch + host phase execute under ``jax.transfer_guard``."""
+    model, params, batch = tiny_model
+    full = masks.full_mask(model.cfg.n_layers)
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = LocalExecutor(model, params, mode="masked", max_active=4)
+    group = ex.group_for(full, 32)
+    ex.prefill_into(group, [0], "r0", prompt, full)
+    ex.decode_horizon(group, 4)                     # warm (compiles)
+    with jax.transfer_guard("disallow"):
+        launch = ex.decode_launch(group, 4)         # scan in flight
+        _host_phase_work()                          # overlapped host phase
+    toks, new = ex.decode_finish(launch)            # the one sync point
+    assert not new
+    assert toks.shape == (4, 4)                     # [n_slots, H]
+
+
+def test_paged_decode_launch_overlaps_host_work(tiny_model):
+    """Paged sibling: the bulk page pre-grant inside ``decode_launch`` is
+    host-only bookkeeping (sized here so no boundary is crossed), the
+    launch moves nothing, and admission-style pool queries run while the
+    scan is in flight."""
+    model, params, batch = tiny_model
+    full = masks.full_mask(model.cfg.n_layers)
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = PagedExecutor(model, params, max_active=4)
+    pt = 64                       # horizon stays inside the prompt's page
+    page_bytes = ex.page_phys_bytes(pt)
+    pool = KVPool(16 * page_bytes, page_bytes=page_bytes,
+                  tokens_per_page=pt)
+    ex.bind_pool(pool, max_len=64)
+    pool.alloc_tokens("r0", 1, 16, max_tokens=64)
+    group = ex.group_for(full, 0)
+    ex.prefill_into(group, [0], "r0", prompt, full)
+    ex.decode_horizon(group, 4)                     # warm (compiles)
+    with jax.transfer_guard("disallow"):
+        launch = ex.decode_launch(group, 4)         # pre-grant + dispatch
+        _host_phase_work()                          # overlapped host phase
+        assert pool.can_alloc_tokens(1, 64)         # admission-style query
+    toks, new = ex.decode_finish(launch)            # the one sync point
+    assert not new
+    assert toks.shape == (4, 4)
+    assert np.asarray(toks[0]).any()
+    pool.free("r0")
+
+
+def test_engine_chunked_prefill_interleaves_with_decode(served):
+    """The async tick really interleaves: while a long prompt prefills
+    chunk-by-chunk, the running request's decode horizons keep launching
+    between chunks (instead of stalling for the whole prompt)."""
+    from repro.core.policy import RLPolicy
+    from repro.runtime import RAPEngine
+
+    model, params, batch, mm, c = served
+
+    events = []
+
+    class Recorder(LocalExecutor):
+        def decode_launch(self, group, horizon):
+            events.append("launch")
+            return super().decode_launch(group, horizon)
+
+        def prefill_step(self, task):
+            events.append("chunk")
+            return super().prefill_step(task)
+
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 48)
+    eng = RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=16, max_active=4, max_len=48,
+        budget_bytes=budget, tokens_per_page=8, decode_horizon=2,
+        max_prefill_tokens=4),
+        executor=Recorder(model, params, mode="masked", max_active=4))
+    short = EngineRequest(rid="short", prompt=toks[:1, :8], arrival_t=0.0)
+    long_r = EngineRequest(rid="long", prompt=toks[:1, :24], arrival_t=0.0,
+                           max_new=2)
+    rep = eng.run([short, long_r])
+    assert all(r.status == "done" for r in rep.results)
+    # 24/4 = 6 chunks for the long prompt + 8/4 = 2 for the short one...
+    assert events.count("chunk") == 8
+    # ...and decode horizons launched BETWEEN its chunks
+    first, last = events.index("chunk"), len(events) - 1 - \
+        events[::-1].index("chunk")
+    assert events[first:last].count("launch") >= 2, events
 
 
 # ------------------------------------------------------------- validation

@@ -1,0 +1,116 @@
+"""Property tests for the pure latency-percentile helpers
+(``repro.runtime.latency``, DESIGN.md §9 "Measurement").
+
+These pin the arithmetic the engine's TTFT/ITL summaries and the
+BENCH_engine.json schema rely on — no JAX, no engine, tier-1 fast. The
+hypothesis sweeps follow the repo convention (``importorskip``, as in
+``tests/test_properties.py``) and widen the search when hypothesis is
+installed; the seeded deterministic sweeps below always run, so the
+invariants stay pinned even without it.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.runtime.latency import percentile, summarize
+
+
+def _check_bounded(xs, q):
+    p = percentile(xs, q)
+    assert min(xs) - 1e-9 <= p <= max(xs) + 1e-9
+    assert math.isfinite(p)
+
+
+def _check_monotone(xs, q_lo, q_hi):
+    assert percentile(xs, q_lo) <= percentile(xs, q_hi) + 1e-9
+
+
+def _check_numpy_linear(xs):
+    for q in (0.0, 50.0, 90.0, 99.0, 100.0):
+        np.testing.assert_allclose(
+            percentile(xs, q), np.percentile(np.asarray(xs), q),
+            rtol=1e-9, atol=1e-9)
+
+
+def _check_summary(xs):
+    s = summarize(xs)
+    assert set(s) == {"p50", "p90", "p99", "mean", "count"}
+    assert s["count"] == float(len(xs))
+    assert s["p50"] <= s["p90"] + 1e-9 <= s["p99"] + 2e-9
+    assert min(xs) - 1e-9 <= s["mean"] <= max(xs) + 1e-9
+
+
+# ------------------------------------------------ deterministic sweeps
+def test_percentile_properties_seeded_sweep():
+    """Bounded-by-extremes, monotone-in-q, numpy-equivalent, and summary
+    ordering over seeded random streams of varied size and scale."""
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 3, 7, 50, 200):
+        for scale in (1e-3, 1.0, 1e6):
+            xs = list((rng.standard_normal(n) * scale).round(6))
+            for q in (0.0, 13.7, 50.0, 90.0, 99.0, 100.0):
+                _check_bounded(xs, q)
+            q_pairs = rng.uniform(0.0, 100.0, size=(8, 2))
+            for a, b in q_pairs:
+                _check_monotone(xs, min(a, b), max(a, b))
+            _check_numpy_linear(xs)
+            _check_summary(xs)
+
+
+def test_percentile_edge_cases():
+    assert percentile([], 50.0) == 0.0
+    assert percentile([3.5], 99.0) == 3.5
+    assert percentile([1.0, 2.0], 50.0) == 1.5   # linear interpolation
+    for bad in (-0.1, 100.1, float("nan")):
+        with pytest.raises(ValueError, match="percentile q"):
+            percentile([1.0], bad)
+
+
+def test_summarize_empty_stream_is_total():
+    s = summarize([])
+    assert s == {"p50": 0.0, "p90": 0.0, "p99": 0.0,
+                 "mean": 0.0, "count": 0.0}
+
+
+def test_summarize_custom_quantiles_key_rendering():
+    s = summarize([1.0, 2.0], qs=(25.0, 99.9))
+    assert set(s) == {"p25", "p99.9", "mean", "count"}
+
+
+# --------------------------------------------------- hypothesis sweeps
+# A plain try/except (not importorskip, which would skip the whole module
+# and the always-on sweeps above with it) gates the wider random search.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    given = None
+
+if given is not None:
+    finite = st.floats(min_value=-1e9, max_value=1e9,
+                       allow_nan=False, allow_infinity=False)
+    streams = st.lists(finite, min_size=1, max_size=200)
+
+    @given(xs=streams, q=st.floats(min_value=0.0, max_value=100.0))
+    @settings(max_examples=200, deadline=None)
+    def test_percentile_bounded_by_extremes(xs, q):
+        _check_bounded(xs, q)
+
+    @given(xs=streams,
+           qs=st.tuples(st.floats(min_value=0.0, max_value=100.0),
+                        st.floats(min_value=0.0, max_value=100.0)))
+    @settings(max_examples=200, deadline=None)
+    def test_percentile_monotone_in_q(xs, qs):
+        lo, hi = sorted(qs)
+        _check_monotone(xs, lo, hi)
+
+    @given(xs=streams)
+    @settings(max_examples=100, deadline=None)
+    def test_percentile_matches_numpy_linear(xs):
+        _check_numpy_linear(xs)
+
+    @given(xs=streams)
+    @settings(max_examples=100, deadline=None)
+    def test_summarize_shape_and_ordering(xs):
+        _check_summary(xs)

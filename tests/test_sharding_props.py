@@ -1,4 +1,4 @@
-"""Partition-rule consistency properties (DESIGN.md §5).
+"""Partition-rule consistency properties (DESIGN.md §6).
 
 Every PartitionSpec the sharding rules emit must *fit*: each sharded dim
 divides the product of its mesh axes. `_pick` enforces this inside
