@@ -30,6 +30,11 @@ class Decision:
     fits: bool
     latency_s: float
     cached: bool = False      # served from the (bucket, shape) memo table
+    # per-request KV storage precision the policy asks for (canonical name
+    # "fp32"/"bf16"/"int8"/"fp8", or None = the serving pool's precision);
+    # the engine charges admission at this width and KVPool.alloc_tokens
+    # rejects a request whose precision disagrees with the bound pool
+    kv_dtype: Optional[str] = None
 
 
 class RAPController:

@@ -142,6 +142,16 @@ class PoolAccounting:
     hard invariant ``reserved_bytes <= capacity_bytes`` unless the caller
     explicitly overcommits (legacy one-shot serving executes regardless of
     fit; the engine's strict admission path never does).
+
+    ``in_use_scale`` is the pool's byte width relative to the analytical
+    memory model: admission charges arrive in model-dtype bytes (Eq. (3)–(4)
+    at the model's KV width), but a quantized pool stores each element
+    narrower (plus per-page scales). Every in-use charge is multiplied by
+    this ratio on entry so ``in_use_bytes`` / ``peak_in_use_bytes`` /
+    ``fragmentation()`` report *physical* bytes — without it, an int8 pool's
+    ledger would claim 4× its true occupancy and fragmentation would go
+    negative. Reserved bytes are already physical (page-granular) and are
+    never scaled.
     """
     capacity_bytes: float
     reserved_bytes: float = 0.0
@@ -149,6 +159,7 @@ class PoolAccounting:
     peak_reserved_bytes: float = 0.0
     peak_in_use_bytes: float = 0.0
     overcommit_events: int = 0
+    in_use_scale: float = 1.0
 
     @property
     def available_bytes(self) -> float:
@@ -159,6 +170,7 @@ class PoolAccounting:
 
     def reserve(self, reserved: float, in_use: float, *,
                 allow_overcommit: bool = False) -> None:
+        in_use = in_use * self.in_use_scale
         if in_use > reserved + 1e-6:
             raise ValueError(f"in_use {in_use} exceeds reservation {reserved}")
         if not self.can_reserve(reserved):
@@ -189,7 +201,7 @@ class PoolAccounting:
                 f"{self.available_bytes:.0f}B "
                 f"(capacity {self.capacity_bytes:.0f}B)")
         self.reserved_bytes += reserved_delta
-        self.in_use_bytes += in_use_delta
+        self.in_use_bytes += in_use_delta * self.in_use_scale
         self.peak_reserved_bytes = max(self.peak_reserved_bytes,
                                        self.reserved_bytes)
         self.peak_in_use_bytes = max(self.peak_in_use_bytes,
@@ -197,7 +209,8 @@ class PoolAccounting:
 
     def release(self, reserved: float, in_use: float) -> None:
         self.reserved_bytes = max(self.reserved_bytes - reserved, 0.0)
-        self.in_use_bytes = max(self.in_use_bytes - in_use, 0.0)
+        self.in_use_bytes = max(
+            self.in_use_bytes - in_use * self.in_use_scale, 0.0)
 
     def fragmentation(self) -> float:
         """Internal fragmentation: wasted fraction of reserved bytes."""

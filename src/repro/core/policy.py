@@ -76,9 +76,20 @@ class PruningPolicy:
 
     name: str = "base"
     mm: MemoryModel
+    # KV storage precision this policy asks the engine to serve requests
+    # at ("fp32"/"bf16"/"int8"/"fp8", or None = the pool's native width).
+    # Launchers set it once (``--kv-dtype``); every Decision carries it so
+    # admission charges quantized bytes and the pool can reject mismatches.
+    kv_dtype: Optional[str] = None
 
     def observe(self, state: PolicyState) -> Decision:
         raise NotImplementedError
+
+    def _stamp(self, d: Decision) -> Decision:
+        """Attach this policy's requested KV precision to a Decision."""
+        if self.kv_dtype is None or d.kv_dtype == self.kv_dtype:
+            return d
+        return dataclasses.replace(d, kv_dtype=self.kv_dtype)
 
     def feedback(self, result) -> None:
         """Called with the completed request's ``RequestResult``."""
@@ -97,8 +108,9 @@ class RLPolicy(PruningPolicy):
         self.mm = controller.mm
 
     def observe(self, state: PolicyState) -> Decision:
-        return self.controller.decide(state.batch, state.total_len,
-                                      state.budget_bytes)
+        return self._stamp(self.controller.decide(state.batch,
+                                                  state.total_len,
+                                                  state.budget_bytes))
 
 
 class DensePolicy(PruningPolicy):
@@ -112,8 +124,9 @@ class DensePolicy(PruningPolicy):
     def observe(self, state: PolicyState) -> Decision:
         mask = masks_lib.full_mask(self.mm.n_layers)
         peak = self.mm.peak_bytes(mask, state.batch, state.total_len)
-        return Decision(mask=mask, steps=0, peak_bytes=peak,
-                        fits=peak <= state.budget_bytes, latency_s=0.0)
+        return self._stamp(Decision(mask=mask, steps=0, peak_bytes=peak,
+                                    fits=peak <= state.budget_bytes,
+                                    latency_s=0.0))
 
 
 class StaticOrderPolicy(PruningPolicy):
@@ -139,10 +152,10 @@ class StaticOrderPolicy(PruningPolicy):
                round(budget / max(self.mm.dense_peak(bs, sql), 1.0), 3))
         if key in self._memo:
             d = self._memo[key]
-            return dataclasses.replace(
+            return self._stamp(dataclasses.replace(
                 d, mask=d.mask.copy(), cached=True,
                 fits=d.peak_bytes <= budget,
-                latency_s=time.perf_counter() - t0)
+                latency_s=time.perf_counter() - t0))
         mask = baselines_lib.prune_by_order(self.order, self.mm, bs, sql,
                                             budget)
         peak = self.mm.peak_bytes(mask, bs, sql)
@@ -150,7 +163,7 @@ class StaticOrderPolicy(PruningPolicy):
                      peak_bytes=peak, fits=peak <= budget,
                      latency_s=time.perf_counter() - t0)
         self._memo[key] = dataclasses.replace(d, mask=mask.copy())
-        return d
+        return self._stamp(d)
 
 
 # ---------------------------------------------------------------- registry

@@ -44,9 +44,11 @@ def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
 
 @functools.partial(jax.jit, static_argnames=("softcap",))
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           k_scales=None, v_scales=None,
                            softcap: float = 0.0):
     return _pdec.paged_decode_attention(q, k_pages, v_pages, page_table,
-                                        lengths, softcap=softcap,
+                                        lengths, k_scales=k_scales,
+                                        v_scales=v_scales, softcap=softcap,
                                         interpret=_interpret())
 
 

@@ -46,21 +46,17 @@ NEG_INF = -2.0e38
 _LANES = 128
 
 
-def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
-            *, scale: float, softcap: float, page_tokens: int):
-    b = pl.program_id(0)
-    ip = pl.program_id(2)
-    n_ip = pl.num_programs(2)
-
+def _flash_step(b, ip, n_ip, q, k, v, len_ref, o_ref, m_sc, l_sc, acc_sc,
+                *, scale: float, softcap: float, page_tokens: int):
+    """One page's online-softmax update — shared verbatim by the plain and
+    quantized kernels so dequantization cannot perturb the (m, l, acc)
+    op sequence the bitwise conformance pins."""
     @pl.when(ip == 0)
     def _init():
         m_sc[...] = jnp.full_like(m_sc, NEG_INF)
         l_sc[...] = jnp.zeros_like(l_sc)
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
-    q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
-    k = k_ref[0, :, 0].astype(jnp.float32)           # [page_tokens, D]
-    v = v_ref[0, :, 0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     if softcap > 0.0:
@@ -86,7 +82,40 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
         o_ref[0, 0] = (acc_sc[...] / l).astype(o_ref.dtype)
 
 
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
+            *, scale: float, softcap: float, page_tokens: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    n_ip = pl.num_programs(2)
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)           # [page_tokens, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    _flash_step(b, ip, n_ip, q, k, v, len_ref, o_ref, m_sc, l_sc, acc_sc,
+                scale=scale, softcap=softcap, page_tokens=page_tokens)
+
+
+def _kernel_quant(pt_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_sc, l_sc, acc_sc, *, scale: float, softcap: float,
+                  page_tokens: int):
+    """Fused-dequant variant: pages arrive int8/fp8; per-(page, kv-head)
+    scales ride the scalar-prefetch path next to the page table, so the
+    dequant is one scalar multiply per tile — ``q.astype(f32) * scale`` —
+    exactly mirroring ``models.attention.page_dequant``. The (m, l, acc)
+    scratch stays fp32 via the shared ``_flash_step``."""
+    b = pl.program_id(0)
+    g = pl.program_id(1)
+    ip = pl.program_id(2)
+    n_ip = pl.num_programs(2)
+    page = pt_ref[b, ip]
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[page, g]
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[page, g]
+    _flash_step(b, ip, n_ip, q, k, v, len_ref, o_ref, m_sc, l_sc, acc_sc,
+                scale=scale, softcap=softcap, page_tokens=page_tokens)
+
+
 def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           k_scales=None, v_scales=None,
                            softcap: float = 0.0, interpret: bool = False):
     """q: [B,1,H,D]; k_pages/v_pages: [n_pages, page_tokens, K, D];
     page_table: int32 [B, max_pages]; lengths: int32 [B]. → [B,1,H,D].
@@ -94,32 +123,52 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     Row ``b`` attends its first ``lengths[b]`` tokens, token ``t`` living at
     ``(page_table[b, t // page_tokens], t % page_tokens)``. Unused table
     entries must still be valid page ids (they are fetched, then masked).
+
+    ``k_scales``/``v_scales`` (f32 ``[n_pages, K]``, both or neither)
+    switch on the fused-dequant path for int8/fp8 page pools: scales are
+    scalar-prefetched alongside the page table and each K/V tile is
+    multiplied by its page's per-head scale before the fp32 online softmax.
     """
     B, _, H, D = q.shape
     page_tokens, K = k_pages.shape[1], k_pages.shape[2]
     max_pages = page_table.shape[1]
     assert H % K == 0
     G = H // K
+    quantized = k_scales is not None
+    assert quantized == (v_scales is not None), \
+        "k_scales and v_scales must be given together"
 
     qg = q[:, 0].reshape(B, K, G, D)                 # grouped query heads
     page_table = jnp.asarray(page_table, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
 
-    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(D),
-                               softcap=softcap, page_tokens=page_tokens)
+    # scalar-prefetch operands lead the positional args; BlockSpec index
+    # maps receive them after the grid ids, so the two layouts need their
+    # own lambdas (the quantized maps take the two trailing scale refs)
+    if quantized:
+        kernel = functools.partial(_kernel_quant, scale=1.0 / math.sqrt(D),
+                                   softcap=softcap, page_tokens=page_tokens)
+        num_prefetch = 4                 # page_table, lengths, ks, vs
+        q_map = lambda b, g, ip, tab, ln, ks, vs: (b, g, 0, 0)
+        kv_map = lambda b, g, ip, tab, ln, ks, vs: (tab[b, ip], 0, g, 0)
+        prefetch = (page_table, lengths, jnp.asarray(k_scales, jnp.float32),
+                    jnp.asarray(v_scales, jnp.float32))
+    else:
+        kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(D),
+                                   softcap=softcap, page_tokens=page_tokens)
+        num_prefetch = 2                 # page_table, lengths
+        q_map = lambda b, g, ip, tab, ln: (b, g, 0, 0)
+        kv_map = lambda b, g, ip, tab, ln: (tab[b, ip], 0, g, 0)
+        prefetch = (page_table, lengths)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                       # page_table, lengths
+        num_scalar_prefetch=num_prefetch,
         grid=(B, K, max_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, g, ip, tab, ln: (b, g, 0, 0)),
-            pl.BlockSpec((1, page_tokens, 1, D),
-                         lambda b, g, ip, tab, ln: (tab[b, ip], 0, g, 0)),
-            pl.BlockSpec((1, page_tokens, 1, D),
-                         lambda b, g, ip, tab, ln: (tab[b, ip], 0, g, 0)),
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, page_tokens, 1, D), kv_map),
+            pl.BlockSpec((1, page_tokens, 1, D), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, g, ip, tab, ln: (b, g, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
         scratch_shapes=[
             pltpu.VMEM((G, _LANES), jnp.float32),
             pltpu.VMEM((G, _LANES), jnp.float32),
@@ -133,6 +182,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-        name="rap_paged_decode_attention",
-    )(page_table, lengths, qg, k_pages, v_pages)
+        name=("rap_paged_decode_attention_quant" if quantized
+              else "rap_paged_decode_attention"),
+    )(*prefetch, qg, k_pages, v_pages)
     return out.reshape(B, 1, H, D)

@@ -40,7 +40,7 @@ def make_host_mesh(shape: Tuple[int, ...] = None, axes=None):
 
 
 def make_serve_mesh(n_slots: Optional[int] = None, *, model: int = 1):
-    """DP-majority serve mesh over the host's devices (DESIGN.md §6).
+    """DP-majority serve mesh over the host's devices (DESIGN.md §7).
 
     The engine's slot axis is the data-parallel dimension, so the "data"
     axis is the largest power of two that (a) fits the devices left after

@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §8):
+Two serving paths (DESIGN.md §9):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -59,17 +59,28 @@ def main():
                          "compiled on-device loop emits H tokens per "
                          "running request with ONE device→host sync "
                          "(results are bitwise-identical to H=1; see "
-                         "DESIGN.md §4)")
+                         "DESIGN.md §5)")
     ap.add_argument("--chunked-prefill", action="store_true",
                     help="prefill prompts in pow2-bucketed chunks "
                          "interleaved with decode macro-ticks (async "
-                         "engine, DESIGN.md §5) so a long prompt cannot "
+                         "engine, DESIGN.md §6) so a long prompt cannot "
                          "stall running decodes; chunk cap defaults to 64 "
                          "tokens unless --max-prefill-tokens is given")
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="cap on prompt tokens prefilled per engine tick "
                          "(implies --chunked-prefill; 0 = monolithic "
                          "prefill unless --chunked-prefill is set)")
+    ap.add_argument("--kv-dtype", default="model",
+                    choices=("model", "fp32", "bf16", "int8", "fp8", "auto"),
+                    help="KV cache storage precision: 'model' (default) "
+                         "stores at the model dtype; int8/fp8 quantize "
+                         "pages (paged executor: per-(page, head) scales "
+                         "with dequant fused into the decode kernel; slot "
+                         "executors: per-(token, head) scales) — admission "
+                         "charges quantized bytes, so int8 admits ~2× the "
+                         "sequence under the same budget; 'auto' lets the "
+                         "policy choose once at startup: quantize when the "
+                         "pool cannot host the full decode batch densely")
     ap.add_argument("--pool-requests", type=float, default=2.5,
                     help="KV pool sized for this many concurrent dense "
                          "requests")
@@ -159,9 +170,21 @@ def main():
     max_b = max(r.batch for r in reqs)
     budget = (mm.param_bytes(full)
               + args.pool_requests * mm.state_bytes(full, max_b, max_total))
+    kv_dtype = None if args.kv_dtype == "model" else args.kv_dtype
+    if kv_dtype == "auto":
+        # precision as a policy action, resolved ONCE at startup (one pool
+        # holds one precision): quantize when the pool cannot host the
+        # full decode batch densely at model width, else keep model width
+        kv_cap = budget - mm.param_bytes(full)
+        dense_req = mm.state_bytes(full, 1, max_total)
+        kv_dtype = "int8" if kv_cap < slots * dense_req else None
+        print(f"--kv-dtype auto → {kv_dtype or 'model precision'} "
+              f"(pool {kv_cap / 1e6:.1f}MB vs {slots} dense requests "
+              f"{slots * dense_req / 1e6:.1f}MB)")
     executor = None
     if args.executor == "paged":
-        executor = PagedExecutor(model, params, max_active=slots)
+        executor = PagedExecutor(model, params, max_active=slots,
+                                 kv_dtype=kv_dtype)
     elif args.executor == "sharded":
         from repro.launch.mesh import make_host_mesh, make_serve_mesh
         from repro.runtime import ShardedExecutor
@@ -188,10 +211,10 @@ def main():
         print(f"sharded mesh: {dict(mesh.shape)} over {mesh.size} of "
               f"{len(jax.devices())} devices")
         executor = ShardedExecutor(model, mesh, params=params,
-                                   max_active=slots)
+                                   max_active=slots, kv_dtype=kv_dtype)
     engine = RAPEngine(model, params, policy, EngineConfig(
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
-        max_len=max_total, budget_bytes=budget,
+        max_len=max_total, budget_bytes=budget, kv_dtype=kv_dtype,
         decode_horizon=args.decode_horizon,
         max_prefill_tokens=args.max_prefill_tokens),
         scheduler=args.scheduler, executor=executor)

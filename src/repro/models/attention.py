@@ -188,6 +188,45 @@ def kv_quant(x):
     return q, scale.astype(jnp.float32)
 
 
+def page_qmax(dtype) -> float:
+    """Symmetric quantization ceiling of a paged storage dtype: 127 for
+    int8, 448 for float8_e4m3fn (its largest finite value)."""
+    return 127.0 if jnp.dtype(dtype) == jnp.int8 else 448.0
+
+
+def page_quant(xf, dtype, scale_floor=None):
+    """Quantize whole pages ``[..., page_tokens, K, Dh]`` (f32) into
+    ``dtype`` with ONE symmetric scale per (page, kv-head): returns
+    ``(q, scales[..., K])``.
+
+    ``scale_floor`` (same shape as the scales) makes the scale monotone
+    within a page's lifetime: when an append does not raise the page's
+    amax, the scale is unchanged and requantizing the page's existing
+    tokens reproduces their stored codes exactly (``round(s·q/s) == q``),
+    so repeated appends drift only when the scale actually grows."""
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))            # [..., K]
+    qmax = page_qmax(dtype)
+    scale = amax / qmax
+    if scale_floor is not None:
+        scale = jnp.maximum(scale, scale_floor)
+    # epsilon as a FLOOR, not an addend: adding it after the max would
+    # grow a stable page's scale every requantization
+    scale = jnp.maximum(scale, 1e-8)
+    y = xf / scale[..., None, :, None]
+    if jnp.dtype(dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(dtype)
+    return q, scale.astype(jnp.float32)
+
+
+def page_dequant(q, scales):
+    """Dequantize pages ``[..., page_tokens, K, Dh]`` with per-(page, head)
+    scales ``[..., K]`` to f32 — the reference the fused kernel is pinned
+    bitwise against (``q.astype(f32) * scale`` per element, nothing else)."""
+    return q.astype(jnp.float32) * scales[..., None, :, None]
+
+
 def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int, dtype=None):
     """Cache entry dict. bf16/f32 mode: {k, v}. int8 mode adds per-(token,
     head) scales {ks, vs} — the production KV-quantization that halves the
@@ -236,15 +275,22 @@ def paged_decode_attention(params, cfg, x, kv: dict, page_table, pos, *,
     the TPU path — BlockSpec index maps chase the page table, no gather)
     or an XLA gather fallback that materializes ``[B, max_pages ×
     page_tokens]`` and reuses the dense softmax (the CPU serving path).
-    int8 KV pools are not yet supported (scales would need their own pool).
+
+    Quantized pools carry per-(page, kv-head) scales ``{"ks","vs"}``
+    ``[n_pages, K]``: the append is a code-space rewrite of the row's
+    page — the monotone scale grows to ``max(old, token_amax/qmax)``,
+    existing codes rescale by ``old/new`` (exactly 1.0 while the scale
+    is stable, so they round-trip bitwise), the token quantizes into its
+    slot, and stale slots past the write frontier stay zero. The read
+    path dequantizes — fused into the Pallas kernel via scalar-prefetched
+    scales, or mirrored exactly in the XLA gather (``q.astype(f32) *
+    scale``) so both paths see identical f32 values.
     """
-    if "ks" in kv:
-        raise NotImplementedError("paged decode does not support int8 KV "
-                                  "pools yet (per-page scales)")
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     page_table = jnp.asarray(page_table, jnp.int32)
     page_tokens = kv["k"].shape[1]
+    quantized = "ks" in kv
     q, k, v = _project_qkv(params, cfg, x)
     positions = jnp.broadcast_to(pos.reshape(-1, 1), (B, 1))
     if cfg.use_rope:
@@ -255,20 +301,62 @@ def paged_decode_attention(params, cfg, x, kv: dict, page_table, pos, *,
     page_ids = page_table[rows, pos // page_tokens]
     offs = pos % page_tokens
     kv = dict(kv)
-    kv["k"] = kv["k"].at[page_ids, offs].set(k[:, 0].astype(kv["k"].dtype))
-    kv["v"] = kv["v"].at[page_ids, offs].set(v[:, 0].astype(kv["v"].dtype))
+    if quantized:
+        # code-space append (rows own disjoint pages; only padded rows
+        # collide on the scratch page, which is never read). The monotone
+        # page scale means existing codes never exceed old_scale*qmax, so
+        # the new scale is just max(token amax / qmax, old scale) — no
+        # page-wide amax reduction — and existing codes rescale by
+        # old/new, which is exactly 1.0 while the scale is stable: the
+        # common-case append rewrites the page bitwise-unchanged plus the
+        # one inserted slot, at a fraction of a dequant→requant pass.
+        slot = jnp.arange(page_tokens)[None, :, None, None]   # [1, pt, 1, 1]
+        off_b = offs[:, None, None, None]                     # [B, 1, 1, 1]
+        fresh = (offs == 0)[:, None]                          # [B, 1]
+        for pk, sk, new in (("k", "ks", k), ("v", "vs", v)):
+            qmax = page_qmax(kv[pk].dtype)
+            int_codes = jnp.dtype(kv[pk].dtype) == jnp.int8
+            tok = new[:, 0].astype(jnp.float32)               # [B, K, Dh]
+            old_s = kv[sk][page_ids]                          # [B, K]
+            # a freshly started page must not inherit the previous
+            # occupant's content or scale
+            floor = jnp.where(fresh, 0.0, old_s)
+            new_s = jnp.maximum(jnp.maximum(
+                jnp.max(jnp.abs(tok), axis=-1) / qmax, floor), 1e-8)
+            r = jnp.where(fresh, 0.0, old_s / new_s)          # [B, K] <= 1
+            pg = kv[pk][page_ids].astype(jnp.float32) * r[:, None, :, None]
+            tok_q = tok / new_s[..., None]
+            if int_codes:
+                pg, tok_q = jnp.round(pg), jnp.round(tok_q)
+            pg = jnp.where(slot == off_b, tok_q[:, None], pg)
+            pg = jnp.where(slot <= off_b, pg, 0.0)  # stale slots → 0
+            kv[pk] = kv[pk].at[page_ids].set(
+                jnp.clip(pg, -qmax, qmax).astype(kv[pk].dtype))
+            kv[sk] = kv[sk].at[page_ids].set(new_s)
+    else:
+        kv["k"] = kv["k"].at[page_ids, offs].set(
+            k[:, 0].astype(kv["k"].dtype))
+        kv["v"] = kv["v"].at[page_ids, offs].set(
+            v[:, 0].astype(kv["v"].dtype))
     lengths = pos + 1
     if impl == "pallas":
         from repro.kernels import ops as kops
-        out = kops.paged_decode_attention(q, kv["k"], kv["v"], page_table,
-                                          lengths,
-                                          softcap=cfg.logit_softcap)
+        out = kops.paged_decode_attention(
+            q, kv["k"], kv["v"], page_table, lengths,
+            k_scales=kv.get("ks"), v_scales=kv.get("vs"),
+            softcap=cfg.logit_softcap)
     else:
         # gather fallback: page_table indexes the pool back into a
         # contiguous per-row view [B, max_pages*page_tokens, K, Dh]
         S = page_table.shape[1] * page_tokens
-        ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
-        cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
+        if quantized:
+            ck = page_dequant(kv["k"][page_table], kv["ks"][page_table])
+            cv = page_dequant(kv["v"][page_table], kv["vs"][page_table])
+            ck = ck.reshape(B, S, *ck.shape[3:])
+            cv = cv.reshape(B, S, *cv.shape[3:])
+        else:
+            ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
+            cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
         valid = jnp.arange(S)[None, :] < lengths[:, None]      # [B, S]
         out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype),
                     valid[:, None, None, :])
@@ -289,7 +377,7 @@ def chunk_attention(params, cfg, x, kv: dict, start, *,
     queries attend the full cache width under the causal mask
     ``kpos <= start + qi`` — positions beyond the write frontier are
     masked to exactly-zero probability, so chunk-by-chunk prefill is
-    bitwise-identical to the monolithic pass (DESIGN.md §5). Returns
+    bitwise-identical to the monolithic pass (DESIGN.md §6). Returns
     (out [B, C, D], kv').
     """
     B, C = x.shape[:2]
@@ -325,17 +413,19 @@ def paged_chunk_attention(params, cfg, x, kv: dict, page_table, start, *,
     at the same offset). Tokens whose position falls past the table width
     are routed to the scratch page (a write sink) instead of letting the
     gather clamp onto a live page. Attention runs through the same
-    gather fallback as ``paged_decode_attention``'s XLA path. Returns
+    gather fallback as ``paged_decode_attention``'s XLA path. Quantized
+    pools requantize every page the chunk touches (monotone scales;
+    straddled leading pages keep their scale floor, pages starting at or
+    after ``start`` reset it) and never rewrite settled earlier pages —
+    their untouched write-back is routed to the scratch sink. Returns
     (out [B, C, D], kv').
     """
-    if "ks" in kv:
-        raise NotImplementedError("paged prefill does not support int8 KV "
-                                  "pools yet (per-page scales)")
     B, C = x.shape[:2]
     start = jnp.asarray(start, jnp.int32)
     page_table = jnp.asarray(page_table, jnp.int32)
     page_tokens = kv["k"].shape[1]
     max_pages = page_table.shape[1]
+    quantized = "ks" in kv
     q, k, v = _project_qkv(params, cfg, x)
     tok_pos = start + jnp.arange(C)                        # [C]
     positions = jnp.broadcast_to(tok_pos[None, :], (B, C))
@@ -349,12 +439,48 @@ def paged_chunk_attention(params, cfg, x, kv: dict, page_table, start, *,
     page_ids = jnp.where(in_range[None, :], page_ids, scratch_page)  # [B, C]
     offs = jnp.broadcast_to((tok_pos % page_tokens)[None, :], (B, C))
     kv = dict(kv)
-    kv["k"] = kv["k"].at[page_ids, offs].set(k.astype(kv["k"].dtype))
-    kv["v"] = kv["v"].at[page_ids, offs].set(v.astype(kv["v"].dtype))
+    if quantized:
+        S = max_pages * page_tokens
+        col_ids = jnp.arange(max_pages)                     # [maxp]
+        # which table columns this chunk writes into (same for all rows:
+        # chunked rows share one offset); everything else is settled or
+        # empty and must NOT be requantized — route its write-back to the
+        # scratch sink instead
+        touched = (((col_ids + 1) * page_tokens > start)
+                   & (col_ids * page_tokens < start + C))
+        write_ids = jnp.where(touched[None, :], page_table, scratch_page)
+        frontier = (start + C)
+        kpos = jnp.arange(S)
+        live = (kpos < frontier)[None, :, None, None]       # [1, S, 1, 1]
+        fresh_col = (col_ids * page_tokens >= start)[None, :, None]
+        for pk, sk, new in (("k", "ks", k), ("v", "vs", v)):
+            view = page_dequant(kv[pk][page_table], kv[sk][page_table])
+            view = view.reshape(B, S, *view.shape[3:])      # [B, S, K, Dh]
+            # pad by C so an over-the-table chunk spills off the end
+            # instead of letting dynamic_update_slice clamp onto live data
+            view = jnp.concatenate(
+                [view, jnp.zeros((B, C) + view.shape[2:], view.dtype)], 1)
+            view = jax.lax.dynamic_update_slice(
+                view, new.astype(jnp.float32), (0, start, 0, 0))[:, :S]
+            view = jnp.where(live, view, 0.0)               # stale slots → 0
+            pages = view.reshape(B, max_pages, page_tokens, *view.shape[2:])
+            floor = jnp.where(fresh_col, 0.0, kv[sk][page_table])
+            qp, sp = page_quant(pages, kv[pk].dtype, scale_floor=floor)
+            kv[pk] = kv[pk].at[write_ids].set(qp)
+            kv[sk] = kv[sk].at[write_ids].set(sp)
+    else:
+        kv["k"] = kv["k"].at[page_ids, offs].set(k.astype(kv["k"].dtype))
+        kv["v"] = kv["v"].at[page_ids, offs].set(v.astype(kv["v"].dtype))
     # gather fallback view [B, max_pages*page_tokens, K, Dh] + causal mask
     S = max_pages * page_tokens
-    ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
-    cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
+    if quantized:
+        ck = page_dequant(kv["k"][page_table], kv["ks"][page_table])
+        cv = page_dequant(kv["v"][page_table], kv["vs"][page_table])
+        ck = ck.reshape(B, S, *ck.shape[3:])
+        cv = cv.reshape(B, S, *cv.shape[3:])
+    else:
+        ck = kv["k"][page_table].reshape(B, S, *kv["k"].shape[2:])
+        cv = kv["v"][page_table].reshape(B, S, *kv["v"].shape[2:])
     mask = _causal_mask(C, S, 0, q_offset=start)
     out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
     y = jnp.einsum("bsq,qm->bsm", out.reshape(B, C, -1),

@@ -548,7 +548,7 @@ def prefill_chunk(params, cfg, cache, tokens, start, *, gates=None,
                   layout=None) -> Tuple[jnp.ndarray, dict]:
     """Process one prompt chunk against a partially filled slot cache.
 
-    The chunked-prefill hot path (DESIGN.md §5): ``tokens`` [B, C] are C
+    The chunked-prefill hot path (DESIGN.md §6): ``tokens`` [B, C] are C
     consecutive prompt tokens at absolute offset ``start`` (int32 scalar,
     traced — executables key on the chunk width, never the offset). Layers
     scan with the KV cache riding the carry exactly like
@@ -602,17 +602,32 @@ def prefill_chunk(params, cfg, cache, tokens, start, *, gates=None,
     return logits, cache
 
 
+def _pool_layer(pools: dict, i) -> dict:
+    """Layer ``i``'s slice of every pool leaf (pages and, when the pool is
+    quantized, the per-page scales)."""
+    return {name: jax.lax.dynamic_index_in_dim(leaf, i, 0, keepdims=False)
+            for name, leaf in pools.items()}
+
+
+def _pool_store(pools: dict, kv: dict, i) -> dict:
+    """Write a layer's updated slices back into the stacked pools."""
+    return {name: jax.lax.dynamic_update_index_in_dim(pools[name], kv[name],
+                                                      i, 0)
+            for name in pools}
+
+
 def paged_prefill_chunk(params, cfg, pools: dict, page_table, tokens, start,
                         *, scratch_page: int, gates=None, impl: str = "xla",
                         layout=None) -> Tuple[jnp.ndarray, dict]:
     """Paged sibling of :func:`prefill_chunk`: one prompt chunk appended
     straight into granted pages.
 
-    pools: {"k","v"} [L, n_pages, page_tokens, K, Dh]; page_table: int32
-    [B, max_pages]; tokens [B, C] at absolute offset ``start``. The pool
-    arrays ride the layer scan's carry (donated, in-place) exactly like
-    :func:`paged_decode_step`; the same uniform all-attention restriction
-    applies. Returns (last-position logits [B, Vp], pools').
+    pools: {"k","v"} [L, n_pages, page_tokens, K, Dh] — quantized pools
+    add per-page scale leaves {"ks","vs"} [L, n_pages, K]; page_table:
+    int32 [B, max_pages]; tokens [B, C] at absolute offset ``start``. The
+    pool arrays ride the layer scan's carry (donated, in-place) exactly
+    like :func:`paged_decode_step`; the same uniform all-attention
+    restriction applies. Returns (last-position logits [B, Vp], pools').
     """
     layout = layout or default_layout(cfg)
     if not (len(layout) > 0
@@ -631,27 +646,25 @@ def paged_prefill_chunk(params, cfg, pools: dict, page_table, tokens, start,
     ffn_stack = params["stacks"][layout[0].ffn] if layout[0].ffn else None
 
     def body(carry, xs):
-        h, pk, pv = carry
+        h, pools = carry
         pm, pf, gm, gf, i = xs
         hn = layers.apply_norm(cfg, pm["norm"], h)
-        kv = {"k": jax.lax.dynamic_index_in_dim(pk, i, 0, keepdims=False),
-              "v": jax.lax.dynamic_index_in_dim(pv, i, 0, keepdims=False)}
+        kv = _pool_layer(pools, i)
         out, kv = attention.paged_chunk_attention(
             pm, cfg, hn, kv, page_table, start, scratch_page=scratch_page,
             impl=impl)
-        pk = jax.lax.dynamic_update_index_in_dim(pk, kv["k"], i, 0)
-        pv = jax.lax.dynamic_update_index_in_dim(pv, kv["v"], i, 0)
+        pools = _pool_store(pools, kv, i)
         h = h + _bgate(gm, h) * out
         if pf is not None:
             h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf, cfg, h,
                                                impl=impl)
-        return (h, pk, pv), None
+        return (h, pools), None
 
     xs = (mixer_stack, ffn_stack, gates["mixer"], gates["ffn"],
           jnp.arange(L, dtype=jnp.int32))
-    (h, pk, pv), _ = jax.lax.scan(body, (h, pools["k"], pools["v"]), xs)
+    (h, pools), _ = jax.lax.scan(body, (h, dict(pools)), xs)
     logits = _unembed(params, cfg, h[:, -1:, :])[:, 0]
-    return logits, {"k": pk, "v": pv}
+    return logits, pools
 
 
 # --------------------------------------------------------------------- decode
@@ -833,7 +846,8 @@ def paged_decode_step(params, cfg, pools: dict, page_table, pos, tokens, *,
 
     pools: {"k","v"} global page arrays [L, n_pages, page_tokens, K, Dh]
     (one pool slice per attention layer, stacked — a page id is valid at
-    every layer); page_table: int32 [B, max_pages]; pos: int32 [B] per-row
+    every layer; quantized pools add {"ks","vs"} [L, n_pages, K] scales);
+    page_table: int32 [B, max_pages]; pos: int32 [B] per-row
     write positions; tokens: [B, 1]. Returns (logits [B,1,Vp], pools').
 
     Only uniform all-attention layouts are supported (the llama/gemma/qwen
@@ -862,24 +876,22 @@ def paged_decode_step(params, cfg, pools: dict, page_table, pos, tokens, *,
     ffn_stack = params["stacks"][layout[0].ffn] if layout[0].ffn else None
 
     def body(carry, xs):
-        h, pk, pv = carry
+        h, pools = carry
         pm, pf, gm, gf, i = xs
         hn = layers.apply_norm(cfg, pm["norm"], h)
-        kv = {"k": jax.lax.dynamic_index_in_dim(pk, i, 0, keepdims=False),
-              "v": jax.lax.dynamic_index_in_dim(pv, i, 0, keepdims=False)}
+        kv = _pool_layer(pools, i)
         out, kv = attention.paged_decode_attention(pm, cfg, hn, kv,
                                                    page_table, pos,
                                                    impl=impl)
-        pk = jax.lax.dynamic_update_index_in_dim(pk, kv["k"], i, 0)
-        pv = jax.lax.dynamic_update_index_in_dim(pv, kv["v"], i, 0)
+        pools = _pool_store(pools, kv, i)
         h = h + _bgate(gm, h) * out
         if pf is not None:
             h = h + _bgate(gf, h) * _apply_ffn(layout[0].ffn, pf, cfg, h,
                                                impl=impl)
-        return (h, pk, pv), None
+        return (h, pools), None
 
     xs = (mixer_stack, ffn_stack, gates["mixer"], gates["ffn"],
           jnp.arange(L, dtype=jnp.int32))
-    (h, pk, pv), _ = jax.lax.scan(body, (h, pools["k"], pools["v"]), xs)
+    (h, pools), _ = jax.lax.scan(body, (h, dict(pools)), xs)
     logits = _unembed(params, cfg, h)
-    return logits, {"k": pk, "v": pv}
+    return logits, pools

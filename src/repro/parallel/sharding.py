@@ -220,7 +220,7 @@ def cache_pspecs(cache_tree, mesh: Mesh, *, batch: int,
 # ------------------------------------------------------------- serve state
 def serve_state_pspecs(state_tree, mesh: Mesh, *, n_slots: int):
     """Slot-group decode-state shardings for the sharded serve path
-    (DESIGN.md §6 "Sharded serving").
+    (DESIGN.md §7 "Sharded serving").
 
     The engine's slot axis is the data-parallel dimension: every leaf with
     ``n_slots`` in position 1 (attention KV ``[L, B, S, K, Dh]``, recurrent

@@ -26,12 +26,12 @@ orchestration loop over four seams:
     and completion frees the pages.
 
 One iteration of :meth:`RAPEngine._tick` (the async macro-tick,
-DESIGN.md §5 — device work is dispatched FIRST so host scheduling
+DESIGN.md §6 — device work is dispatched FIRST so host scheduling
 overlaps the in-flight scans):
 
   1. **launch** — every occupied group in the scheduler's decode plan
      dispatches one fused horizon of up to ``EngineConfig.decode_horizon``
-     tokens (DESIGN.md §4). JAX async dispatch returns token futures
+     tokens (DESIGN.md §5). JAX async dispatch returns token futures
      immediately; nothing syncs yet;
   2. **arrivals** — requests become visible at their trace timestamps
      (virtual clock; idle gaps are skipped, compute time is real) and
@@ -69,7 +69,8 @@ from repro.core.policy import Decision, PolicyState, PruningPolicy
 from repro.runtime.executor import (LocalExecutor, ModelExecutor, SlotGroup,
                                     chunk_widths)
 from repro.runtime.latency import summarize as _lat_summarize
-from repro.runtime.kv_pool import KVPool, default_page_bytes
+from repro.runtime.kv_pool import (KVPool, default_page_bytes,
+                                   resolve_kv_dtype)
 from repro.runtime.scheduler import Scheduler, make_scheduler
 
 __all__ = ["EngineConfig", "EngineRequest", "RequestResult", "EngineReport",
@@ -87,6 +88,21 @@ _MIGRATION_HINT = (
 
 def _next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _kv_byte_ratio(kv_dtype, mcfg) -> float:
+    """Quantized-vs-model KV byte ratio for slot-cache admission.
+
+    int8/fp8 slot caches store 1-byte elements plus one f32 scale per
+    (token, kv-head) (``attention.kv_quant``), while the analytical memory
+    model charges at the model's KV width — the ratio converts an
+    Eq. (3)–(4) charge into the bytes the cache actually occupies."""
+    _, _, quantized, _ = resolve_kv_dtype(kv_dtype)
+    if not quantized:
+        return 1.0
+    from repro.core.memory import dtype_bytes
+    dh = max(int(mcfg.dh), 1)
+    return (dh * 1.0 + 4.0) / (dh * dtype_bytes(mcfg.dtype))
 
 
 # ------------------------------------------------------------------- config
@@ -122,15 +138,17 @@ class EngineConfig:
     # smallest bucket that holds them instead of always paying
     # max_active-wide compute. () disables (always full width).
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
-    # Horizon decode (DESIGN.md §4): each engine macro-tick advances every
+    # Horizon decode (DESIGN.md §5): each engine macro-tick advances every
     # running request up to this many tokens through ONE fused on-device
     # loop per group, with completion checked at the horizon boundary and
     # over-generated tokens truncated (token streams are bitwise-identical
     # to decode_horizon=1). Clamped per tick to the largest remaining
     # token need in the group, so short tails don't pay full-horizon
-    # compute. 1 restores per-token ticks.
+    # compute — and, while requests are queued, to the group's SOONEST
+    # completion, so a full horizon can't stall admission behind its
+    # longest resident. 1 restores per-token ticks.
     decode_horizon: int = 8
-    # Chunked prefill (DESIGN.md §5): 0 (default) prefills each prompt in
+    # Chunked prefill (DESIGN.md §6): 0 (default) prefills each prompt in
     # one monolithic pass; >0 caps the prompt tokens prefilled per engine
     # macro-tick — long prompts are split into power-of-two chunks
     # (largest-first, e.g. 13 → 8+4+1 under a cap of 8) interleaved with
@@ -342,6 +360,17 @@ class RAPEngine:
                 raise ValueError(
                     "a paged executor requires strict admission: overflow "
                     "pages have no physical backing to write KV into")
+        # precision as a policy action: when the stack was built with a
+        # canonical KV precision (cfg.kv_dtype or a quantized executor),
+        # stamp it on the policy so every Decision carries it — admission
+        # then charges quantized bytes and the pool's dtype check has a
+        # request-side precision to validate. Launchers may override
+        # policy.kv_dtype afterwards for per-run choices.
+        kv_name = getattr(self.executor, "kv_dtype_name", None)
+        if kv_name is None:
+            kv_name, _, _, _ = resolve_kv_dtype(self.cfg.kv_dtype)
+        if kv_name is not None and getattr(policy, "kv_dtype", None) is None:
+            policy.kv_dtype = kv_name
         self._full_mask = masks_lib.full_mask(self.mcfg.n_layers)
         self.resident_param_bytes = self.mm.param_bytes(self._full_mask)
         self.pool: Optional[KVPool] = None
@@ -486,7 +515,10 @@ class RAPEngine:
         and are never read (the launch's captured occupancy pins this)."""
         now = self._now()
         plan = self.scheduler.schedule(now, running=list(self._running))
-        launches = self._launch_decode(plan.decode)
+        backlog = (len(self.scheduler) > 0
+                   or bool(self._pending
+                           and self._pending[0].arrival_t <= now))
+        launches = self._launch_decode(plan.decode, backlog=backlog)
         # ---- host phase (device scans in flight from here to finish) ----
         while self._pending and self._pending[0].arrival_t <= now:
             req = self._pending.pop(0)
@@ -586,6 +618,15 @@ class RAPEngine:
                 capacity_bytes=self.pool.acct.capacity_bytes,
                 n_running=len(self._running), now=self._now()))
         kv_bytes = self.mm.state_bytes(d.mask, b, total)
+        if not self._paged:
+            # slot-path admission charges QUANTIZED bytes: the analytical
+            # model speaks model-width bytes, but an int8/fp8 slot cache
+            # stores 1-byte elements (+ one f32 scale per token·head), so
+            # a quantized request admits ~width× the sequence under the
+            # same budget. (The paged path gets this for free: its pages
+            # are physically narrower, so page counts already shrank, and
+            # the pool's in_use_scale converts the analytical charge.)
+            kv_bytes *= _kv_byte_ratio(d.kv_dtype, self.mcfg)
         force = self.cfg.admission == "force"
         if self._paged:
             # page-granular admission: the paged path physically stores
@@ -634,13 +675,15 @@ class RAPEngine:
                 rate = kv_bytes / max(total, 1)
                 self.pool.alloc_tokens(req.rid, b, c1, max_tokens=total,
                                        in_use_bytes=rate * c1,
-                                       in_use_per_token=rate)
+                                       in_use_per_token=rate,
+                                       kv_dtype=d.kv_dtype)
             else:
                 prompt_bytes = self.mm.state_bytes(d.mask, b, S)
                 rate = max(kv_bytes - prompt_bytes, 0.0) / max(total - S, 1)
                 self.pool.alloc_tokens(req.rid, b, S, max_tokens=total,
                                        in_use_bytes=prompt_bytes,
-                                       in_use_per_token=rate)
+                                       in_use_per_token=rate,
+                                       kv_dtype=d.kv_dtype)
         else:
             self.pool.alloc(req.rid, kv_bytes, allow_overcommit=force)
         prompt = np.asarray(req.prompt, np.int32)
@@ -719,8 +762,8 @@ class RAPEngine:
                 self._complete(run)
 
     # --------------------------------------------------------------- decode
-    def _launch_decode(self, decode_plan: Optional[List[str]]
-                       ) -> List[Tuple[Any, set]]:
+    def _launch_decode(self, decode_plan: Optional[List[str]],
+                       backlog: bool = False) -> List[Tuple[Any, set]]:
         """Dispatch one fused horizon per occupied group named in the
         scheduler's decode plan, WITHOUT syncing. Returns the in-flight
         launches paired with the rids resident at launch time (the only
@@ -753,6 +796,21 @@ class RAPEngine:
                             default=1)
             horizon = min(self.cfg.decode_horizon,
                           _next_pow2(max(remaining, 1)))
+            if backlog:
+                # admission-stall clamp (bench triage): while requests
+                # wait, a full horizon holds every completion — and the
+                # slots/budget it would free — hostage until the group's
+                # LONGEST resident retires it, so short-max_new traces
+                # see queue delay grow with H. Clamp to the group's
+                # soonest completion instead (pow2-quantized, same
+                # bounded executable set): finished requests hand their
+                # capacity to the queue at the earliest boundary. With an
+                # empty queue the max-need horizon amortizes dispatch
+                # exactly as before. Horizon size stays unobservable in
+                # the token streams either way (truncated at fold-back).
+                soonest = min((run.max_new - len(run.out) for run in runs),
+                              default=1)
+                horizon = min(horizon, _next_pow2(max(soonest, 1)))
             launches.append((self.executor.decode_launch(group, horizon),
                              {run.req.rid for run in runs}))
         return launches

@@ -7,7 +7,7 @@ scattering, and the fused decode loop. PR 1 inlined all of this into
 ``RAPEngine``; extracting it means sharded serving is "swap the
 executor", not "rewrite the engine".
 
-Decode state is **device-resident** (DESIGN.md §4 "Horizon decode"):
+Decode state is **device-resident** (DESIGN.md §5 "Horizon decode"):
 groups keep tokens, positions, gates, and (paged) page-table rows as
 device arrays that are updated *incrementally* at placement, eviction,
 and page grants — never re-uploaded per step — and decode advances in
@@ -35,7 +35,7 @@ Executors:
     for the whole horizon are pre-granted in ONE bulk ``KVPool.extend``
     before the launch (the admission-time worst-case commitment
     guarantees it cannot fail), so no paging happens mid-loop.
-  * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §6
+  * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §7
     "Sharded serving"): parameters placed with the production partition
     rules of ``repro.parallel.sharding`` (and a sharded decode-step
     lowering for cost analysis, ``launch/rap_sweep.py``), groups are
@@ -63,7 +63,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import masks as masks_lib
-from repro.models import decoder
+from repro.models import attention, decoder
+from repro.runtime.kv_pool import resolve_kv_dtype
 
 __all__ = ["ModelExecutor", "SlotGroup", "LocalExecutor", "PagedExecutor",
            "PagedGroup", "ShardedExecutor", "ShardedSlotGroup",
@@ -560,7 +561,11 @@ class LocalExecutor(ModelExecutor):
         self.params = params
         self.mode = mode
         self.max_active = int(max_active)
-        self.kv_dtype = kv_dtype
+        # canonical precision names ("fp32"/"bf16"/"int8"/"fp8") resolve to
+        # their storage dtype so --kv-dtype works on the slot path too; raw
+        # dtype objects (the historical API) pass through unchanged
+        _, _store, _, _ = resolve_kv_dtype(kv_dtype)
+        self.kv_dtype = _store if _store is not None else kv_dtype
         self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
         self.compile_events = 0
         self.launch_s = 0.0
@@ -927,8 +932,13 @@ class PagedExecutor(ModelExecutor):
 
     Masked mode only: structural paged serving (compacted layer stacks
     over a shared pool) is a ROADMAP item. Uniform all-attention layouts
-    only, and int8 KV pools are not yet supported — ``LocalExecutor`` is
-    the reference backend for everything else.
+    only — ``LocalExecutor`` is the reference backend for everything else.
+
+    ``kv_dtype`` accepts the canonical precision names (``fp32``/``bf16``/
+    ``int8``/``fp8``) or a jnp dtype: quantized precisions store int8/fp8
+    pages plus per-(page, kv-head) scale pools, quantize on every write
+    seam (monolithic prefill, chunked prefill, horizon decode) and fuse
+    dequant into the Pallas kernel / mirror it in the XLA gather.
     """
 
     paged = True
@@ -950,16 +960,16 @@ class PagedExecutor(ModelExecutor):
                 f"{model.cfg.name!r} mixes "
                 f"{sorted({str(s.mixer) for s in layout})} — use "
                 "LocalExecutor (slot caches) for heterogeneous models")
-        if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
-            raise NotImplementedError(
-                "int8 KV pools need per-page scale pools (ROADMAP); use "
-                "LocalExecutor for kv_dtype=int8")
         self.model = model
         self.mcfg = model.cfg
         self.params = params
         self.mode = "masked"
         self.max_active = int(max_active)
-        self.kv_dtype = kv_dtype or model.cfg.jnp_dtype()
+        name, store, quantized, _ = resolve_kv_dtype(kv_dtype)
+        self.kv_dtype_name = name            # canonical, None = model dtype
+        self.kv_quantized = quantized
+        self.kv_dtype = (store if store is not None
+                         else model.cfg.jnp_dtype())   # page storage dtype
         self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
         self.compile_events = 0
         self.launch_s = 0.0
@@ -975,21 +985,49 @@ class PagedExecutor(ModelExecutor):
 
     # ------------------------------------------------------------- binding
     def page_phys_bytes(self, tokens_per_page: int) -> int:
-        """Exact bytes of one physical page across all layers (K and V)."""
+        """Exact bytes of one physical page across all layers (K and V).
+
+        Quantized pools charge the narrow storage width *plus* the page's
+        per-(layer, kv-head) f32 scale rows — admission and the pool
+        ledger see true bytes, so an int8 request admits ~2× the sequence
+        (not exactly 4×: the scales claw a sliver back) under one budget."""
         cfg = self.mcfg
         itemsize = jnp.dtype(self.kv_dtype).itemsize
-        return (2 * cfg.n_layers * int(tokens_per_page) * cfg.n_kv_heads
-                * cfg.dh * itemsize)
+        n = (2 * cfg.n_layers * int(tokens_per_page) * cfg.n_kv_heads
+             * cfg.dh * itemsize)
+        if self.kv_quantized:
+            n += 2 * cfg.n_layers * cfg.n_kv_heads * 4    # K + V scale rows
+        return n
 
     def bind_pool(self, pool, max_len: int) -> None:
-        """Attach this run's KVPool: materialize its page arrays and size
-        the page-table width for ``max_len``-token requests."""
+        """Attach this run's KVPool: materialize its page arrays (and, for
+        quantized precisions, the scale pools) and size the page-table
+        width for ``max_len``-token requests."""
         pool.allocate_physical(n_layers=self.mcfg.n_layers,
                                n_kv_heads=self.mcfg.n_kv_heads,
-                               head_dim=self.mcfg.dh, dtype=self.kv_dtype)
+                               head_dim=self.mcfg.dh,
+                               dtype=self.mcfg.jnp_dtype(),
+                               kv_dtype=(self.kv_dtype_name
+                                         or self.kv_dtype))
         self.pool = pool
         self.max_row_pages = -(-int(max_len) // pool.tokens_per_page)
         self._group = None
+
+    def _pool_leaves(self) -> Dict[str, Any]:
+        """The pool's device arrays as one pytree (pages + scales when
+        quantized) — jitted calls donate and return the whole dict."""
+        pools = {"k": self.pool.k_pages, "v": self.pool.v_pages}
+        if self.kv_quantized:
+            pools["ks"] = self.pool.k_scales
+            pools["vs"] = self.pool.v_scales
+        return pools
+
+    def _store_leaves(self, pools: Dict[str, Any]) -> None:
+        self.pool.k_pages = pools["k"]
+        self.pool.v_pages = pools["v"]
+        if self.kv_quantized:
+            self.pool.k_scales = pools["ks"]
+            self.pool.v_scales = pools["vs"]
 
     # ------------------------------------------------------------ capacity
     def set_max_active(self, n_slots: int) -> None:
@@ -1024,17 +1062,34 @@ class PagedExecutor(ModelExecutor):
             cfg = self.mcfg
             pt = self.pool.tokens_per_page
             L = cfg.n_layers
+            quantized = self.kv_quantized
+            # quantized pools prefill at model width inside the jit and
+            # page-quantize during the scatter: every granted page is
+            # fresh (offset 0), so scales are set, never floored
+            cache_dtype = None if quantized else self.kv_dtype
 
-            @functools.partial(jax.jit, donate_argnums=(4, 5))
-            def fn(p, tokens, gm, gf, kp, vp, rows):
+            @functools.partial(jax.jit, donate_argnums=(4,))
+            def fn(p, tokens, gm, gf, pools, rows):
                 logits, cache = decoder.prefill(
                     p, cfg, tokens, npg * pt,
-                    gates={"mixer": gm, "ffn": gf}, kv_dtype=self.kv_dtype)
+                    gates={"mixer": gm, "ffn": gf}, kv_dtype=cache_dtype)
+                kp, vp = pools["k"], pools["v"]
                 k = cache["attn"]["k"].reshape(L, b, npg, pt, *kp.shape[3:])
                 v = cache["attn"]["v"].reshape(L, b, npg, pt, *vp.shape[3:])
-                kp = kp.at[:, rows].set(k.astype(kp.dtype))
-                vp = vp.at[:, rows].set(v.astype(vp.dtype))
-                return logits, kp, vp
+                pools = dict(pools)
+                if quantized:
+                    qk, sk = attention.page_quant(
+                        k.astype(jnp.float32), kp.dtype)
+                    qv, sv = attention.page_quant(
+                        v.astype(jnp.float32), vp.dtype)
+                    pools["k"] = kp.at[:, rows].set(qk)
+                    pools["v"] = vp.at[:, rows].set(qv)
+                    pools["ks"] = pools["ks"].at[:, rows].set(sk)
+                    pools["vs"] = pools["vs"].at[:, rows].set(sv)
+                else:
+                    pools["k"] = kp.at[:, rows].set(k.astype(kp.dtype))
+                    pools["v"] = vp.at[:, rows].set(v.astype(vp.dtype))
+                return logits, pools
 
             self._prefill_fns[key] = fn
             self.compile_events += 1
@@ -1053,11 +1108,10 @@ class PagedExecutor(ModelExecutor):
         # resident gate columns
         g = masks_lib.mask_to_gates(mask)
         t0 = time.perf_counter()
-        logits, kp, vp = fn(self.params, jnp.asarray(prompt, jnp.int32),
-                            g["mixer"], g["ffn"],
-                            self.pool.k_pages, self.pool.v_pages,
-                            jnp.asarray(rows_np))
-        self.pool.k_pages, self.pool.v_pages = kp, vp
+        logits, pools = fn(self.params, jnp.asarray(prompt, jnp.int32),
+                           g["mixer"], g["ffn"], self._pool_leaves(),
+                           jnp.asarray(rows_np))
+        self._store_leaves(pools)
         first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         self.launch_s += time.perf_counter() - t0
         group.place(rid, slots, rows_np, S, first,
@@ -1066,8 +1120,9 @@ class PagedExecutor(ModelExecutor):
 
     # ----------------------------------------------------- chunked prefill
     def supports_chunked_prefill(self, group: PagedGroup) -> bool:
-        # the constructor already pins masked + uniform all-attention +
-        # non-int8, which is exactly what the paged chunk path serves
+        # the constructor already pins masked + uniform all-attention,
+        # which is exactly what the paged chunk path serves (quantized
+        # pools requantize the chunk's touched pages in the same call)
         return True
 
     def _chunk_fn(self, b: int, C: int):
@@ -1080,13 +1135,13 @@ class PagedExecutor(ModelExecutor):
         if key not in self._prefill_fns:
             cfg = self.mcfg
 
-            @functools.partial(jax.jit, donate_argnums=(1, 2))
-            def fn(p, kp, vp, table, tokens, start, gm, gf):
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def fn(p, pools, table, tokens, start, gm, gf):
                 logits, pools = decoder.paged_prefill_chunk(
-                    p, cfg, {"k": kp, "v": vp}, table, tokens, start,
+                    p, cfg, pools, table, tokens, start,
                     scratch_page=scratch,
                     gates={"mixer": gm, "ffn": gf})
-                return logits, pools["k"], pools["v"]
+                return logits, pools
 
             self._prefill_fns[key] = fn
             self.compile_events += 1
@@ -1120,12 +1175,11 @@ class PagedExecutor(ModelExecutor):
         table[:, :len(rows[0])] = np.asarray(rows, np.int32)
         fn = self._chunk_fn(b, c)
         t0 = time.perf_counter()
-        logits, kp, vp = fn(
-            self.params, self.pool.k_pages, self.pool.v_pages,
-            jnp.asarray(table),
+        logits, pools = fn(
+            self.params, self._pool_leaves(), jnp.asarray(table),
             jnp.asarray(task.prompt[:, task.pos:task.pos + c], jnp.int32),
             np.int32(task.pos), task.gates["mixer"], task.gates["ffn"])
-        self.pool.k_pages, self.pool.v_pages = kp, vp
+        self._store_leaves(pools)
         task.pos += c
         task.step += 1
         if not task.done:
@@ -1158,25 +1212,25 @@ class PagedExecutor(ModelExecutor):
             cfg, impl = self.mcfg, self._impl
 
             if not bucketed:
-                @functools.partial(jax.jit, donate_argnums=(1, 2, 4, 5))
-                def fn(p, kp, vp, table, pos, tok, gates):
+                @functools.partial(jax.jit, donate_argnums=(1, 3, 4))
+                def fn(p, pools, table, pos, tok, gates):
                     toks, pools, pos = decoder.paged_decode_horizon(
-                        p, cfg, {"k": kp, "v": vp}, table, pos,
+                        p, cfg, pools, table, pos,
                         tok[:, None], h,
                         gates={"mixer": gates[0], "ffn": gates[1]},
                         impl=impl)
-                    return toks, pools["k"], pools["v"], pos, toks[:, -1]
+                    return toks, pools, pos, toks[:, -1]
             else:
-                @functools.partial(jax.jit, donate_argnums=(1, 2, 4, 5))
-                def fn(p, kp, vp, table, pos, tok, gates, iidx):
+                @functools.partial(jax.jit, donate_argnums=(1, 3, 4))
+                def fn(p, pools, table, pos, tok, gates, iidx):
                     g = gates[:, :, iidx]
                     toks, pools, pos_out = decoder.paged_decode_horizon(
-                        p, cfg, {"k": kp, "v": vp}, table[iidx], pos[iidx],
+                        p, cfg, pools, table[iidx], pos[iidx],
                         tok[iidx][:, None], h,
                         gates={"mixer": g[0], "ffn": g[1]}, impl=impl)
                     pos = pos.at[iidx].set(pos_out)
                     tok = tok.at[iidx].set(toks[:, -1])
-                    return toks, pools["k"], pools["v"], pos, tok
+                    return toks, pools, pos, tok
 
             self._hfns[key] = fn
         return self._hfns[key]
@@ -1232,13 +1286,12 @@ class PagedExecutor(ModelExecutor):
             self.compile_events += 1
         full = width == group.n_slots
         fn = self._horizon_fn(horizon, bucketed=not full)
-        args = (self.params, self.pool.k_pages, self.pool.v_pages,
-                group.table_dev, group.pos_dev, group.tokens_dev,
-                group.gates_dev)
+        args = (self.params, self._pool_leaves(), group.table_dev,
+                group.pos_dev, group.tokens_dev, group.gates_dev)
         if not full:
             args += (group.iidx(idx),)
-        toks, kp, vp, pos, tok = fn(*args)
-        self.pool.k_pages, self.pool.v_pages = kp, vp
+        toks, pools, pos, tok = fn(*args)
+        self._store_leaves(pools)
         group.pos_dev = pos
         group.tokens_dev = tok
         return toks, idx, new
@@ -1312,7 +1365,7 @@ class PagedExecutor(ModelExecutor):
 # ----------------------------------------------------------------- sharded
 class ShardedSlotGroup(SlotGroup):
     """A :class:`SlotGroup` whose decode state is **mesh-resident**
-    (DESIGN.md §6 "Sharded serving").
+    (DESIGN.md §7 "Sharded serving").
 
     The slot axis is the mesh's data-parallel dimension: the KV cache is
     sharded over slots ("data") and KV heads ("model"), positions and
@@ -1395,7 +1448,7 @@ class ShardedSlotGroup(SlotGroup):
 
 
 class ShardedExecutor(LocalExecutor):
-    """Mesh-resident slot-group execution (DESIGN.md §6 "Sharded serving").
+    """Mesh-resident slot-group execution (DESIGN.md §7 "Sharded serving").
 
     Owns both mesh roles of the serving stack:
 

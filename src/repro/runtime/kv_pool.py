@@ -40,7 +40,53 @@ from typing import Dict, List, Optional
 from repro.core.memory import MemoryModel, PoolAccounting, PoolExhausted
 
 __all__ = ["KVPool", "PageAllocation", "TokenAllocation", "PoolExhausted",
-           "default_page_bytes"]
+           "default_page_bytes", "resolve_kv_dtype", "KV_DTYPE_NAMES"]
+
+# user-facing kv-dtype names accepted by --kv-dtype and Decision.kv_dtype
+KV_DTYPE_NAMES = ("fp32", "bf16", "int8", "fp8")
+
+
+def resolve_kv_dtype(kv_dtype):
+    """Normalize a user-facing KV dtype spec.
+
+    Returns ``(name, storage_dtype, quantized, qmax)`` where ``name`` is the
+    canonical string (or ``None`` for "use the model dtype"), ``storage_dtype``
+    the jnp dtype pages are stored in (``None`` when deferring to the model
+    dtype), ``quantized`` whether per-page scales are required, and ``qmax``
+    the symmetric quantization ceiling (127 for int8, 448 for fp8-e4m3).
+    fp8 is platform-gated: requested on a jax build without
+    ``float8_e4m3fn`` it raises rather than silently mis-storing pages."""
+    import jax.numpy as jnp
+    if kv_dtype is None:
+        return None, None, False, None
+    if isinstance(kv_dtype, str):
+        name = kv_dtype.lower()
+    else:
+        name = jnp.dtype(kv_dtype).name      # jnp/np dtype objects
+    aliases = {"float32": "fp32", "bfloat16": "bf16",
+               "float8_e4m3fn": "fp8", "auto": None}
+    name = aliases.get(name, name)
+    if name is None:
+        return None, None, False, None
+    if name == "fp32":
+        return "fp32", jnp.float32, False, None
+    if name == "bf16":
+        return "bf16", jnp.bfloat16, False, None
+    if name == "int8":
+        return "int8", jnp.int8, True, 127.0
+    if name == "fp8":
+        fp8 = getattr(jnp, "float8_e4m3fn", None)
+        if fp8 is None:
+            raise ValueError(
+                "kv_dtype 'fp8' requires jax.numpy.float8_e4m3fn, which "
+                "this platform's jax build does not provide; use 'int8'")
+        return "fp8", fp8, True, 448.0
+    if not isinstance(kv_dtype, str):
+        # any other explicit dtype object passes through unquantized
+        # (fp16 etc.) — only the canonical names get scale pools
+        return name, jnp.dtype(kv_dtype), False, None
+    raise ValueError(
+        f"unknown kv_dtype {kv_dtype!r}; expected one of {KV_DTYPE_NAMES}")
 
 
 def default_page_bytes(mm: MemoryModel, tokens_per_page: int = 16,
@@ -123,6 +169,11 @@ class KVPool:
         # physical page arrays (allocate_physical): [L, n_pages+1, pt, K, D]
         self.k_pages = None
         self.v_pages = None
+        # quantized pools: canonical dtype name + per-page scales
+        # ([L, n_pages+1, K] f32; row n_pages scales the scratch page)
+        self.kv_dtype: Optional[str] = None
+        self.k_scales = None
+        self.v_scales = None
 
     # ---------------------------------------------------------- physical
     @property
@@ -132,17 +183,44 @@ class KVPool:
         return self.n_pages
 
     def allocate_physical(self, *, n_layers: int, n_kv_heads: int,
-                          head_dim: int, dtype) -> None:
+                          head_dim: int, dtype, kv_dtype=None) -> None:
         """Materialize the page pools: one K and one V array per attention
         layer (stacked on a leading layer axis), sized once at capacity plus
-        one scratch page. Requires ``tokens_per_page``."""
+        one scratch page. Requires ``tokens_per_page``.
+
+        ``kv_dtype`` selects the storage precision: ``None`` keeps ``dtype``
+        as-is; ``"fp32"``/``"bf16"`` override the width; ``"int8"``/``"fp8"``
+        store quantized pages plus per-(page, kv-head) fp32 scale arrays
+        ``[n_layers, n_pages+1, K]`` (one scale row per layer covers the
+        scratch page too — padded decode rows requantize it harmlessly).
+        The accounting ledger's ``in_use_scale`` is set so analytical
+        (model-width) in-use charges land in *physical* bytes — mixed
+        precision pools report true MB, not model-width fiction."""
         if self.tokens_per_page is None:
             raise ValueError("allocate_physical requires tokens_per_page")
         import jax.numpy as jnp
+        name, store_dtype, quantized, _ = resolve_kv_dtype(kv_dtype)
+        self.kv_dtype = name
+        phys = store_dtype if store_dtype is not None else dtype
         shape = (n_layers, self.n_pages + 1, self.tokens_per_page,
                  n_kv_heads, head_dim)
-        self.k_pages = jnp.zeros(shape, dtype)
-        self.v_pages = jnp.zeros(shape, dtype)
+        self.k_pages = jnp.zeros(shape, phys)
+        self.v_pages = jnp.zeros(shape, phys)
+        if quantized:
+            sshape = (n_layers, self.n_pages + 1, n_kv_heads)
+            self.k_scales = jnp.zeros(sshape, jnp.float32)
+            self.v_scales = jnp.zeros(sshape, jnp.float32)
+        else:
+            self.k_scales = None
+            self.v_scales = None
+        # per-pool byte width (satellite of the quantized-pages change):
+        # analytical ledger charges arrive in model-dtype bytes; physical
+        # truth per token is page_bytes / tokens_per_page (scales included)
+        model_tok = (2 * n_kv_heads * head_dim
+                     * jnp.dtype(dtype).itemsize * n_layers)
+        if model_tok > 0:
+            self.acct.in_use_scale = (
+                self.page_bytes / self.tokens_per_page) / model_tok
 
     # ------------------------------------------------------------- queries
     def pages_needed(self, nbytes: float) -> int:
@@ -238,9 +316,42 @@ class KVPool:
         self._live[rid] = alloc
         return alloc
 
+    def effective_kv_dtype(self) -> Optional[str]:
+        """Canonical storage dtype name of the physical pools, or ``None``
+        when unquantized pages simply mirror the model dtype."""
+        if self.kv_dtype is not None:
+            return self.kv_dtype
+        if self.k_pages is not None:
+            raw = str(self.k_pages.dtype)
+            try:
+                name, _, _, _ = resolve_kv_dtype(raw)
+            except ValueError:
+                return raw
+            return name
+        return None
+
+    def check_kv_dtype(self, rid: str, kv_dtype) -> None:
+        """Reject a request whose ``Decision.kv_dtype`` disagrees with the
+        precision this pool's pages were allocated in. Writing model-width
+        values into int8 pages (or vice versa) would silently mis-scale
+        every page the request touches — fail loudly at admission instead."""
+        if kv_dtype is None:
+            return
+        name, _, _, _ = resolve_kv_dtype(kv_dtype)
+        if name is None:
+            return
+        pool_name = self.effective_kv_dtype()
+        if name != (pool_name if pool_name is not None else name):
+            raise ValueError(
+                f"request {rid!r} asks for kv_dtype {name!r} but this pool "
+                f"was allocated with kv_dtype {pool_name!r}; one pool holds "
+                f"one precision — route the request to a matching pool or "
+                f"re-allocate the pool")
+
     def alloc_tokens(self, rid: str, batch: int, n_tokens: int, *,
                      max_tokens: int, in_use_bytes: float = 0.0,
-                     in_use_per_token: float = 0.0) -> TokenAllocation:
+                     in_use_per_token: float = 0.0,
+                     kv_dtype=None) -> TokenAllocation:
         """Token-granular physically paged allocation (strict only).
 
         Grants pages backing ``n_tokens`` per row now and *commits* up to
@@ -248,9 +359,12 @@ class KVPool:
         commitment is guaranteed to find a free page. ``in_use_bytes`` is
         the analytical ledger charge for the granted tokens;
         ``in_use_per_token`` the charge per appended token (cross-check
-        against the physical reservation)."""
+        against the physical reservation). ``kv_dtype`` is the request's
+        precision ask (``Decision.kv_dtype``): it must match the precision
+        the physical pools were allocated in (:meth:`check_kv_dtype`)."""
         if rid in self._live or rid in self._tok:
             raise ValueError(f"request {rid!r} already holds an allocation")
+        self.check_kv_dtype(rid, kv_dtype)
         batch = max(int(batch), 1)
         n_tokens = max(int(n_tokens), 1)
         if max_tokens < n_tokens:
@@ -385,4 +499,5 @@ class KVPool:
             "occupancy": self.acct.occupancy(),
             "fragmentation": self.acct.fragmentation(),
             "overcommit_events": float(self.acct.overcommit_events),
+            "in_use_scale": float(self.acct.in_use_scale),
         }

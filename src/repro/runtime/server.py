@@ -8,7 +8,7 @@ Per request the flow is the paper's online loop:
   ③ execute pruned inference
   ④ report memory / quality stats
 
-XLA adaptation of "execute pruned" (see DESIGN.md §7) — two modes:
+XLA adaptation of "execute pruned" (see DESIGN.md §8) — two modes:
   * ``masked``     — the mask becomes runtime 0/1 gate inputs to one shared
     executable: zero recompiles, instant policy switches, but no real
     memory savings (GSI scoring and latency-critical paths use this);
@@ -18,7 +18,7 @@ XLA adaptation of "execute pruned" (see DESIGN.md §7) — two modes:
     layout signature). Uniform architectures collapse many masks into one
     bucket, so compiles amortize exactly like vLLM's shape buckets.
 
-Since the continuous-batching refactor (DESIGN.md §8) this class is a thin
+Since the continuous-batching refactor (DESIGN.md §9) this class is a thin
 shim: each ``serve()`` call runs a single-request trace through
 :class:`repro.runtime.engine.RAPEngine` in ``force``-admission mode, which
 reproduces the historical contract exactly — one decision per request

@@ -181,6 +181,47 @@ def test_pool_accounting_ledger():
     assert acct.peak_reserved_bytes == 110.0
 
 
+def test_pool_accounting_in_use_scale_reports_physical_bytes():
+    """Mixed-precision accounting: with ``in_use_scale=0.25`` (int8 pages
+    under an fp32 model) analytical charges land at quarter width through
+    reserve/grow/release, so ``pool_peak_mb``/``pool_frag`` report TRUE
+    bytes and fragmentation cannot go negative."""
+    acct = memory.PoolAccounting(capacity_bytes=1000.0, in_use_scale=0.25)
+    acct.reserve(400.0, 400.0)            # analytical 400B → physical 100B
+    assert acct.in_use_bytes == pytest.approx(100.0)
+    assert acct.peak_in_use_bytes == pytest.approx(100.0)
+    acct.grow(0.0, 200.0)                 # append charges scale too
+    assert acct.in_use_bytes == pytest.approx(150.0)
+    assert acct.fragmentation() == pytest.approx(1.0 - 150.0 / 400.0)
+    assert acct.fragmentation() >= 0.0    # unscaled would report -0.5
+    acct.release(400.0, 600.0)
+    assert acct.in_use_bytes == pytest.approx(0.0)
+    assert acct.reserved_bytes == pytest.approx(0.0)
+    # default pools are unscaled: analytical bytes pass through unchanged
+    plain = memory.PoolAccounting(capacity_bytes=1000.0)
+    plain.reserve(400.0, 300.0)
+    assert plain.in_use_bytes == pytest.approx(300.0)
+
+
+def test_pool_rejects_mismatched_kv_dtype():
+    """A request whose Decision.kv_dtype disagrees with the pool's
+    allocated precision fails loudly at admission, naming both dtypes —
+    never silently writing mis-scaled pages."""
+    import jax.numpy as jnp
+    pool = KVPool(8 * 64, page_bytes=64, tokens_per_page=4)
+    pool.allocate_physical(n_layers=1, n_kv_heads=2, head_dim=4,
+                           dtype=jnp.float32, kv_dtype="int8")
+    with pytest.raises(ValueError, match=r"'fp32'.*'int8'"):
+        pool.alloc_tokens("r0", 1, 4, max_tokens=8, kv_dtype="fp32")
+    assert "r0" not in pool._tok          # rejected before taking pages
+    # a matching ask and a None ask (pool-native precision) both pass
+    pool.alloc_tokens("r1", 1, 4, max_tokens=8, kv_dtype="int8")
+    pool.alloc_tokens("r2", 1, 4, max_tokens=8)
+    pool.free("r1")
+    pool.free("r2")
+    assert pool.bytes_reserved == 0
+
+
 # ------------------------------------------------------------------- engine
 # `served` (tiny model + memory model + random-Q controller) comes from
 # tests/conftest.py — shared with the horizon and executor suites.
@@ -612,9 +653,13 @@ def test_paged_executor_validation(served):
     model, params, batch, mm, c = served
     with pytest.raises(NotImplementedError, match="masked"):
         PagedExecutor(model, params, mode="structural")
-    with pytest.raises(NotImplementedError, match="int8"):
-        import jax.numpy as jnp
-        PagedExecutor(model, params, kv_dtype=jnp.int8)
+    # int8 paged pools are now a supported precision: the executor
+    # resolves the canonical name and allocates quantized pages + scales
+    import jax.numpy as jnp
+    ex8 = PagedExecutor(model, params, kv_dtype=jnp.int8)
+    assert ex8.kv_dtype_name == "int8" and ex8.kv_quantized
+    with pytest.raises(ValueError, match="kv_dtype"):
+        PagedExecutor(model, params, kv_dtype="int4")
     ex = PagedExecutor(model, params)
     with pytest.raises(ValueError, match="masked"):
         RAPEngine(model, params, RLPolicy(c),

@@ -1,4 +1,4 @@
-"""Cross-executor conformance suite (DESIGN.md §6).
+"""Cross-executor conformance suite (DESIGN.md §7).
 
 Every ``ModelExecutor`` backend must be observationally identical on the
 engine's serve path: the SAME trace yields bitwise-identical per-request
@@ -29,11 +29,12 @@ from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
                            RAPEngine, ShardedExecutor)
 
 EXECUTORS = {
-    "local": lambda model, params, slots: None,        # engine default
-    "paged": lambda model, params, slots: PagedExecutor(
-        model, params, max_active=slots),
-    "sharded": lambda model, params, slots: ShardedExecutor(
-        model, make_serve_mesh(slots), params=params, max_active=slots),
+    "local": lambda model, params, slots, kv_dtype=None: None,  # engine default
+    "paged": lambda model, params, slots, kv_dtype=None: PagedExecutor(
+        model, params, max_active=slots, kv_dtype=kv_dtype),
+    "sharded": lambda model, params, slots, kv_dtype=None: ShardedExecutor(
+        model, make_serve_mesh(slots), params=params, max_active=slots,
+        kv_dtype=kv_dtype),
 }
 
 # sharded runs in the multi-device CI job (8 fake CPU devices); tier-1
@@ -57,13 +58,13 @@ def _reqs(prompts, max_new=None, rate=1000.0, seed=0):
 
 
 def _engine(model, params, c, kind, *, budget, max_new, slots=4, max_len=32,
-            horizon=8, chunk=0):
+            horizon=8, chunk=0, kv_dtype=None):
     return RAPEngine(model, params, RLPolicy(c), EngineConfig(
         mode="masked", max_new_tokens=max_new, max_active=slots,
         max_len=max_len, budget_bytes=budget, tokens_per_page=8,
-        decode_horizon=horizon,
-        max_prefill_tokens=chunk), executor=EXECUTORS[kind](model, params,
-                                                            slots))
+        kv_dtype=kv_dtype, decode_horizon=horizon,
+        max_prefill_tokens=chunk),
+        executor=EXECUTORS[kind](model, params, slots, kv_dtype))
 
 
 # ------------------------------------------------------- canonical trace
@@ -239,6 +240,133 @@ def test_paged_fragmentation_below_slot(served, reference_run):
     rep = eng.run(_reqs(prompts))
     assert 0.0 < rep.measured_frag < reference_run.measured_frag
     assert rep.pool["committed_pages"] == 0
+
+
+# ------------------------------------------------------ quantized KV rows
+# int8 KV is not bitwise vs the fp32 reference (quantization perturbs the
+# attention values), so quantized rows get their own contracts: a tolerance
+# gate against fp32, an EXACT gate on the greedy-stability trace, and full
+# bitwise invariance of horizon/chunking WITHIN the quantized path.
+QUANT_PARAMS = ["local", "paged"]
+
+
+@pytest.mark.parametrize("kind", QUANT_PARAMS)
+def test_quantized_trace_matches_fp32_within_tolerance(served, kind):
+    """int8 vs model-width KV on the canonical trace under the tolerance
+    gate: every request's FIRST token is exact (prefill logits are computed
+    at model width before quantize-on-write), and at least 6 of 8 full
+    streams are token-exact. The quantized pool must also buy ≥ 1.8× the
+    pages of the fp32 pool at the same byte budget — the admission headroom
+    the precision action exists for."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    eng_f = _engine(model, params, c, kind, budget=budget, max_new=4)
+    ref = {r.rid: r for r in eng_f.run(_reqs(prompts, max_new=4)).results
+           if r.status == "done"}
+    eng_q = _engine(model, params, c, kind, budget=budget, max_new=4,
+                    kv_dtype="int8")
+    rep = eng_q.run(_reqs(prompts, max_new=4))
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert len(done) == len(ref) == 8 and rep.rejected == 0
+    # int8 reservations are ~4× smaller, so the policy's effective-budget
+    # cell can drift for a request or two — compare decodes only where the
+    # decision agreed (a mask flip changes the compute, not the precision)
+    agree = [rid for rid in ref
+             if np.array_equal(ref[rid].mask, done[rid].mask)]
+    assert len(agree) >= 6, f"{kind}: masks diverged on {8 - len(agree)}/8"
+    exact = 0
+    for rid in agree:
+        assert done[rid].tokens[0, 0] == ref[rid].tokens[0, 0], \
+            f"{kind}: int8 perturbed the model-width prefill logits on {rid}"
+        exact += np.array_equal(ref[rid].tokens, done[rid].tokens)
+    assert exact >= len(agree) - 1, \
+        f"{kind}: only {exact}/{len(agree)} int8 streams token-exact"
+    # pool ledger: drained, physical-width accounting engaged
+    assert rep.pool["reserved_bytes"] == 0 and rep.pool["in_use_bytes"] == 0
+    if kind == "paged":
+        assert eng_q.pool.kv_dtype == "int8"
+        assert rep.pool["in_use_scale"] < 1.0
+        assert eng_q.pool.n_pages >= 1.8 * eng_f.pool.n_pages
+
+
+@pytest.mark.parametrize("kind", QUANT_PARAMS)
+def test_quantized_greedy_stability_exact(served, kind):
+    """The dedicated greedy-stability trace: ``max_new=1`` serves every
+    request as prefill-only next-token prediction, whose logits never read
+    quantized KV back — int8 serving MUST match fp32 exactly here, pinning
+    that quantize-on-write cannot corrupt the prefill compute path."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    ref = _engine(model, params, c, kind, budget=budget,
+                  max_new=1).run(_reqs(prompts, max_new=1))
+    rep = _engine(model, params, c, kind, budget=budget, max_new=1,
+                  kv_dtype="int8").run(_reqs(prompts, max_new=1))
+    done_ref = {r.rid: r for r in ref.results if r.status == "done"}
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert len(done) == len(done_ref) == 8
+    agree = [rid for rid in done_ref
+             if np.array_equal(done_ref[rid].mask, done[rid].mask)]
+    assert len(agree) >= 6, f"{kind}: masks diverged on {8 - len(agree)}/8"
+    for rid in agree:
+        np.testing.assert_array_equal(
+            done_ref[rid].tokens, done[rid].tokens,
+            err_msg=f"{kind}: int8 diverged on the greedy-stability trace "
+                    f"({rid})")
+
+
+@pytest.mark.parametrize("kind", QUANT_PARAMS)
+def test_quantized_horizon_unobservable(served, kind):
+    """WITHIN the int8 path, horizon decode stays bitwise unobservable:
+    H ∈ {1, 4, 8} emit identical streams. Decode reads quantized KV
+    identically at every horizon, so this pins the quantized decode write
+    seam (per-token masked page requantization, horizon pre-grant extends,
+    scratch-page routing) against the H=1 quantized reference."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    ref = None
+    for horizon in (1, 4, 8):
+        eng = _engine(model, params, c, kind, budget=budget, max_new=4,
+                      horizon=horizon, kv_dtype="int8")
+        rep = eng.run(_reqs(prompts, max_new=4))
+        done = {r.rid: r.tokens for r in rep.results if r.status == "done"}
+        assert len(done) == 8 and rep.rejected == 0
+        if ref is None:
+            ref = done
+            continue
+        for rid, t in ref.items():
+            np.testing.assert_array_equal(
+                t, done[rid],
+                err_msg=f"{kind}: int8 H={horizon} diverged from H=1 "
+                        f"on {rid}")
+
+
+@pytest.mark.parametrize("kind", QUANT_PARAMS)
+def test_quantized_chunked_prefill_tolerance(served, kind):
+    """Chunked prefill under int8 is NOT bitwise vs monolithic — a later
+    chunk attends to earlier chunks' *dequantized* KV, where monolithic
+    prefill attends at model width — so it gets the tolerance gate:
+    all 8 requests served, masks identical, ≥ 6/8 streams token-exact
+    against the monolithic quantized run."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    ref = _engine(model, params, c, kind, budget=budget, max_new=4,
+                  kv_dtype="int8").run(_reqs(prompts, max_new=4))
+    done_ref = {r.rid: r for r in ref.results if r.status == "done"}
+    for chunk in (8, 64):
+        eng = _engine(model, params, c, kind, budget=budget, max_new=4,
+                      chunk=chunk, kv_dtype="int8")
+        rep = eng.run(_reqs(prompts, max_new=4))
+        done = {r.rid: r for r in rep.results if r.status == "done"}
+        assert len(done) == len(done_ref) == 8 and rep.rejected == 0
+        agree = [rid for rid in done_ref
+                 if np.array_equal(done_ref[rid].mask, done[rid].mask)]
+        assert len(agree) >= 6, \
+            f"{kind}: masks diverged on {8 - len(agree)}/8 (chunk={chunk})"
+        exact = sum(np.array_equal(done_ref[rid].tokens, done[rid].tokens)
+                    for rid in agree)
+        assert exact >= len(agree) - 1, \
+            (f"{kind}: only {exact}/{len(agree)} int8 chunked "
+             f"(chunk={chunk}) streams token-exact")
 
 
 # --------------------------------------------------- sharded: multi-device

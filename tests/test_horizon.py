@@ -1,4 +1,4 @@
-"""Horizon decode (DESIGN.md §4): device-resident state + fused H-token
+"""Horizon decode (DESIGN.md §5): device-resident state + fused H-token
 decode loops.
 
 Pins the two properties the horizon refactor exists for:

@@ -101,6 +101,38 @@ def test_paged_decode_matches_dense_bitwise(B, H, K, D, pt, S, cap):
         np.testing.assert_array_equal(np.asarray(out[b]), np.asarray(want[0]))
 
 
+@pytest.mark.parametrize("B,H,K,D,pt,S,cap", PAGED_CASES)
+def test_paged_decode_quantized_matches_dequant_bitwise(B, H, K, D, pt, S,
+                                                        cap):
+    """Fused-dequant kernel == fp32 kernel on externally dequantized pages,
+    BITWISE. The quantized kernel widens each int8 page to f32 and applies
+    the per-(page, kv-head) scale BEFORE the shared flash step, so it must
+    reproduce the exact op sequence of the fp32 kernel fed
+    ``page_dequant``-ed pages — which in turn is bitwise vs the dense
+    decode kernel (pinned above). This is the pin that lets the XLA gather
+    fallback and the Pallas path share one numeric contract."""
+    from repro.models.attention import page_dequant, page_quant
+    rng = np.random.default_rng(B * 777 + S)
+    P = -(-S // pt)
+    n_pages = B * P + 3
+    lengths = rng.integers(1, S + 1, size=B).astype(np.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)).astype(np.float32))
+    table = rng.permutation(n_pages)[: B * P].reshape(B, P).astype(np.int32)
+    k_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    v_pages = rng.standard_normal((n_pages, pt, K, D)).astype(np.float32)
+    kq, ks = page_quant(jnp.asarray(k_pages), jnp.int8)
+    vq, vs = page_quant(jnp.asarray(v_pages), jnp.int8)
+
+    out = ops.paged_decode_attention(q, kq, vq, jnp.asarray(table),
+                                     jnp.asarray(lengths), softcap=cap,
+                                     k_scales=ks, v_scales=vs)
+    want = ops.paged_decode_attention(q, page_dequant(kq, ks),
+                                      page_dequant(vq, vs),
+                                      jnp.asarray(table),
+                                      jnp.asarray(lengths), softcap=cap)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
 def test_paged_decode_row_isolation():
     """A row's output depends only on ITS pages: rewriting another row's
     pages (and the never-referenced spares) must not change it."""

@@ -215,6 +215,94 @@ def test_kv_pool_token_ops_never_leak(data):
     assert pool.bytes_in_use == pytest.approx(0.0, abs=1e-6)
 
 
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_quantized_kv_pool_token_ops_conserve(data):
+    """Quantized-pool variant of the token-ops suite: alloc/extend/free on
+    an int8 physical pool conserves pages AND scale rows (the scale arrays
+    never reshape, drop rows, or go non-finite across any op sequence),
+    and the ledger's in-use side is charged at the physical byte width
+    (``in_use_scale`` < 1 for narrow pages under a wide model dtype)."""
+    n_pages = data.draw(st.integers(2, 10), label="n_pages")
+    pt = data.draw(st.integers(1, 4), label="tokens_per_page")
+    K, D, layers = 2, 4, 2
+    # physical int8 page: elements (1 byte) + per-(layer, page, head) scales
+    page_bytes = 2 * layers * pt * K * D * 1 + 2 * layers * K * 4
+    pool = KVPool(n_pages * page_bytes, page_bytes=page_bytes,
+                  tokens_per_page=pt)
+    pool.allocate_physical(n_layers=layers, n_kv_heads=K, head_dim=D,
+                           dtype=jnp.float32, kv_dtype="int8")
+    assert pool.kv_dtype == "int8"
+    assert pool.k_pages.dtype == jnp.int8
+    sshape = (layers, pool.n_pages + 1, K)
+    model_tok = 2 * K * D * 4 * layers
+    assert pool.acct.in_use_scale == pytest.approx(
+        (page_bytes / pt) / model_tok)
+    seen = [0]
+    rids = [f"q{i}" for i in range(4)]
+    for step in range(data.draw(st.integers(1, 20), label="n_ops")):
+        rid = data.draw(st.sampled_from(rids), label=f"rid{step}")
+        if rid in pool._tok:
+            st_alloc = pool._tok[rid]
+            if (st_alloc.seq_tokens < st_alloc.max_tokens
+                    and data.draw(st.booleans(), label=f"ext{step}")):
+                pool.extend(rid, 1)
+            else:
+                pool.free(rid)
+        else:
+            batch = data.draw(st.integers(1, 2), label=f"b{step}")
+            n_tok = data.draw(st.integers(1, 3 * pt), label=f"n{step}")
+            max_tok = data.draw(st.integers(n_tok, 4 * pt), label=f"m{step}")
+            rate = data.draw(st.floats(0.0, float(model_tok)),
+                             label=f"rate{step}")
+            try:
+                pool.alloc_tokens(rid, batch, n_tok, max_tokens=max_tok,
+                                  in_use_bytes=rate * n_tok * batch,
+                                  in_use_per_token=rate * batch,
+                                  kv_dtype="int8")
+            except PoolExhausted:
+                assert not pool.can_alloc_tokens(batch, max_tok)
+        _pool_invariants(pool, n_pages, seen)
+        assert pool.bytes_in_use <= pool.bytes_reserved + 1e-6
+        # scale-row conservation: every op leaves the scale pools intact
+        for s in (pool.k_scales, pool.v_scales):
+            assert s.shape == sshape and s.dtype == jnp.float32
+            assert bool(jnp.isfinite(s).all())
+    for rid in pool.live_requests():
+        pool.free(rid)
+    assert sorted(pool._free) == list(range(n_pages))
+    assert pool.committed_pages == 0
+    assert pool.bytes_reserved == 0
+    assert pool.bytes_in_use == pytest.approx(0.0, abs=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(x=st.lists(st.floats(-50, 50), min_size=8, max_size=64))
+def test_page_quant_roundtrip_bound(x):
+    """Whole-page quantize→dequant error bounds, pinned: int8 error ≤
+    scale/2 per element (symmetric rounding); fp8-e4m3 error ≤ 1/16
+    relative (3 mantissa bits) plus the scale floor. Requantizing a
+    page's own dequantized values with its scale as the floor reproduces
+    the stored codes exactly (the monotone-scale append invariant)."""
+    from repro.models.attention import page_dequant, page_quant
+    arr = np.zeros((max(len(x) // 8, 1) * 8,), np.float32)
+    arr[: len(x)] = np.asarray(x[: arr.size], np.float32)
+    page = jnp.asarray(arr.reshape(1, -1, 2, 4))      # [1, pt, K=2, D=4]
+    q, s = page_quant(page, jnp.int8)
+    err = np.abs(np.asarray(page_dequant(q, s) - page))
+    per_head = np.asarray(s)[..., None, :, None]
+    assert (err <= per_head * 0.51 + 1e-6).all()
+    q2, s2 = page_quant(page_dequant(q, s), jnp.int8, scale_floor=s)
+    assert np.array_equal(np.asarray(q), np.asarray(q2))
+    fp8 = getattr(jnp, "float8_e4m3fn", None)
+    if fp8 is not None:
+        q8, s8 = page_quant(page, fp8)
+        err8 = np.abs(np.asarray(page_dequant(q8, s8) - page))
+        bound = (np.abs(np.asarray(page)) * 0.0625
+                 + np.asarray(s8)[..., None, :, None] + 1e-6)
+        assert (err8 <= bound).all()
+
+
 @settings(max_examples=20, deadline=None)
 @given(x=st.lists(st.floats(-50, 50), min_size=4, max_size=64))
 def test_int8_kv_quant_roundtrip(x):

@@ -1,4 +1,4 @@
-"""Partition-rule consistency properties (DESIGN.md §6).
+"""Partition-rule consistency properties (DESIGN.md §7).
 
 Every PartitionSpec the sharding rules emit must *fit*: each sharded dim
 divides the product of its mesh axes. `_pick` enforces this inside
