@@ -108,6 +108,19 @@ def main():
     ap.add_argument("--chunk", type=int, default=16,
                     help="max_prefill_tokens for the interference "
                          "section's chunked run (0 disables the section)")
+    ap.add_argument("--no-scenarios", action="store_true",
+                    help="skip the elastic-budget scenario section "
+                         "(budget-shock staircase + cancellation storm on "
+                         "the paged executor, DESIGN.md §10)")
+    ap.add_argument("--scenario-requests", type=int, default=12,
+                    help="requests per scenario run (heavy-tailed "
+                         "lognormal prompt mix)")
+    ap.add_argument("--shock-frac", type=float, default=0.5,
+                    help="fraction of the KV headroom removed mid-serve "
+                         "by the budget-shock scenario")
+    ap.add_argument("--cancel-frac", type=float, default=0.25,
+                    help="fraction of requests cancelled at random "
+                         "lifecycle stages by the storm scenario")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed replays per warmed row; the best (highest "
@@ -142,14 +155,17 @@ def main():
     calib = {k: jax.numpy.asarray(v)
              for k, v in corpus.batch(2, 64, split="calib").items()}
     mm = memory.build_memory_model(cfg)
-    if args.policy == "rl":
-        qp = dqn.init_qnet(jax.random.key(args.seed), 2 * cfg.n_layers + 4,
-                           2 * cfg.n_layers + 1, 32)
-        controller = RAPController(model, params, calib, mm, qp)
-        policy = make_policy("rl", controller=controller)
-    else:
-        policy = make_policy(args.policy, model=model, params=params,
-                             calib=calib, mm=mm, seed=args.seed)
+    def build_policy():
+        if args.policy == "rl":
+            qp = dqn.init_qnet(jax.random.key(args.seed),
+                               2 * cfg.n_layers + 4,
+                               2 * cfg.n_layers + 1, 32)
+            controller = RAPController(model, params, calib, mm, qp)
+            return make_policy("rl", controller=controller)
+        return make_policy(args.policy, model=model, params=params,
+                           calib=calib, mm=mm, seed=args.seed)
+
+    policy = build_policy()
 
     # prompt lengths round to 16 — serving engines bucket shapes so compiles
     # amortize; finer granularity just measures XLA compile latency
@@ -426,11 +442,103 @@ def main():
               f"{interference['monolithic_itl_ms']['p99']:.2f} ms, "
               f"+long chunked({args.chunk}) "
               f"{interference['chunked_itl_ms']['p99']:.2f} ms")
+    # ---- elastic-budget scenarios (DESIGN.md §10) --------------------
+    # Fault-injection on the paged executor (slot fallback for non-
+    # uniform layouts): a mid-serve budget-shock staircase (preemption +
+    # KV spill/resume must keep completing requests and recover warmed
+    # throughput) and a cancellation storm (≥ --cancel-frac of requests
+    # cancelled at random lifecycle stages must leave zero live rids and
+    # zero leaked pages). Both hard-gate after the doc is written.
+    scenarios = None
+    if not args.no_scenarios and "masked" in args.modes:
+        from repro.runtime import (heavy_tailed_requests, run_budget_shock,
+                                   run_cancellation_storm)
+        sc_exec = "paged" if paged_ok else "slot"
+        sc_max_new, sc_max_prompt = 4, 64
+        sc_max_len = sc_max_prompt + sc_max_new
+        sc_budget = (mm.param_bytes(full)
+                     + args.pool_requests * mm.state_bytes(full, 1,
+                                                           sc_max_len))
+        tok_src = corpus.sample_tokens(rng, 1, sc_max_prompt)
+        # fresh policy: the row sweep's policy memoized decisions stamped
+        # with each row's kv_dtype, and a cached int8 decision replayed
+        # against the scenarios' model-precision pool is a dtype mismatch
+        sc_policy = build_policy()
+
+        def sc_engine():
+            executor = (PagedExecutor(model, params, max_active=args.slots)
+                        if sc_exec == "paged" else None)
+            return RAPEngine(model, params, sc_policy, EngineConfig(
+                mode="masked", max_new_tokens=sc_max_new,
+                max_active=args.slots, max_len=sc_max_len,
+                budget_bytes=sc_budget, decode_horizon=2),
+                scheduler=args.scheduler, executor=executor)
+
+        def sc_reqs(seed):
+            return heavy_tailed_requests(
+                tok_src, args.scenario_requests, seed=seed,
+                max_len=sc_max_prompt, max_new=sc_max_new)
+
+        shock_eng = sc_engine()
+        if not args.no_warmup:      # warm compiles so phase rates are real
+            shock_eng.run(sc_reqs(args.seed))
+        shock = run_budget_shock(shock_eng, sc_reqs(args.seed),
+                                 budget_bytes=sc_budget,
+                                 frac=args.shock_frac)
+        shock_rep = shock.pop("report")
+        storm = run_cancellation_storm(sc_engine(), sc_reqs(args.seed + 1),
+                                       cancel_frac=args.cancel_frac,
+                                       seed=args.seed)
+        storm_rep = storm.pop("report")
+        scenarios = {
+            "executor": sc_exec,
+            "budget_shock": {
+                **{k: v for k, v in shock.items()},
+                "itl_ms": _ms_pcts(shock_rep.itl),
+                "itl_preempted_ms": _ms_pcts(shock_rep.itl_preempted),
+                "itl_preempted_count": shock_rep.itl_preempted["count"],
+            },
+            "cancellation_storm": storm,
+        }
+        print(f"[bench] budget shock ({sc_exec}, −{args.shock_frac:.0%} KV "
+              f"headroom): pre/shock/post "
+              f"{shock['pre']['completed']:.0f}/"
+              f"{shock['shock']['completed']:.0f}/"
+              f"{shock['post']['completed']:.0f} done, replay "
+              f"{shock['replay_tok_per_s']:.0f} vs warmed "
+              f"{shock['warmed_tok_per_s']:.0f} tok/s (recovery "
+              f"×{shock['recovery_ratio']:.2f}), preempted "
+              f"{shock['preempted_count']}, spilled "
+              f"{shock['spilled_mb']:.2f} MB, resume p50 "
+              f"{shock['resume_p50_s'] * 1e3:.1f} ms")
+        print(f"[bench] cancellation storm ({sc_exec}): "
+              f"{storm['cancelled']}/{storm['n_requests']} cancelled "
+              f"(quota {storm['cancel_quota']}), {storm['done']} done, "
+              f"live {storm['live_requests']:.0f}, spilled "
+              f"{storm['spilled_requests']:.0f}, leaked pages "
+              f"{storm['leaked_pages']:.0f}")
+    elif not args.no_scenarios:
+        print("[bench] skipping scenarios (masked mode not in --modes)")
+
     os.makedirs(args.out, exist_ok=True)
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 6,        # v6: quantized KV pages (DESIGN.md §4) — rows
+        "schema": 7,        # v7: elastic-budget scenarios (DESIGN.md §10) —
+                            # the document gains a "scenarios" section:
+                            # budget_shock (per-phase completion/tok-s under
+                            # a mid-serve KV-headroom staircase cut, with
+                            # preempted/spilled/resume-latency and separate
+                            # preempted-request ITL percentiles) and
+                            # cancellation_storm (pool-ledger invariants
+                            # after cancelling ≥ --cancel-frac of requests
+                            # at random lifecycle stages). Hard-gated:
+                            # shock+post phases must complete > 0 requests,
+                            # the full-budget replay after the shocked run
+                            # ≥ 0.9× the pre-shock warmed tok/s, storm
+                            # ends with zero live rids and zero leaked
+                            # pages. Config gains scenario knobs.
+                            # v6: quantized KV pages (DESIGN.md §4) — rows
                             # gain kv_dtype ("model"|int8|fp8) and
                             # kv_tok_per_mb (KV tokens one MB of pool
                             # holds at the row's precision); --kv-dtypes
@@ -464,9 +572,13 @@ def main():
             "kv_dtypes": list(args.kv_dtypes),
             "mesh": {str(k): int(v) for k, v in serve_mesh.shape.items()},
             "devices": len(jax.devices()),
+            "scenario_requests": args.scenario_requests,
+            "shock_frac": args.shock_frac,
+            "cancel_frac": args.cancel_frac,
         },
         "rows": rows,
         "interference": interference,
+        "scenarios": scenarios,
     }
     bench_out = os.path.join(args.out, "BENCH_engine.json")
     with open(bench_out, "w") as f:
@@ -629,6 +741,50 @@ def main():
                 f"collectives must be amortized by the horizon, not "
                 f"regressive; a regression here invalidates the sharded "
                 f"serve path")
+
+    # Scenario gates (DESIGN.md §10) — AFTER the doc write, like every
+    # gate above: a failing run still leaves its rows behind. These are
+    # the robustness contract the elastic-budget machinery ships under;
+    # run_budget_shock / run_cancellation_storm returning at all already
+    # proves no deadlock (the engine drained).
+    if scenarios is not None:
+        sh = scenarios["budget_shock"]
+        stm = scenarios["cancellation_storm"]
+        if sh["shock"]["completed"] <= 0 or sh["post"]["completed"] <= 0:
+            raise SystemExit(
+                f"[bench] FAIL: budget shock stalled completions "
+                f"(shock {sh['shock']['completed']:.0f} done, post "
+                f"{sh['post']['completed']:.0f} done) — the engine must "
+                f"keep serving through a −{args.shock_frac:.0%} KV cut "
+                f"and after recovery, not deadlock or starve")
+        if sh["preempted_count"] > 0 and sh["itl_preempted_count"] <= 0:
+            raise SystemExit(
+                "[bench] FAIL: requests were preempted but no ITL samples "
+                "landed in the preempted pool — resume gaps would pollute "
+                "the untouched requests' percentiles")
+        if args.no_warmup:
+            print("[bench] skipping shock recovery gate (--no-warmup: "
+                  "numbers are compile-dominated)")
+        elif sh["recovery_ratio"] < 0.9:
+            raise SystemExit(
+                f"[bench] FAIL: the full-budget replay AFTER the shocked "
+                f"run reached only ×{sh['recovery_ratio']:.2f} of the "
+                f"pre-shock warmed rate ({sh['replay_tok_per_s']:.0f} vs "
+                f"{sh['warmed_tok_per_s']:.0f} tok/s, need ≥ 0.9×) — "
+                f"restoring the budget must restore goodput; pages or "
+                f"slots are leaking across the shock")
+        if (stm["live_requests"] or stm["spilled_requests"]
+                or stm["leaked_pages"]):
+            raise SystemExit(
+                f"[bench] FAIL: cancellation storm leaked state — live "
+                f"rids {stm['live_requests']:.0f}, spilled "
+                f"{stm['spilled_requests']:.0f}, leaked pages "
+                f"{stm['leaked_pages']:.0f} (all must be 0); the cancel "
+                f"path must release every page at every lifecycle stage")
+        if stm["cancelled"] < stm["cancel_quota"]:
+            print(f"[bench] WARNING: storm cancelled {stm['cancelled']} < "
+                  f"quota {stm['cancel_quota']} (trace drained before the "
+                  f"storm met its quota — raise --scenario-requests)")
 
 
 if __name__ == "__main__":

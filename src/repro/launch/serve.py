@@ -84,6 +84,25 @@ def main():
     ap.add_argument("--pool-requests", type=float, default=2.5,
                     help="KV pool sized for this many concurrent dense "
                          "requests")
+    ap.add_argument("--budget-trace", choices=("none", "workload",
+                                               "staircase"),
+                    default="none",
+                    help="time-varying device budget (DESIGN.md §10): "
+                         "'workload' replays the trace's OU memory-"
+                         "availability walk (each request's budget_frac "
+                         "becomes a breakpoint); 'staircase' cuts half "
+                         "the KV headroom for the middle half of the "
+                         "trace and restores it; 'none' serves the "
+                         "static budget. Under a trace the engine "
+                         "preempts victims (KV spilled to host, resumed "
+                         "bitwise when the budget recovers) unless "
+                         "--no-enable-preemption")
+    ap.add_argument("--enable-preemption", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="preempt running requests when the budget trace "
+                         "drops (--no-enable-preemption: shrink by "
+                         "admission-gating new work only; in-flight "
+                         "requests keep their pages)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.chunked_prefill and args.max_prefill_tokens <= 0:
@@ -216,7 +235,8 @@ def main():
         mode=args.mode, max_new_tokens=args.max_new, max_active=slots,
         max_len=max_total, budget_bytes=budget, kv_dtype=kv_dtype,
         decode_horizon=args.decode_horizon,
-        max_prefill_tokens=args.max_prefill_tokens),
+        max_prefill_tokens=args.max_prefill_tokens,
+        preemption_enabled=args.enable_preemption),
         scheduler=args.scheduler, executor=executor)
     ereqs = []
     for i, r in enumerate(reqs):
@@ -227,11 +247,35 @@ def main():
         ereqs.append(EngineRequest(rid=f"req{i}", prompt=prompt,
                                    arrival_t=r.t - reqs[0].t,
                                    priority=0 if sql <= 128 else 1))
+    # time-varying budget (DESIGN.md §10): breakpoint lists on the
+    # engine's virtual clock, derived from the workload or a synthetic
+    # mid-serve staircase shock
+    trace = None
+    if args.budget_trace == "workload":
+        from repro.runtime import workload_budget_trace
+        t0 = reqs[0].t
+        trace = [(t - t0, b) for t, b in
+                 workload_budget_trace(reqs, budget)]
+    elif args.budget_trace == "staircase":
+        from repro.runtime import staircase_trace
+        span = max(ereqs[-1].arrival_t, 0.2)
+        # cut half the KV headroom (params stay resident — a 50% TOTAL
+        # cut would zero the pool at smoke scale) for the middle half
+        kv = budget - mm.param_bytes(full)
+        shocked = (mm.param_bytes(full) + 0.5 * kv) / budget
+        trace = staircase_trace(budget, 0.25 * span, 0.75 * span,
+                                frac=shocked)
+    if trace is not None:
+        print(f"budget trace: {args.budget_trace} "
+              f"({len(trace)} breakpoints, "
+              f"{min(b for _, b in trace)/1e6:.1f}–"
+              f"{max(b for _, b in trace)/1e6:.1f}MB), preemption "
+              f"{'on' if args.enable_preemption else 'off'}")
     print(f"engine[{policy.name}/{args.scheduler}/{args.executor}]: "
           f"{len(ereqs)} requests "
           f"(batch {min(r.batch for r in reqs)}–{max(r.batch for r in reqs)}),"
           f" {slots} slots, shared pool {budget/1e6:.1f}MB total budget")
-    rep = engine.run(ereqs)
+    rep = engine.run(ereqs, budget_trace=trace)
     for r in rep.results:
         if r.status == "done":
             kept = int(r.mask.sum())
@@ -241,11 +285,18 @@ def main():
                   f"{' (memo)' if r.cached_decision else ''}  "
                   f"fits={r.fits}")
         else:
-            print(f"{r.rid}: REJECTED ({r.reason})")
+            print(f"{r.rid}: {r.status.upper()} ({r.reason})")
     print(f"engine: {rep.tokens_per_s:.1f} tok/s, "
           f"{rep.decode_iters} decode iters, "
           f"mean queue {rep.mean_queue_delay_s*1e3:.0f}ms, "
           f"fit-rate {rep.budget_fit_rate:.2f}")
+    if rep.preempted_count:
+        print(f"preemption: {rep.preempted_count} preempted, "
+              f"{rep.spilled_mb:.2f}MB spilled, resume p50/p99 "
+              f"{rep.resume_latency.get('p50', 0.0)*1e3:.0f}/"
+              f"{rep.resume_latency.get('p99', 0.0)*1e3:.0f}ms, "
+              f"preempted-request itl p99 "
+              f"{rep.itl_preempted.get('p99', 0.0)*1e3:.2f}ms")
     if rep.ttft.get("count"):
         print(f"latency: ttft p50/p99 {rep.ttft['p50']*1e3:.0f}/"
               f"{rep.ttft['p99']*1e3:.0f}ms, itl p50/p99 "

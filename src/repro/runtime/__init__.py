@@ -1,4 +1,4 @@
-from repro.runtime import latency, steps
+from repro.runtime import latency, scenarios, steps
 from repro.runtime.engine import (EngineConfig, EngineReport, EngineRequest,
                                   RAPEngine, RequestResult)
 from repro.runtime.executor import (LocalExecutor, ModelExecutor,
@@ -6,20 +6,27 @@ from repro.runtime.executor import (LocalExecutor, ModelExecutor,
                                     ShardedExecutor, ShardedSlotGroup,
                                     SlotGroup, chunk_widths)
 from repro.runtime.kv_pool import (KVPool, PageAllocation, PoolExhausted,
-                                   TokenAllocation)
+                                   SpilledAllocation, TokenAllocation)
+from repro.runtime.scenarios import (TickStaircase, heavy_tailed_requests,
+                                     run_budget_shock,
+                                     run_cancellation_storm,
+                                     staircase_trace, workload_budget_trace)
 from repro.runtime.scheduler import (SCHEDULERS, FIFOScheduler,
                                      PriorityScheduler, Scheduler,
                                      SchedulerOutput, SJFScheduler,
-                                     make_scheduler)
+                                     VictimCandidate, make_scheduler)
 from repro.runtime.server import RAPServer, ServeResult
 from repro.runtime.trainer import Trainer, TrainerConfig
 
-__all__ = ["steps", "latency", "Trainer", "TrainerConfig", "RAPServer",
-           "ServeResult", "RAPEngine", "EngineConfig", "EngineRequest",
-           "EngineReport", "RequestResult", "KVPool", "PageAllocation",
-           "TokenAllocation", "PoolExhausted", "Scheduler",
-           "SchedulerOutput", "FIFOScheduler", "SJFScheduler",
-           "PriorityScheduler", "SCHEDULERS", "make_scheduler",
+__all__ = ["steps", "latency", "scenarios", "Trainer", "TrainerConfig",
+           "RAPServer", "ServeResult", "RAPEngine", "EngineConfig",
+           "EngineRequest", "EngineReport", "RequestResult", "KVPool",
+           "PageAllocation", "TokenAllocation", "SpilledAllocation",
+           "PoolExhausted", "Scheduler", "SchedulerOutput",
+           "FIFOScheduler", "SJFScheduler", "PriorityScheduler",
+           "VictimCandidate", "SCHEDULERS", "make_scheduler",
            "ModelExecutor", "LocalExecutor", "PagedExecutor", "PagedGroup",
            "ShardedExecutor", "ShardedSlotGroup", "SlotGroup",
-           "chunk_widths"]
+           "chunk_widths", "TickStaircase", "staircase_trace",
+           "workload_budget_trace", "heavy_tailed_requests",
+           "run_budget_shock", "run_cancellation_storm"]

@@ -71,7 +71,8 @@ from repro.runtime.executor import (LocalExecutor, ModelExecutor, SlotGroup,
 from repro.runtime.latency import summarize as _lat_summarize
 from repro.runtime.kv_pool import (KVPool, default_page_bytes,
                                    resolve_kv_dtype)
-from repro.runtime.scheduler import Scheduler, make_scheduler
+from repro.runtime.scheduler import (Scheduler, VictimCandidate,
+                                     make_scheduler)
 
 __all__ = ["EngineConfig", "EngineRequest", "RequestResult", "EngineReport",
            "RAPEngine"]
@@ -157,6 +158,21 @@ class EngineConfig:
     # bitwise-identical with chunking on or off. Backends without a
     # chunked path (heterogeneous layouts) fall back to monolithic.
     max_prefill_tokens: int = 0
+    # Elastic budgets (DESIGN.md §10): when run() is given a budget_trace
+    # and the budget shrinks below the bytes already reserved, the engine
+    # preempts running victims (Scheduler.select_victims order), spilling
+    # their KV pages to host and resuming them when the budget recovers.
+    # False serves the trace for observability only: the budget still
+    # gates NEW admissions, but running requests are never preempted.
+    preemption_enabled: bool = True
+    # Preemption overshoots the deficit by this fraction of the shrunken
+    # KV budget, so the next admission/extension doesn't immediately
+    # re-trigger a shock at the boundary. 0 frees exactly the deficit.
+    spill_headroom_frac: float = 0.1
+    # "scheduler" delegates victim order to Scheduler.select_victims
+    # (SLO tiers + aging under PriorityScheduler); "arrival" preempts the
+    # newest running request first (least sunk work, LIFO).
+    victim_policy: str = "scheduler"
 
     def __post_init__(self):
         if self.mode not in ("masked", "structural"):
@@ -209,6 +225,23 @@ class EngineConfig:
                 f"{self.max_prefill_tokens!r} (0 prefills prompts "
                 f"monolithically; >0 caps prompt tokens prefilled per "
                 f"engine tick)")
+        if not isinstance(self.preemption_enabled, bool):
+            raise ValueError(
+                f"preemption_enabled must be a bool, got "
+                f"{self.preemption_enabled!r} — it gates mid-serve KV "
+                f"spill/resume when a budget_trace shrinks the budget "
+                f"below the bytes already reserved")
+        if not (0.0 <= self.spill_headroom_frac < 1.0):
+            raise ValueError(
+                f"spill_headroom_frac must be in [0, 1), got "
+                f"{self.spill_headroom_frac!r} — the fraction of the "
+                f"shrunken KV budget preemption frees beyond the deficit "
+                f"(0 frees exactly the deficit)")
+        if self.victim_policy not in ("scheduler", "arrival"):
+            raise ValueError(
+                f"unknown victim_policy {self.victim_policy!r} (expected "
+                f"'scheduler' — Scheduler.select_victims's SLO-tier order "
+                f"— or 'arrival' — newest running request first)")
 
 
 @dataclasses.dataclass
@@ -224,7 +257,7 @@ class EngineRequest:
 @dataclasses.dataclass
 class RequestResult:
     rid: str
-    status: str                       # done | rejected
+    status: str                       # done | rejected | cancelled
     tokens: Optional[np.ndarray]      # [b, generated]
     mask: Optional[np.ndarray]
     bucket: Tuple
@@ -271,6 +304,23 @@ class EngineReport:
     # per-token share)
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
     itl: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # elastic-budget counters (DESIGN.md §10): preemption events, requests
+    # cancelled via cancel(), MB of KV spilled to host across the run
+    preempted_count: int = 0
+    cancelled: int = 0
+    spilled_mb: float = 0.0
+    # preempt→resume latency percentiles (summarize dict; one sample per
+    # resume, on the virtual clock)
+    resume_latency: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # ITL samples of requests that were preempted at least once, pooled
+    # SEPARATELY from `itl` — a resume gap lands in the victim's stream as
+    # one huge inter-token latency and would otherwise poison the p99 of
+    # requests that were never touched
+    itl_preempted: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # (virtual_t, budget_bytes) breakpoints the run actually applied —
+    # scenario harnesses use these to window per-phase goodput
+    budget_events: List[Tuple[float, float]] = \
+        dataclasses.field(default_factory=list)
 
     def result(self, rid: str) -> RequestResult:
         for r in self.results:
@@ -294,6 +344,14 @@ class _Running:
     # first entry is the prefill's token #1 (TTFT anchor); each decode
     # horizon appends one entry covering its H tokens (ITL samples)
     events: List[Tuple[float, int]] = dataclasses.field(default_factory=list)
+    # times this request was preempted (routes its ITL samples to the
+    # report's itl_preempted pool instead of itl)
+    preempt_count: int = 0
+    # set by the force-resume liveness backstop: exempt from further
+    # preemption so it drains instead of livelocking (a budget too small
+    # for even ONE request would otherwise re-spill the resurrected
+    # victim at the next tick start, before it ever decodes)
+    pinned: bool = False
 
 
 @dataclasses.dataclass
@@ -309,6 +367,20 @@ class _Prefilling:
     max_new: int
     bucket: Tuple
     task: Any                        # executor _PrefillTask
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A running request evicted under a budget shock: its KV pages live
+    in the pool's host-side spill store, its non-KV device state (pos,
+    last tokens, slot caches for the local path) in ``state``. Resuming
+    re-grants pages, restores the state into free slots of an equivalent
+    group, and the request decodes on, bitwise-identical to never having
+    been preempted."""
+    run: _Running
+    state: Dict[str, Any]            # executor.spill_state() payload
+    cache_len: int                   # group bucket to restore into
+    preempted_t: float               # virtual clock (resume-latency anchor)
 
 
 # ------------------------------------------------------------------- engine
@@ -387,6 +459,16 @@ class RAPEngine:
         self._skew = 0.0
         self._budget = self.cfg.budget_bytes
         self._frag_samples: List[float] = []
+        # elastic-budget state (DESIGN.md §10)
+        self._preempted: "Dict[str, _Preempted]" = {}
+        self._budget_trace: Any = None
+        self._run_budget = self.cfg.budget_bytes
+        self._budget_events: List[Tuple[float, float]] = []
+        self._resume_samples: List[float] = []
+        self._itl_preempted_samples: List[float] = []
+        self._preempted_count = 0
+        self._spilled_bytes = 0.0
+        self._stall_ticks = 0
 
     # ------------------------------------------------------------ capacity
     def ensure_capacity(self, batch: int, total_len: int) -> None:
@@ -440,30 +522,69 @@ class RAPEngine:
 
     # ------------------------------------------------------------- serving
     def run(self, requests: List[EngineRequest], *,
-            budget_bytes: Optional[float] = None) -> EngineReport:
-        """Serve a trace to completion and report aggregate stats."""
+            budget_bytes: Optional[float] = None,
+            budget_trace: Any = None,
+            on_tick: Any = None) -> EngineReport:
+        """Serve a trace to completion and report aggregate stats.
+
+        ``budget_trace`` makes the device budget time-varying (DESIGN.md
+        §10): either a list of ``(t_seconds, budget_bytes)`` breakpoints —
+        piecewise-constant on the run's VIRTUAL clock, applied at the
+        start of the first tick at or after each breakpoint — or a
+        callable ``now → budget_bytes`` evaluated once per tick (call-
+        counting callables give deterministic shocks in tests, where tick
+        wall time varies). The pool's physical arrays are sized once from
+        the base budget — the trace modulates admission and triggers
+        preemption; values above the base are clamped by pool capacity.
+
+        ``on_tick(engine)`` is called once per tick during the host phase
+        (decode scans already in flight), after launch and before
+        arrivals — the seam fault-injection harnesses use to cancel
+        requests mid-horizon deterministically.
+        """
         budget = self.cfg.budget_bytes if budget_bytes is None else budget_bytes
         self.pool = self._make_pool(budget)
         if self._paged:
             self.executor.bind_pool(self.pool, self.cfg.max_len)
         self._budget = budget
+        self._run_budget = budget
+        if budget_trace is not None and not callable(budget_trace):
+            budget_trace = sorted((float(t), float(v))
+                                  for t, v in budget_trace)
+        self._budget_trace = budget_trace
+        self._budget_events = ([(0.0, float(budget))]
+                               if budget_trace is not None else [])
         self._frag_samples: List[float] = []
         self._pending = sorted(requests, key=lambda r: r.arrival_t)
         self.scheduler.clear()
         self._running.clear()
         self._prefilling.clear()
+        self._preempted.clear()
         self._results = []
         self._ttft_samples = []
         self._itl_samples = []
+        self._resume_samples = []
+        self._itl_preempted_samples = []
+        self._preempted_count = 0
+        self._spilled_bytes = 0.0
+        self._stall_ticks = 0
         self._decode_iters = 0
         self._compiles_at_run_start = self.executor.compile_events
         self._launch_s_at_run_start = getattr(self.executor, "launch_s", 0.0)
         self._skew = 0.0
         self._t0 = time.perf_counter()
         self.executor.evict_all()             # previous run's occupants
-        while (self._pending or len(self.scheduler) or self._running
-               or self._prefilling):
-            self._tick()
+        try:
+            while (self._pending or len(self.scheduler) or self._running
+                   or self._prefilling or self._preempted):
+                self._tick(on_tick)
+        except BaseException:
+            # a run that raises mid-serve must not leak pool ledger
+            # entries / spilled pages / seated slots into the next run()
+            # on this engine (pinned by
+            # tests/test_engine.py::test_run_exception_releases_pool)
+            self._abort_cleanup()
+            raise
         # makespan is on the VIRTUAL clock (skipped idle gaps included) —
         # the same clock request timestamps live on, so throughput is
         # comparable with any other replay of the same arrival process
@@ -491,20 +612,34 @@ class RAPEngine:
             measured_frag=(float(np.mean(self._frag_samples))
                            if self._frag_samples else 0.0),
             ttft=_lat_summarize(self._ttft_samples),
-            itl=_lat_summarize(self._itl_samples))
+            itl=_lat_summarize(self._itl_samples),
+            preempted_count=self._preempted_count,
+            cancelled=sum(1 for r in self._results
+                          if r.status == "cancelled"),
+            spilled_mb=self._spilled_bytes / 1e6,
+            resume_latency=_lat_summarize(self._resume_samples),
+            itl_preempted=_lat_summarize(self._itl_preempted_samples),
+            budget_events=list(self._budget_events))
 
     # ------------------------------------------------------------ one tick
-    def _tick(self) -> None:
+    def _tick(self, on_tick: Any = None) -> None:
         """One engine macro-tick, host work overlapped with device work:
 
+          0. **budget** — re-evaluate the elastic budget on the virtual
+             clock; if reserved bytes now exceed it, preempt victims
+             (spill KV pages to host, free slots). This happens FIRST,
+             before any launch, when no scan is in flight and the pool's
+             page arrays are concrete — the only point in the tick where
+             gathering page contents is race-free;
           1. **launch** — dispatch this tick's fused decode horizons (the
              scheduler's decode plan). JAX async dispatch returns the
              token futures immediately, so the scans run on device while…
-          2. **host phase** — arrivals, admission (policy decision, pool
-             allocation, page granting), and one chunk of every in-flight
-             chunked prefill all execute on the host with the scans still
-             in flight (pinned by the transfer-guard overlap tests in
-             tests/test_horizon.py);
+          2. **host phase** — the on_tick hook, arrivals, resume of
+             preempted requests (budget permitting), admission (policy
+             decision, pool allocation, page granting), and one chunk of
+             every in-flight chunked prefill all execute on the host with
+             the scans still in flight (pinned by the transfer-guard
+             overlap tests in tests/test_horizon.py);
           3. **finish** — the single device→host read-back folds the
              horizon's tokens into the running requests and completions
              are processed.
@@ -512,14 +647,23 @@ class RAPEngine:
         A request admitted during the host phase joins decode from the
         NEXT tick — its slots were free padding (or reserved) when this
         tick's scan launched, so this tick's rows for them are garbage
-        and are never read (the launch's captured occupancy pins this)."""
+        and are never read (the launch's captured occupancy pins this).
+        The same captured-occupancy contract makes resume and mid-horizon
+        cancellation safe: a restored request's slots and pages were free
+        at launch, and a cancelled request simply vanishes from
+        ``_running`` so fold-back skips it (over-generated horizon tokens
+        are truncated exactly like a completion's)."""
         now = self._now()
+        self._eval_budget(now)
+        self._maybe_preempt(now)
         plan = self.scheduler.schedule(now, running=list(self._running))
         backlog = (len(self.scheduler) > 0
                    or bool(self._pending
                            and self._pending[0].arrival_t <= now))
         launches = self._launch_decode(plan.decode, backlog=backlog)
         # ---- host phase (device scans in flight from here to finish) ----
+        if on_tick is not None:
+            on_tick(self)
         while self._pending and self._pending[0].arrival_t <= now:
             req = self._pending.pop(0)
             if (req.rid in self.scheduler or req.rid in self._running
@@ -535,6 +679,10 @@ class RAPEngine:
             cost = req.prompt.shape[0] * (req.prompt.shape[1]
                                           + max(max_new, 1))
             self.scheduler.add(req, cost=cost)
+        # resume preempted requests BEFORE admitting new ones: a victim
+        # already holds its admission (and its partial output) — letting
+        # the queue overtake it would turn one preemption into starvation
+        self._try_resume()
         # admission plan: try candidates in the scheduler's order; a
         # deferral ends the loop so the order is never overtaken in-tick
         deferred = None
@@ -545,27 +693,303 @@ class RAPEngine:
                 break
             self.scheduler.remove(req.rid)
         # a deferral is "stuck" only if judged NOW, before this tick's
-        # in-flight work lands: with nothing launched, running, or
-        # prefilling, no completion can ever free the memory it waits on.
-        # (Work finishing later this tick frees capacity — the deferred
-        # request simply retries next tick.)
+        # in-flight work lands: with nothing launched, running,
+        # prefilling, or preempted, no completion or resume can ever free
+        # the memory it waits on. (Work finishing later this tick frees
+        # capacity — the deferred request simply retries next tick.)
         stuck = (deferred is not None and not launches
-                 and not self._running and not self._prefilling)
+                 and not self._running and not self._prefilling
+                 and not self._preempted)
         self._advance_prefills()
         # ---- finish: the tick's one sync point --------------------------
         if launches:
             self._finish_decode(launches)
-        if not self._running and not self._prefilling:
-            if stuck:
-                # deferred head with an idle engine: reject the
-                # scheduler's choice instead of spinning (defensive;
-                # strict capacity misfits are rejected in _try_admit
-                # already)
+        if self._running or self._prefilling:
+            self._stall_ticks = 0
+        else:
+            self._idle_step(deferred, stuck)
+
+    def _idle_step(self, deferred, stuck: bool) -> None:
+        """Liveness with an idle engine (nothing running or prefilling):
+        fast-forward the virtual clock to the next event that can change
+        admissibility — a pending arrival or a budget-trace breakpoint —
+        and backstop the cases where no such event exists (callable
+        traces tick forward on evaluation; a trace that never recovers
+        must not spin forever)."""
+        now = self._now()
+        nxt = self._next_breakpoint(now)
+        if stuck:
+            if nxt is not None:
+                # the budget may recover at the next breakpoint: jump
+                # there instead of rejecting the deferred head
+                self._skew += max(nxt - now, 0.0) + 1e-9
+            elif callable(self._budget_trace):
+                # call-counting traces advance per evaluation: give the
+                # shock a bounded number of idle ticks to recover before
+                # declaring the deferral permanent
+                self._stall_ticks += 1
+                if self._stall_ticks > 256:
+                    self.scheduler.remove(deferred.rid)
+                    self._reject(deferred, "deferred with idle engine "
+                                           "(budget trace never recovered)")
+            else:
+                # deferred head with an idle engine and no future budget
+                # event: reject the scheduler's choice instead of
+                # spinning (defensive; strict capacity misfits are
+                # rejected in _try_admit already)
                 self.scheduler.remove(deferred.rid)
                 self._reject(deferred, "deferred with idle engine")
-            elif deferred is None and self._pending:
-                # fast-forward the virtual clock across the idle gap
-                self._skew += self._pending[0].arrival_t - self._now() + 1e-9
+        elif deferred is None and self._pending and not self._preempted:
+            # fast-forward the virtual clock across the idle gap (clamped
+            # so a budget breakpoint inside the gap is not skipped over)
+            tgt = self._pending[0].arrival_t
+            if nxt is not None:
+                tgt = min(tgt, nxt)
+            self._skew += max(tgt - now, 0.0) + 1e-9
+        elif self._preempted:
+            if nxt is not None:
+                tgt = nxt
+                if self._pending:
+                    tgt = min(tgt, self._pending[0].arrival_t)
+                self._skew += max(tgt - now, 0.0) + 1e-9
+            else:
+                # no breakpoint will ever raise the budget again (constant
+                # callable, or trace exhausted low): after a bounded spin,
+                # force-resume — physical capacity checks only — so the
+                # run drains instead of deadlocking
+                self._stall_ticks += 1
+                if self._stall_ticks > 8 and not self._force_resume():
+                    raise RuntimeError(
+                        "elastic-budget deadlock: preempted requests "
+                        "cannot be restored even ignoring the budget "
+                        "(pool capacity lost?)")
+
+    # ----------------------------------------- elastic budget / preemption
+    def _kv_budget(self) -> float:
+        """KV-side share of the current elastic budget (params stay
+        resident through a shock — shrinking below them just means zero
+        KV headroom, not negative)."""
+        return max(self._budget - self.resident_param_bytes, 0.0)
+
+    def _eval_budget(self, now: float) -> None:
+        """Re-evaluate the piecewise-constant budget on the virtual clock
+        (list traces apply every breakpoint ≤ now; callables are invoked
+        once per tick). Changes are recorded as (t, bytes) events."""
+        tr = self._budget_trace
+        if tr is None:
+            return
+        if callable(tr):
+            b = float(tr(now))
+        else:
+            b = self._run_budget
+            for t, v in tr:
+                if t <= now + 1e-12:
+                    b = v
+                else:
+                    break
+        if b != self._budget:
+            self._budget = b
+            self._budget_events.append((now, b))
+
+    def _next_breakpoint(self, now: float) -> Optional[float]:
+        """First future breakpoint of a list trace (None for callables —
+        they advance by being evaluated, and for exhausted traces)."""
+        tr = self._budget_trace
+        if tr is None or callable(tr):
+            return None
+        for t, _ in tr:
+            if t > now + 1e-12:
+                return t
+        return None
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Shed reserved bytes when the elastic budget shrank below them:
+        spill victims (Scheduler.select_victims order) until reservations
+        fit the shrunken budget minus headroom. Runs at tick START — no
+        scan is in flight, so the pool's page arrays are concrete and
+        gathering page contents races nothing. Only decoding requests are
+        candidates; an in-flight chunked prefill finishes its prompt
+        first and becomes preemptible the next tick."""
+        if (not self.cfg.preemption_enabled or self._budget_trace is None
+                or not self._running):
+            return
+        kv_budget = self._kv_budget()
+        if self.pool.bytes_reserved <= kv_budget + 1e-6:
+            return
+        target = kv_budget * (1.0 - self.cfg.spill_headroom_frac)
+        cands = [VictimCandidate(
+                     rid=rid,
+                     priority=getattr(run.req, "priority", 0),
+                     arrival_t=run.req.arrival_t,
+                     remaining_tokens=max(run.max_new - len(run.out), 0),
+                     reserved_bytes=self.pool.request_reserved_bytes(rid))
+                 for rid, run in self._running.items() if not run.pinned]
+        if self.cfg.victim_policy == "arrival":
+            order = sorted(cands, key=lambda c: -c.arrival_t)
+        else:
+            order = self.scheduler.select_victims(cands, now)
+        for cand in order:
+            if self.pool.bytes_reserved <= target + 1e-6:
+                break
+            self._preempt(self._running[cand.rid], now)
+
+    def _preempt(self, run: _Running, now: float) -> None:
+        """Evict one running request with its state: copy the non-KV
+        device state out (executor seam), free its slots, spill its KV
+        pages to the pool's host store, release its reservation."""
+        rid = run.req.rid
+        cache_len = run.group.cache_len
+        state = self.executor.spill_state(run.group, run.slots)
+        run.group.evict(run.slots)
+        self._spilled_bytes += self.pool.spill(rid)
+        del self._running[rid]
+        run.preempt_count += 1
+        self._preempted[rid] = _Preempted(run=run, state=state,
+                                          cache_len=cache_len,
+                                          preempted_t=now)
+        self._preempted_count += 1
+
+    def _try_resume(self) -> None:
+        """Restore preempted requests that fit the recovered budget,
+        most-important first (reverse of preemption order — victims were
+        shed least-important first)."""
+        if not self._preempted:
+            return
+        kv_budget = self._kv_budget()
+        for rid in reversed(list(self._preempted)):
+            self._resume_one(rid, kv_budget)
+
+    def _resume_one(self, rid: str, kv_budget: float, *,
+                    force: bool = False) -> bool:
+        p = self._preempted[rid]
+        if not force:
+            need = self.pool.restore_reserved_bytes(rid)
+            if self.pool.bytes_reserved + need > kv_budget + 1e-6:
+                return False
+        if not self.pool.can_restore(rid):
+            return False
+        b = len(p.run.slots)
+        group = self.executor.group_for(p.run.decision.mask, p.cache_len)
+        free = group.free_slots()
+        if len(free) < b:
+            return False
+        rows = self.pool.restore(rid)
+        slots = free[:b]
+        self.executor.restore_state(group, slots, rid, p.state,
+                                    p.run.decision.mask, rows)
+        run = p.run
+        run.group, run.slots = group, slots
+        if force:
+            run.pinned = True      # liveness: must drain, never re-spill
+        del self._preempted[rid]
+        self._running[rid] = run
+        self._resume_samples.append(self._now() - p.preempted_t)
+        self._stall_ticks = 0
+        return True
+
+    def _force_resume(self) -> bool:
+        """Deadlock backstop: restore the most-important preempted
+        request ignoring the elastic budget (physical page/slot capacity
+        still checked — with an idle engine every page is free, so this
+        succeeds unless the pool itself shrank). The resurrected run is
+        PINNED — exempt from re-preemption — so it decodes to completion
+        one victim at a time instead of livelocking through an endless
+        spill/resume cycle when the shocked budget cannot host even one
+        request; the overshoot is bounded by that single run."""
+        for rid in reversed(list(self._preempted)):
+            if self._resume_one(rid, float("inf"), force=True):
+                return True
+        return False
+
+    # --------------------------------------------------------- cancellation
+    def cancel(self, rid: str) -> bool:
+        """Cancel a request at ANY lifecycle stage — pending, queued,
+        prefilling, decoding mid-horizon, or preempted. Returns True if
+        the request was found and cancelled; False for unknown, already
+        finished, or already cancelled ids (idempotent — double-cancel
+        and cancel racing a normal completion are both no-ops). Tokens a
+        cancelled decode over-generated inside its in-flight horizon are
+        truncated: fold-back skips rids no longer in the running set.
+        Pages are freed via the pool's ``missing_ok`` seam, so the free
+        cannot race a completion's."""
+        for i, req in enumerate(self._pending):
+            if req.rid == rid:
+                self._pending.pop(i)
+                self._record_cancelled(req)
+                return True
+        req = self.scheduler.peek(rid)
+        if req is not None:
+            self.scheduler.remove(rid)
+            self._record_cancelled(req)
+            return True
+        pf = self._prefilling.pop(rid, None)
+        if pf is not None:
+            pf.group.evict(pf.slots)
+            self.pool.free(rid, missing_ok=True)
+            self._record_cancelled(pf.req, decision=pf.decision,
+                                   admitted_t=pf.admitted_t,
+                                   kv_bytes=pf.kv_bytes, bucket=pf.bucket)
+            return True
+        run = self._running.pop(rid, None)
+        if run is not None:
+            run.group.evict(run.slots)
+            self.pool.free(rid, missing_ok=True)
+            self._record_cancelled(run.req, decision=run.decision,
+                                   admitted_t=run.admitted_t,
+                                   kv_bytes=run.kv_bytes, bucket=run.bucket,
+                                   out=run.out, events=run.events)
+            return True
+        p = self._preempted.pop(rid, None)
+        if p is not None:
+            self.pool.drop_spilled(rid, missing_ok=True)
+            run = p.run
+            self._record_cancelled(run.req, decision=run.decision,
+                                   admitted_t=run.admitted_t,
+                                   kv_bytes=run.kv_bytes, bucket=run.bucket,
+                                   out=run.out, events=run.events)
+            return True
+        return False
+
+    def _record_cancelled(self, req: EngineRequest, *, decision=None,
+                          admitted_t: float = -1.0, kv_bytes: float = 0.0,
+                          bucket: Tuple = (), out=None, events=None) -> None:
+        now = self._now()
+        d = decision
+        tokens = np.stack(out, axis=1) if out else None
+        ttft = (events[0][0] - req.arrival_t) if events else -1.0
+        self._results.append(RequestResult(
+            rid=req.rid, status="cancelled", tokens=tokens,
+            mask=(d.mask if d is not None else None), bucket=bucket,
+            arrival_t=req.arrival_t, admitted_t=admitted_t,
+            finished_t=now,
+            queue_delay_s=(admitted_t - req.arrival_t if admitted_t >= 0.0
+                           else now - req.arrival_t),
+            decide_s=(d.latency_s if d is not None else 0.0),
+            fits=(d.fits if d is not None else False),
+            cached_decision=(d.cached if d is not None else False),
+            peak_bytes=(d.peak_bytes if d is not None else 0.0),
+            kv_bytes=kv_bytes, reason="cancelled", ttft_s=ttft))
+
+    # --------------------------------------------------------- fault safety
+    def _abort_cleanup(self) -> None:
+        """Release everything a raising run would otherwise leak into the
+        next run() on this engine: pool ledger entries (live AND
+        spilled), seated slots, and the queues. Idempotent via the pool's
+        missing_ok seam."""
+        if self.pool is not None:
+            for rid in list(self.pool.live_requests()):
+                self.pool.free(rid, missing_ok=True)
+            for rid in list(self.pool.spilled_requests()):
+                self.pool.drop_spilled(rid, missing_ok=True)
+        try:
+            self.executor.evict_all()
+        except Exception:
+            pass                      # executor may be mid-wreck already
+        self._running.clear()
+        self._prefilling.clear()
+        self._preempted.clear()
+        self.scheduler.clear()
+        self._pending = []
 
     # ----------------------------------------------------------- admission
     def _reject(self, req: EngineRequest, reason: str) -> None:
@@ -627,6 +1051,18 @@ class RAPEngine:
             # are physically narrower, so page counts already shrank, and
             # the pool's in_use_scale converts the analytical charge.)
             kv_bytes *= _kv_byte_ratio(d.kv_dtype, self.mcfg)
+        if self._budget_trace is not None and self.cfg.admission == "strict":
+            # elastic-budget gate: the pool's capacity was sized from the
+            # BASE budget and cannot see a mid-run shrink, so admission
+            # additionally checks the request's worst-case reservation
+            # against the CURRENT budget — otherwise a shock would admit
+            # into bytes the trace just took away and immediately preempt
+            worst = (self.pool.pages_for_tokens(b, total)
+                     * self.pool.page_bytes if self._paged
+                     else self.pool.pages_needed(kv_bytes)
+                     * self.pool.page_bytes)
+            if self.pool.bytes_reserved + worst > self._kv_budget() + 1e-6:
+                return "defer"
         force = self.cfg.admission == "force"
         if self._paged:
             # page-granular admission: the paged path physically stores
@@ -871,9 +1307,14 @@ class RAPEngine:
                 else -1.0)
         if run.events:
             self._ttft_samples.append(ttft)
+            # a preempted request's resume gap lands in its stream as one
+            # huge inter-token latency: pool those samples separately so
+            # untouched requests' ITL percentiles stay meaningful
+            sink = (self._itl_preempted_samples if run.preempt_count > 0
+                    else self._itl_samples)
             prev = run.events[0][0]
             for t, n in run.events[1:]:
-                self._itl_samples.extend([(t - prev) / max(n, 1)] * n)
+                sink.extend([(t - prev) / max(n, 1)] * n)
                 prev = t
         result = RequestResult(
             rid=run.req.rid, status="done",

@@ -519,6 +519,26 @@ class ModelExecutor:
         toks, new = self.decode_horizon(group, 1)
         return toks[:, 0], new
 
+    # ---------------------------------------------------- preemption seam
+    def spill_state(self, group: SlotGroup, slots: List[int]) -> dict:
+        """Host-side copy of everything the executor holds for the request
+        resident in ``slots`` — enough for :meth:`restore_state` to reseat
+        it bitwise after its device memory was reclaimed. Called BEFORE the
+        group eviction / pool spill; pairs with ``KVPool.spill`` (which
+        carries the physical page contents on paged backends)."""
+        raise NotImplementedError
+
+    def restore_state(self, group: SlotGroup, slots: List[int], rid: str,
+                      state: dict, mask: Optional[np.ndarray],
+                      rows: Optional[List[List[int]]] = None) -> None:
+        """Reseat a previously spilled request into ``slots`` of ``group``
+        from its :meth:`spill_state` snapshot. ``rows`` carries the
+        re-granted page ids on paged backends (``KVPool.restore``'s
+        return); slot backends reconstruct from the snapshot alone. The
+        reseated decode state is exactly what an unpreempted run would
+        hold, so the continued token stream is bitwise-identical."""
+        raise NotImplementedError
+
     def groups(self) -> List[SlotGroup]:
         raise NotImplementedError
 
@@ -730,6 +750,37 @@ class LocalExecutor(ModelExecutor):
                     task.mask if group.gated else None, S, first)
         task.state = None
         return first
+
+    # ---------------------------------------------------- preemption seam
+    def spill_state(self, group: SlotGroup, slots: List[int]) -> dict:
+        """Gather the request's slot-cache rows (every cache leaf,
+        positions, seed tokens) to host arrays. The gather reuses the
+        group's cached device index vector; ``np.asarray`` round-trips
+        f32/bf16/int8 exactly, so reseating is bitwise. Works unchanged on
+        mesh-resident groups — the host copy implicitly gathers shards."""
+        iidx = group._iidx(list(slots))
+        cache = {}
+        for k, v in group.cache.items():
+            if k == "pos":
+                continue
+            cache[k] = jax.tree.map(lambda a: np.asarray(a[:, iidx]), v)
+        pos = np.asarray(group.cache["pos"])
+        return {"cache": cache,
+                # one request's rows share one position (placed together,
+                # stepped together)
+                "pos": int(pos[slots[0]]),
+                "first": np.asarray(group.tokens)[np.asarray(slots), 0]}
+
+    def restore_state(self, group: SlotGroup, slots: List[int], rid: str,
+                      state: dict, mask: Optional[np.ndarray],
+                      rows: Optional[List[List[int]]] = None) -> None:
+        """Reseat via the ordinary fused placement update: the snapshot's
+        cache rows have the same shapes a monolithic prefill produces, so
+        this reuses the compiled placement executable (and, on sharded
+        groups, its pinned output shardings)."""
+        group.place(rid, list(slots), state["cache"],
+                    mask if group.gated else None, state["pos"],
+                    state["first"])
 
     # -------------------------------------------------------------- decode
     def decode_launch(self, group: SlotGroup,
@@ -1192,6 +1243,28 @@ class PagedExecutor(ModelExecutor):
                     np.asarray(task.gates["mixer"]),
                     np.asarray(task.gates["ffn"]))
         return first
+
+    # ---------------------------------------------------- preemption seam
+    def spill_state(self, group: PagedGroup, slots: List[int]) -> dict:
+        """Paged decode state outside the pool is tiny: the write position
+        and the per-row seed token (the page contents travel with
+        ``KVPool.spill``)."""
+        return {"pos": int(group.pos[slots[0]]),
+                "first": group.tokens[np.asarray(slots)].copy()}
+
+    def restore_state(self, group: PagedGroup, slots: List[int], rid: str,
+                      state: dict, mask: Optional[np.ndarray],
+                      rows: Optional[List[List[int]]] = None) -> None:
+        """Reseat with the re-granted page ids (``KVPool.restore``'s rows
+        — same per-row layout, contents written back bitwise): one fused
+        placement update rebuilds table/pos/tokens/gates exactly as an
+        unpreempted resident would hold them."""
+        if rows is None:
+            rows = self.pool.row_pages(rid)
+        g = masks_lib.mask_to_gates(mask)
+        group.place(rid, list(slots), np.asarray(rows, np.int32),
+                    state["pos"], state["first"],
+                    np.asarray(g["mixer"]), np.asarray(g["ffn"]))
 
     # -------------------------------------------------------------- decode
     def _decode_batch(self, group: PagedGroup) -> List[int]:

@@ -431,7 +431,17 @@ def test_engine_config_validation():
         EngineConfig(decode_buckets=(0, 2))
     with pytest.raises(ValueError, match="len_buckets"):
         EngineConfig(len_buckets="linear")
-    EngineConfig(budget_quantum_frac=0.0, max_active=1, tokens_per_page=1)
+    with pytest.raises(ValueError, match="preemption_enabled"):
+        EngineConfig(preemption_enabled=1)
+    with pytest.raises(ValueError, match="spill_headroom_frac"):
+        EngineConfig(spill_headroom_frac=1.0)
+    with pytest.raises(ValueError, match="spill_headroom_frac"):
+        EngineConfig(spill_headroom_frac=-0.1)
+    with pytest.raises(ValueError, match="victim_policy"):
+        EngineConfig(victim_policy="coinflip")
+    EngineConfig(budget_quantum_frac=0.0, max_active=1, tokens_per_page=1,
+                 preemption_enabled=False, spill_headroom_frac=0.0,
+                 victim_policy="arrival")
 
 
 def _two_prompts(batch):
@@ -711,3 +721,345 @@ def test_sharded_executor_places_params_and_serves(served):
         ShardedExecutor(model, mesh, params=params, mode="structural")
     with pytest.raises(RuntimeError, match="params"):
         ShardedExecutor(model, mesh).group_for(full, 32)
+
+
+# ------------------------------------- elastic budgets / spill / cancel
+# (DESIGN.md §10). Budget shocks in tests are TICK-counting staircases
+# (repro.runtime.scenarios.TickStaircase): the engine evaluates callable
+# traces once per tick, so the shock hits after a deterministic number of
+# ticks regardless of how long a tick takes on the host running the test.
+
+
+def _shock_engine(served, *, kind="paged", max_new=6, horizon=2, chunk=0,
+                  scheduler=None, victim_policy="scheduler",
+                  preemption_enabled=True):
+    model, params, batch, mm, c = served
+    full = masks.full_mask(model.cfg.n_layers)
+    budget = mm.param_bytes(full) + 2.5 * mm.state_bytes(full, 1, 30)
+    ex = (PagedExecutor(model, params, max_active=4) if kind == "paged"
+          else None)
+    eng = RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=max_new, max_active=4, max_len=32,
+        budget_bytes=budget, tokens_per_page=8, decode_horizon=horizon,
+        max_prefill_tokens=chunk, victim_policy=victim_policy,
+        preemption_enabled=preemption_enabled),
+        executor=ex, scheduler=scheduler)
+    toks = np.asarray(batch["tokens"])
+    prompts = [toks[:1, : (16 if i % 2 else 24)] for i in range(6)]
+    return eng, _reqs(prompts), budget
+
+
+def _kv_staircase(eng, budget, down, up, frac=0.5):
+    """Tick staircase cutting FRAC of the KV headroom (params stay
+    resident; cutting the total would zero the pool at smoke scale)."""
+    from repro.runtime import TickStaircase
+    kv = budget - eng.resident_param_bytes
+    shocked = (eng.resident_param_bytes + (1.0 - frac) * kv) / budget
+    return TickStaircase(budget, [(down, 1.0), (up - down, shocked),
+                                  (0, 1.0)])
+
+
+def test_select_victims_priority_and_aging():
+    """SLO-tier victim order: lowest effective priority (largest numeric
+    rank, aged by waiting time) first, most-remaining-work tiebreak, then
+    newest arrival — and the base scheduler (no priority notion) falls
+    through to the tiebreaks."""
+    from repro.runtime import FIFOScheduler, PriorityScheduler
+    from repro.runtime.scheduler import VictimCandidate
+
+    def cand(rid, prio, arr, rem):
+        return VictimCandidate(rid=rid, priority=prio, arrival_t=arr,
+                               remaining_tokens=rem, reserved_bytes=100.0)
+
+    pr = PriorityScheduler(aging_s=10.0)
+    # low tier (rank 2) yields before high tier (rank 0)
+    order = pr.select_victims([cand("hi", 0, 0.0, 4),
+                               cand("lo", 2, 0.0, 4)], now=1.0)
+    assert [c.rid for c in order] == ["lo", "hi"]
+    # aging: a low-tier request that waited 3 levels' worth outranks a
+    # fresh mid-tier one (preempted later), same contract admission has
+    order = pr.select_victims([cand("old-lo", 2, 0.0, 4),
+                               cand("new-mid", 1, 29.0, 4)], now=30.0)
+    assert [c.rid for c in order] == ["new-mid", "old-lo"]
+    # ties: most remaining work yields first, then newest arrival
+    fifo = FIFOScheduler()
+    order = fifo.select_victims([cand("short", 0, 0.0, 1),
+                                 cand("long", 0, 0.0, 9)], now=0.0)
+    assert [c.rid for c in order] == ["long", "short"]
+    order = fifo.select_victims([cand("early", 0, 0.0, 4),
+                                 cand("late", 0, 5.0, 4)], now=9.0)
+    assert [c.rid for c in order] == ["late", "early"]
+
+
+def test_engine_preempts_and_drains_under_shock(served):
+    """A mid-serve KV-budget cut preempts victims (pages spilled to host)
+    and the run still completes every request, token-identical to an
+    unshocked run; the pool ends fully drained and the report carries the
+    preemption accounting."""
+    eng, reqs, budget = _shock_engine(served)
+    ref = eng.run(reqs)
+    assert all(r.status == "done" for r in ref.results)
+    eng2, reqs2, _ = _shock_engine(served)
+    rep = eng2.run(reqs2, budget_trace=_kv_staircase(eng2, budget, 4, 12,
+                                                     frac=0.6))
+    assert rep.preempted_count > 0 and rep.spilled_mb > 0.0
+    assert rep.resume_latency["count"] >= 1
+    assert len(rep.budget_events) >= 3       # full → shocked → recovered
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert len(done) == len(reqs2)
+    for r in ref.results:
+        np.testing.assert_array_equal(r.tokens, done[r.rid].tokens)
+    st = eng2.pool.stats()
+    assert st["live_requests"] == 0 and st["spilled_requests"] == 0
+    assert st["free_pages"] == st["n_pages"]
+    # preempted requests' ITL pooled separately from untouched ones
+    assert rep.itl_preempted["count"] > 0
+    assert rep.itl["count"] > 0
+
+
+def test_engine_preemption_disabled_still_gates_admission(served):
+    """preemption_enabled=False: a shock never evicts running requests
+    (preempted_count == 0) but the shrunken budget still defers NEW
+    admissions; the run drains once the budget recovers."""
+    eng, reqs, budget = _shock_engine(served, preemption_enabled=False)
+    rep = eng.run(reqs, budget_trace=_kv_staircase(eng, budget, 4, 12,
+                                                   frac=0.6))
+    assert rep.preempted_count == 0
+    assert all(r.status == "done" for r in rep.results)
+
+
+def test_engine_force_resume_drains_without_recovery(served):
+    """A trace that never recovers must not deadlock: the idle-engine
+    backstop force-resumes preempted requests (physical capacity checks
+    only) and the run drains."""
+    from repro.runtime import TickStaircase
+    eng, reqs, budget = _shock_engine(served)
+    kv = budget - eng.resident_param_bytes
+    never_up = TickStaircase(budget, [
+        (4, 1.0), (0, (eng.resident_param_bytes + 0.3 * kv) / budget)])
+    rep = eng.run(reqs, budget_trace=never_up)
+    assert rep.preempted_count > 0
+    # every ADMITTED request drains to completion (force-resumed victims
+    # included); requests the shocked budget can never admit are rejected
+    # loudly rather than spun on forever
+    by_status = {}
+    for r in rep.results:
+        by_status.setdefault(r.status, []).append(r)
+    assert by_status.get("done"), "nothing drained"
+    assert set(by_status) <= {"done", "rejected"}
+    for r in by_status.get("rejected", []):
+        assert "budget" in (r.reason or "") or "deferred" in (r.reason or "")
+    st = eng.pool.stats()
+    assert st["live_requests"] == 0 and st["spilled_requests"] == 0
+
+
+def test_engine_cancel_every_lifecycle_stage(served):
+    """cancel(rid) is safe at every stage: pending (not yet arrived),
+    queued, prefilling, decoding mid-horizon, and preempted — plus
+    double-cancel and unknown-rid no-ops. Pool drains to zero live rids
+    and zero leaked pages."""
+    model, params, batch, mm, c = served
+    full = masks.full_mask(model.cfg.n_layers)
+    toks = np.asarray(batch["tokens"])
+    budget = mm.param_bytes(full) + 2.0 * mm.state_bytes(full, 1, 30)
+    eng = RAPEngine(model, params, RLPolicy(c), EngineConfig(
+        mode="masked", max_new_tokens=8, max_active=2, max_len=32,
+        budget_bytes=budget, tokens_per_page=8, decode_horizon=2,
+        max_prefill_tokens=8),
+        executor=PagedExecutor(model, params, max_active=2))
+    # r5 arrives far in the future → stays pending; 2 slots force a queue
+    reqs = [EngineRequest(rid=f"r{i}", prompt=toks[:1, :24],
+                          arrival_t=0.001 * i, max_new=8) for i in range(5)]
+    reqs.append(EngineRequest(rid="r5", prompt=toks[:1, :16],
+                              arrival_t=120.0, max_new=8))
+    staircase = _kv_staircase(eng, budget, 6, 10 ** 9, frac=0.7)
+    state = {"tick": 0, "hit": set()}
+
+    def on_tick(e):
+        state["tick"] += 1
+        assert e.cancel("nonexistent") is False
+        if "pending" not in state["hit"] and any(
+                r.rid == "r5" for r in e._pending):
+            assert e.cancel("r5") is True
+            assert e.cancel("r5") is False          # double-cancel no-op
+            state["hit"].add("pending")
+        if "queued" not in state["hit"] and "r4" in e.scheduler:
+            assert e.cancel("r4") is True
+            state["hit"].add("queued")
+        if "prefilling" not in state["hit"] and e._prefilling:
+            rid = next(iter(e._prefilling))
+            assert e.cancel(rid) is True
+            state["hit"].add("prefilling")
+        elif "running" not in state["hit"] and e._running:
+            rid = next(iter(e._running))
+            assert e.cancel(rid) is True            # mid-horizon: scan in
+            assert e.cancel(rid) is False           # flight right now
+            state["hit"].add("running")
+        if "preempted" not in state["hit"] and e._preempted:
+            rid = next(iter(e._preempted))
+            assert e.cancel(rid) is True
+            state["hit"].add("preempted")
+
+    rep = eng.run(reqs, budget_trace=staircase, on_tick=on_tick)
+    assert {"pending", "queued", "prefilling", "running",
+            "preempted"} <= state["hit"]
+    by = {r.rid: r for r in rep.results}
+    assert by["r5"].status == "cancelled" and by["r4"].status == "cancelled"
+    assert rep.cancelled == sum(1 for r in rep.results
+                                if r.status == "cancelled") >= 5
+    st = eng.pool.stats()
+    assert st["live_requests"] == 0 and st["spilled_requests"] == 0
+    assert st["free_pages"] == st["n_pages"]
+
+
+def test_engine_cancel_races_completion_safely(served):
+    """The missing_ok seam from the engine API: cancelling a rid that
+    completed earlier in the same run is a no-op (False), and a cancelled
+    request's tokens are truncated to what it had generated — fold-back
+    never resurrects it."""
+    eng, reqs, budget = _shock_engine(served, max_new=4)
+    finished = {}
+    did_cancel = []
+
+    def on_tick(e):
+        for r in e._results:
+            if r.status == "done" and r.rid not in finished:
+                finished[r.rid] = True
+                assert e.cancel(r.rid) is False     # racing a completion
+        if finished and not did_cancel and e._running:
+            did_cancel.append(True)
+            rid = next(iter(e._running))
+            run = e._running[rid]
+            n_before = len(run.out)
+            assert e.cancel(rid) is True
+            res = next(x for x in e._results if x.rid == rid)
+            n_tokens = 0 if res.tokens is None else res.tokens.shape[1]
+            assert n_tokens == n_before < run.max_new
+
+    rep = eng.run(reqs, on_tick=on_tick)
+    assert rep.cancelled == 1
+    assert sum(1 for r in rep.results if r.status == "done") == len(reqs) - 1
+    st = eng.pool.stats()
+    assert st["live_requests"] == 0 and st["free_pages"] == st["n_pages"]
+
+
+def test_engine_cancellation_storm_no_leaks(served):
+    """Deterministic tier-1 cancellation storm (the bench hard-gates the
+    same invariants): ≥25% of requests cancelled at random lifecycle
+    stages under a concurrent budget shock — zero live rids, zero leaked
+    pages, zero spilled leftovers, no deadlock."""
+    from repro.runtime import run_cancellation_storm
+    eng, reqs, budget = _shock_engine(served, max_new=6)
+    res = run_cancellation_storm(
+        eng, reqs, cancel_frac=0.34, seed=5,
+        budget_trace=_kv_staircase(eng, budget, 4, 14, frac=0.6))
+    assert res["cancelled"] >= res["cancel_quota"] >= 2
+    assert res["live_requests"] == 0
+    assert res["leaked_pages"] == 0
+    assert res["spilled_requests"] == 0
+    assert res["done"] + res["cancelled"] == len(reqs)
+    assert not res["deadlock"]
+
+
+def test_run_exception_releases_pool(served):
+    """A run that raises mid-serve releases pages, commitments, spilled
+    copies, and seated slots — the next run() on the same engine starts
+    from a clean ledger (the cross-run rid-leak fix)."""
+    eng, reqs, budget = _shock_engine(served)
+
+    class Boom(RuntimeError):
+        pass
+
+    def bomb(e):
+        if e._running and e._preempted:
+            raise Boom("fault injection")
+
+    with pytest.raises(Boom):
+        eng.run(reqs, budget_trace=_kv_staircase(eng, budget, 3, 10 ** 9,
+                                                 frac=0.7), on_tick=bomb)
+    st = eng.pool.stats()
+    assert st["live_requests"] == 0 and st["spilled_requests"] == 0
+    assert st["free_pages"] == st["n_pages"]
+    assert not eng._running and not eng._preempted and not eng._prefilling
+    # the engine is reusable: a fresh run serves normally
+    rep = eng.run(reqs)
+    assert all(r.status == "done" for r in rep.results)
+    st = eng.pool.stats()
+    assert st["live_requests"] == 0 and st["free_pages"] == st["n_pages"]
+
+
+def test_kv_pool_spill_restore_roundtrip_bitwise():
+    """Unit-level spill→restore on a physical int8 pool: page contents
+    and scale rows written back bitwise into freshly granted pages, the
+    free list and commitments restored exactly."""
+    import jax.numpy as jnp
+    pt, K, D, layers = 2, 2, 4, 2
+    page_bytes = 2 * layers * pt * K * D * 1 + 2 * layers * K * 4
+    pool = KVPool(8 * page_bytes, page_bytes=page_bytes, tokens_per_page=pt)
+    pool.allocate_physical(n_layers=layers, n_kv_heads=K, head_dim=D,
+                           dtype=jnp.float32, kv_dtype="int8")
+    pool.alloc_tokens("a", 2, 3, max_tokens=6, in_use_bytes=6.0,
+                      in_use_per_token=1.0, kv_dtype="int8")
+    rows = pool.row_pages("a")
+    rng = np.random.default_rng(0)
+    ids = [p for row in rows for p in row]
+    k_ref = rng.integers(-127, 127, (layers, len(ids), pt, K, D),
+                         dtype=np.int8)
+    s_ref = rng.uniform(0.1, 2.0, (layers, len(ids), K)).astype(np.float32)
+    idx = jnp.asarray(np.asarray(ids, np.int32))
+    pool.k_pages = pool.k_pages.at[:, idx].set(jnp.asarray(k_ref))
+    pool.v_pages = pool.v_pages.at[:, idx].set(jnp.asarray(k_ref))
+    pool.k_scales = pool.k_scales.at[:, idx].set(jnp.asarray(s_ref))
+    pool.v_scales = pool.v_scales.at[:, idx].set(jnp.asarray(s_ref))
+    reserved_before = pool.bytes_reserved
+    freed = pool.spill("a")
+    assert freed == reserved_before
+    assert pool.bytes_reserved == 0 and pool.committed_pages == 0
+    assert sorted(pool._free) == list(range(pool.n_pages))
+    assert pool.spilled_requests() == ["a"]
+    # clobber the old pages: restore must not depend on them
+    pool.k_pages = pool.k_pages.at[:, idx].set(0)
+    pool.k_scales = pool.k_scales.at[:, idx].set(0.0)
+    # occupy some pages so the restore lands on a DIFFERENT layout
+    pool.alloc_tokens("b", 1, 2 * pt, max_tokens=2 * pt,
+                      in_use_bytes=1.0, in_use_per_token=0.5,
+                      kv_dtype="int8")
+    assert pool.can_restore("a")
+    new_rows = pool.restore("a")
+    assert pool.bytes_reserved == reserved_before + pool.page_bytes * 2
+    new_ids = [p for row in new_rows for p in row]
+    nidx = jnp.asarray(np.asarray(new_ids, np.int32))
+    np.testing.assert_array_equal(np.asarray(pool.k_pages[:, nidx]), k_ref)
+    np.testing.assert_array_equal(np.asarray(pool.v_pages[:, nidx]), k_ref)
+    np.testing.assert_array_equal(np.asarray(pool.k_scales[:, nidx]), s_ref)
+    np.testing.assert_array_equal(np.asarray(pool.v_scales[:, nidx]), s_ref)
+    # token extension works after restore exactly as before the spill
+    pool.extend("a", 3)
+    pool.free("a")
+    pool.free("b")
+    assert pool.bytes_reserved == 0
+    assert sorted(pool._free) == list(range(pool.n_pages))
+    # drop_spilled is idempotent like free(missing_ok=True)
+    assert pool.drop_spilled("a", missing_ok=True) is False
+    with pytest.raises(ValueError, match="drop_spilled"):
+        pool.drop_spilled("a")
+
+
+def test_kv_pool_spill_guards():
+    """Spill/restore edge contracts: unknown rids raise with the spilled
+    set named, double-spill is impossible (rid leaves the live set), and
+    a rid cannot be re-allocated while spilled."""
+    pool = KVPool(800, page_bytes=100, tokens_per_page=2)
+    pool.alloc_tokens("a", 1, 2, max_tokens=4, in_use_bytes=2.0,
+                      in_use_per_token=1.0)
+    pool.spill("a")
+    with pytest.raises(ValueError, match="spill"):
+        pool.spill("a")                    # no longer live
+    with pytest.raises(ValueError, match="already"):
+        pool.alloc_tokens("a", 1, 2, max_tokens=4, in_use_bytes=2.0,
+                          in_use_per_token=1.0)
+    with pytest.raises(ValueError, match="restore"):
+        pool.restore("zzz")
+    pool.restore("a")
+    assert pool.spilled_requests() == []
+    pool.free("a")

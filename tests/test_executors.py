@@ -23,10 +23,10 @@ import numpy as np
 import pytest
 
 from repro.core import masks
-from repro.core.policy import RLPolicy
+from repro.core.policy import DensePolicy, RLPolicy
 from repro.launch.mesh import make_host_mesh, make_serve_mesh
 from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
-                           RAPEngine, ShardedExecutor)
+                           RAPEngine, ShardedExecutor, TickStaircase)
 
 EXECUTORS = {
     "local": lambda model, params, slots, kv_dtype=None: None,  # engine default
@@ -58,8 +58,8 @@ def _reqs(prompts, max_new=None, rate=1000.0, seed=0):
 
 
 def _engine(model, params, c, kind, *, budget, max_new, slots=4, max_len=32,
-            horizon=8, chunk=0, kv_dtype=None):
-    return RAPEngine(model, params, RLPolicy(c), EngineConfig(
+            horizon=8, chunk=0, kv_dtype=None, policy=None):
+    return RAPEngine(model, params, policy or RLPolicy(c), EngineConfig(
         mode="masked", max_new_tokens=max_new, max_active=slots,
         max_len=max_len, budget_bytes=budget, tokens_per_page=8,
         kv_dtype=kv_dtype, decode_horizon=horizon,
@@ -451,3 +451,92 @@ def test_sharded_horizon_zero_transfers_when_warm(tiny_model):
     assert idx is None                              # full width, always
     toks = np.asarray(toks_dev)                     # the one read-back
     assert toks.shape == (4, 4)
+
+
+# ------------------------------------------- elastic-budget preemption
+# (DESIGN.md §10): a mid-serve budget shock forces KV spill to host and
+# later resume; the token streams must be BITWISE identical to the
+# unshocked run on every backend — preemption must be unobservable in
+# the output, exactly like the decode horizon above.
+
+def _kv_staircase(eng, budget, down, up, frac=0.45):
+    """Tick staircase cutting ``frac`` of the KV headroom (budget minus
+    resident params) between ticks ``down`` and ``up``; see
+    run_budget_shock for why the cut targets the KV share."""
+    params_b = float(eng.resident_param_bytes)
+    kv = max(budget - params_b, 0.0)
+    shocked = (params_b + (1.0 - frac) * kv) / budget
+    return TickStaircase(budget, [(down, 1.0), (up - down, shocked),
+                                  (0, 1.0)])
+
+
+@pytest.mark.parametrize("kind", EXECUTOR_PARAMS)
+def test_preemption_spill_restore_bitwise(served, kind):
+    """Spill→restore round-trip under a mid-serve KV budget shock is
+    bitwise: every request completes with the SAME tokens and mask as the
+    unshocked oracle, at least one request was actually preempted, and
+    the pool drains clean.
+
+    Both runs use DensePolicy so the keep-mask cannot depend on the live
+    budget: an adaptive policy legitimately prunes differently for
+    requests ADMITTED during the shock window (that is the paper's
+    point), which would flip tokens without any spill-path bug. Pinning
+    the decision isolates exactly what this test owns — preemption must
+    be unobservable in the output."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    ref_eng = _engine(model, params, c, kind, budget=budget, max_new=6,
+                      horizon=2, policy=DensePolicy(mm))
+    ref = {r.rid: r for r in ref_eng.run(_reqs(prompts, max_new=6)).results
+           if r.status == "done"}
+    eng = _engine(model, params, c, kind, budget=budget, max_new=6,
+                  horizon=2, policy=DensePolicy(mm))
+    rep = eng.run(_reqs(prompts, max_new=6),
+                  budget_trace=_kv_staircase(eng, budget, down=4, up=14))
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert rep.preempted_count > 0, f"{kind}: shock never preempted"
+    assert rep.spilled_mb > 0
+    assert set(done) == set(ref) == {f"r{i}" for i in range(8)}
+    for rid, r in ref.items():
+        np.testing.assert_array_equal(
+            r.tokens, done[rid].tokens,
+            err_msg=f"{kind}: preemption changed tokens on {rid}")
+        np.testing.assert_array_equal(r.mask, done[rid].mask)
+    assert rep.pool["reserved_bytes"] == 0
+    assert rep.pool["spilled_requests"] == 0
+    assert rep.pool["free_pages"] == rep.pool["n_pages"]
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_paged_preemption_bitwise_fp32_and_int8(served, kv_dtype):
+    """The paged pool's PHYSICAL spill path (page gather → host → page
+    scatter, including int8 quantization scale rows) round-trips bitwise:
+    the shocked run reproduces the same-precision unshocked oracle
+    token-for-token. fp32 and int8 pools are separate oracles — int8 is
+    compared against int8, so any scale-row corruption on the spill path
+    shows up as a token flip. DensePolicy pins the keep-mask (see
+    test_preemption_spill_restore_bitwise) so only the spill path can
+    flip a token."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    ref_eng = _engine(model, params, c, "paged", budget=budget, max_new=6,
+                      horizon=2, kv_dtype=kv_dtype, policy=DensePolicy(mm))
+    ref = {r.rid: r for r in ref_eng.run(_reqs(prompts, max_new=6)).results
+           if r.status == "done"}
+    eng = _engine(model, params, c, "paged", budget=budget, max_new=6,
+                  horizon=2, kv_dtype=kv_dtype, policy=DensePolicy(mm))
+    # int8 pages reserve ~4x less, so the shock must cut deeper to evict
+    frac = 0.45 if kv_dtype is None else 0.8
+    rep = eng.run(_reqs(prompts, max_new=6),
+                  budget_trace=_kv_staircase(eng, budget, down=4, up=14,
+                                             frac=frac))
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert rep.preempted_count > 0
+    assert set(done) == set(ref)
+    for rid, r in ref.items():
+        np.testing.assert_array_equal(
+            r.tokens, done[rid].tokens,
+            err_msg=f"kv_dtype={kv_dtype}: spill path changed tokens "
+                    f"on {rid}")
+    assert rep.pool["reserved_bytes"] == 0
+    assert rep.pool["free_pages"] == rep.pool["n_pages"]

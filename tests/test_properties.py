@@ -313,3 +313,87 @@ def test_int8_kv_quant_roundtrip(x):
     deq = q.astype(jnp.float32) * scale
     err = np.abs(np.asarray(deq - arr))
     assert err.max() <= float(scale.max()) * 0.51 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_kv_pool_spill_restore_interleave_conserves(data):
+    """Spill/restore (DESIGN.md §10) interleaved with alloc/extend/free on
+    an int8 physical pool: pages and scale rows are conserved after EVERY
+    op, a spill releases exactly its reservation, ``can_restore`` is an
+    accurate oracle (True ⇒ restore succeeds, token-kind False ⇒ restore
+    raises PoolExhausted), and draining live + spilled ends with the full
+    free list — no page can leak through any preempt/resume/cancel
+    interleaving."""
+    n_pages = data.draw(st.integers(2, 10), label="n_pages")
+    pt = data.draw(st.integers(1, 4), label="tokens_per_page")
+    K, D, layers = 2, 4, 2
+    page_bytes = 2 * layers * pt * K * D * 1 + 2 * layers * K * 4
+    pool = KVPool(n_pages * page_bytes, page_bytes=page_bytes,
+                  tokens_per_page=pt)
+    pool.allocate_physical(n_layers=layers, n_kv_heads=K, head_dim=D,
+                           dtype=jnp.float32, kv_dtype="int8")
+    sshape = (layers, pool.n_pages + 1, K)
+    model_tok = 2 * K * D * 4 * layers
+    seen = [0]
+    rids = [f"s{i}" for i in range(4)]
+    for step in range(data.draw(st.integers(1, 22), label="n_ops")):
+        rid = data.draw(st.sampled_from(rids), label=f"rid{step}")
+        if rid in pool._tok:
+            op = data.draw(st.sampled_from(["extend", "spill", "free"]),
+                           label=f"op{step}")
+            st_alloc = pool._tok[rid]
+            if op == "extend" and st_alloc.seq_tokens < st_alloc.max_tokens:
+                pool.extend(rid, 1)
+            elif op == "spill":
+                before = pool.bytes_reserved
+                released = pool.spill(rid)
+                # a spill releases exactly the reservation it held
+                assert released == pytest.approx(st_alloc.reserved_bytes)
+                assert pool.bytes_reserved == pytest.approx(
+                    before - released)
+                assert rid in pool.spilled_requests()
+            else:
+                pool.free(rid)
+        elif rid in pool._spilled:
+            op = data.draw(st.sampled_from(["restore", "drop"]),
+                           label=f"op{step}")
+            if op == "drop":
+                assert pool.drop_spilled(rid) is True
+                assert pool.drop_spilled(rid, missing_ok=True) is False
+            elif pool.can_restore(rid):
+                rows = pool.restore(rid)
+                assert rid in pool._tok and rows is not None
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.restore(rid)
+                assert rid in pool._spilled   # still restorable later
+        else:
+            batch = data.draw(st.integers(1, 2), label=f"b{step}")
+            n_tok = data.draw(st.integers(1, 3 * pt), label=f"n{step}")
+            max_tok = data.draw(st.integers(n_tok, 4 * pt),
+                                label=f"m{step}")
+            rate = data.draw(st.floats(0.0, float(model_tok)),
+                             label=f"rate{step}")
+            try:
+                pool.alloc_tokens(rid, batch, n_tok, max_tokens=max_tok,
+                                  in_use_bytes=rate * n_tok * batch,
+                                  in_use_per_token=rate * batch,
+                                  kv_dtype="int8")
+            except PoolExhausted:
+                assert not pool.can_alloc_tokens(batch, max_tok)
+        _pool_invariants(pool, n_pages, seen)
+        assert pool.bytes_in_use <= pool.bytes_reserved + 1e-6
+        # scale-row conservation across spill/restore scatter-gather
+        for s in (pool.k_scales, pool.v_scales):
+            assert s.shape == sshape and s.dtype == jnp.float32
+            assert bool(jnp.isfinite(s).all())
+    for rid in pool.live_requests():
+        pool.free(rid)
+    for rid in pool.spilled_requests():
+        pool.drop_spilled(rid)
+    assert sorted(pool._free) == list(range(n_pages))
+    assert pool.committed_pages == 0
+    assert pool.bytes_reserved == 0
+    assert pool.bytes_in_use == pytest.approx(0.0, abs=1e-6)
+    assert pool.stats()["spilled_requests"] == 0
