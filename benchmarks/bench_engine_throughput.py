@@ -7,10 +7,14 @@ Replays the SAME ≥16-request Poisson arrival trace through:
     slot-batched decode over all running requests, under the chosen
     pruning policy and scheduler (per mode: masked | structural);
   * **engine/paged** — the same trace through ``PagedExecutor``
-    (masked mode): physically paged KV with per-request page tables,
-    measuring what paging buys in *physical* internal fragmentation
-    (``measured_frag``: 1 − tokens-written / cache-bytes-allocated,
-    sampled per decode tick) at equal-or-better throughput;
+    (masked and structural modes): physically paged KV with per-request
+    page tables, measuring what paging buys in *physical* internal
+    fragmentation (``measured_frag``: 1 − tokens-written /
+    cache-bytes-allocated, sampled per decode tick) at equal-or-better
+    throughput. Structural rows run under ``--bucket-quant`` (DESIGN.md
+    §9) so the compiled-executable set stays bounded, and the warmed
+    structural/paged row at the top horizon is hard-gated ≥ its
+    structural/slot counterpart;
   * **engine/sharded** — the same trace through ``ShardedExecutor``
     (masked mode): mesh-resident slot groups over a DP-majority host
     mesh (DESIGN.md §7). On a multi-device host the warmed sharded row
@@ -111,7 +115,26 @@ def main():
     ap.add_argument("--no-scenarios", action="store_true",
                     help="skip the elastic-budget scenario section "
                          "(budget-shock staircase + cancellation storm on "
-                         "the paged executor, DESIGN.md §10)")
+                         "the paged executor, DESIGN.md §11)")
+    ap.add_argument("--bucket-quant", default="pow2",
+                    choices=("none", "layer", "pow2"),
+                    help="structural bucket-shape quantization ladder "
+                         "(DESIGN.md §9). The bench defaults to pow2 — an "
+                         "adaptive policy's mask stream must not compile "
+                         "one executable per distinct mask on the timed "
+                         "path")
+    ap.add_argument("--compile-cache-dir", default="",
+                    help="persistent XLA compilation cache directory "
+                         "(DESIGN.md §9); empty disables. A second bench "
+                         "invocation against the same dir re-traces but "
+                         "loads executables from disk instead of "
+                         "recompiling")
+    ap.add_argument("--assert-cache-replay", action="store_true",
+                    help="hard gate for warmed-replay CI: with "
+                         "--compile-cache-dir pre-populated by an earlier "
+                         "identical invocation, this process must hit the "
+                         "disk cache (> 0 hits) and compile nearly "
+                         "nothing new (≤ 2 misses) — exit 1 otherwise")
     ap.add_argument("--scenario-requests", type=int, default=12,
                     help="requests per scenario run (heavy-tailed "
                          "lognormal prompt mix)")
@@ -147,6 +170,12 @@ def main():
     from repro.models import registry
     from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
                                RAPEngine, RAPServer, ShardedExecutor)
+
+    if args.compile_cache_dir:
+        # enable BEFORE the first compile: JAX latches the cache-used
+        # decision process-wide at first use (see enable_compile_cache)
+        from repro.runtime.engine import enable_compile_cache
+        enable_compile_cache(args.compile_cache_dir)
 
     cfg = get_smoke_config(args.arch).replace(n_layers=args.layers)
     model = registry.build(cfg)
@@ -201,15 +230,18 @@ def main():
     def run_engine(mode, executor_kind, horizon, kv_dtype=None):
         executor = None
         if executor_kind == "paged":
-            executor = PagedExecutor(model, params, max_active=args.slots,
-                                     kv_dtype=kv_dtype)
+            executor = PagedExecutor(model, params, mode=mode,
+                                     max_active=args.slots,
+                                     kv_dtype=kv_dtype,
+                                     bucket_quant=args.bucket_quant)
         elif executor_kind == "sharded":
             executor = ShardedExecutor(model, serve_mesh, params=params,
                                        max_active=args.slots)
         engine = RAPEngine(model, params, policy, EngineConfig(
             mode=mode, max_new_tokens=args.max_new, max_active=args.slots,
             max_len=max_total, budget_bytes=budget, decode_horizon=horizon,
-            kv_dtype=kv_dtype),
+            kv_dtype=kv_dtype, bucket_quant=args.bucket_quant,
+            compile_cache_dir=args.compile_cache_dir),
             scheduler=args.scheduler, executor=executor)
         if not args.no_warmup:      # steady-state: compiles amortize away
             for _ in range(5):
@@ -256,10 +288,13 @@ def main():
                 and all(s.mixer == "attn" and s.ffn == layout[0].ffn
                         for s in layout))
     run_matrix = [(m, "slot") for m in args.modes]
-    if "masked" in args.modes and paged_ok:
-        run_matrix.append(("masked", "paged"))
-    elif "masked" in args.modes:
-        print(f"[bench] skipping paged run: {args.arch} is not a uniform "
+    if paged_ok:
+        # paged rides along in every mode it serves (masked + structural)
+        # so each bench run tracks the paged-vs-slot delta per mode
+        run_matrix.extend((m, "paged") for m in args.modes
+                          if m in ("masked", "structural"))
+    elif "masked" in args.modes or "structural" in args.modes:
+        print(f"[bench] skipping paged runs: {args.arch} is not a uniform "
               f"all-attention layout")
     if "masked" in args.modes:
         # sharded serves ANY layout in masked mode (gated groups); on a
@@ -327,6 +362,8 @@ def main():
             "fit_rate": round(rep.budget_fit_rate, 3),
             "decode_iters": rep.decode_iters,
             "compiles": rep.compile_events,
+            "cache_hits": rep.compile_cache_hits,
+            "cache_misses": rep.compile_cache_misses,
             "host_ms_per_tok": round(host_ms, 4),
             "pool_peak_mb": round(rep.pool["peak_reserved_bytes"] / 1e6, 3),
             "pool_frag": round(rep.pool["fragmentation"], 3),
@@ -442,7 +479,7 @@ def main():
               f"{interference['monolithic_itl_ms']['p99']:.2f} ms, "
               f"+long chunked({args.chunk}) "
               f"{interference['chunked_itl_ms']['p99']:.2f} ms")
-    # ---- elastic-budget scenarios (DESIGN.md §10) --------------------
+    # ---- elastic-budget scenarios (DESIGN.md §11) --------------------
     # Fault-injection on the paged executor (slot fallback for non-
     # uniform layouts): a mid-serve budget-shock staircase (preemption +
     # KV spill/resume must keep completing requests and recover warmed
@@ -524,7 +561,22 @@ def main():
     # per-PR perf trajectory: one machine-readable document with the run
     # configuration, so cross-PR comparisons know what was measured
     doc = {
-        "schema": 7,        # v7: elastic-budget scenarios (DESIGN.md §10) —
+        "schema": 8,        # v8: structural serving at speed (DESIGN.md §9)
+                            # — the run matrix gains structural/paged rows
+                            # (PagedExecutor now serves structural mode over
+                            # per-bucket compacted layer stacks; the warmed
+                            # structural/paged row at the top horizon is
+                            # hard-gated ≥ its structural/slot counterpart);
+                            # structural rows run under --bucket-quant
+                            # (default pow2: bounded compiled-executable
+                            # set); rows gain cache_hits/cache_misses from
+                            # the persistent XLA compilation cache
+                            # (--compile-cache-dir) and the document gains
+                            # a "compile_cache" section;
+                            # --assert-cache-replay hard-gates a warmed
+                            # second invocation to near-zero recompiles.
+                            # Config gains bucket_quant + compile_cache_dir.
+                            # v7: elastic-budget scenarios (DESIGN.md §11) —
                             # the document gains a "scenarios" section:
                             # budget_shock (per-phase completion/tok-s under
                             # a mid-serve KV-headroom staircase cut, with
@@ -575,11 +627,21 @@ def main():
             "scenario_requests": args.scenario_requests,
             "shock_frac": args.shock_frac,
             "cancel_frac": args.cancel_frac,
+            "bucket_quant": args.bucket_quant,
+            "compile_cache_dir": args.compile_cache_dir,
         },
         "rows": rows,
         "interference": interference,
         "scenarios": scenarios,
     }
+    if args.compile_cache_dir:
+        from repro.runtime.engine import _CACHE_EVENTS
+        doc["compile_cache"] = {"dir": args.compile_cache_dir,
+                                "hits": _CACHE_EVENTS["hits"],
+                                "misses": _CACHE_EVENTS["misses"]}
+        print(f"[bench] compile cache: {doc['compile_cache']['hits']} disk "
+              f"hits, {doc['compile_cache']['misses']} misses "
+              f"({args.compile_cache_dir})")
     bench_out = os.path.join(args.out, "BENCH_engine.json")
     with open(bench_out, "w") as f:
         json.dump(doc, f, indent=1)
@@ -662,6 +724,59 @@ def main():
                 f"the model-precision row (need ≥ 0.9×) — the fused "
                 f"dequant path must not give the capacity win back")
 
+    # Structural-paged gate (DESIGN.md §9) — paged structural decode runs
+    # per-bucket compacted stacks over the shared page pool; at the top
+    # horizon the warmed paged row must not be slower than structural/slot
+    # (same compacted compute, better packing). Hard gate: a regression
+    # here means the structural paged path costs more than it serves.
+    st_slot = by_exec.get(("structural", "slot", h_top, "model"))
+    st_paged = by_exec.get(("structural", "paged", h_top, "model"))
+    if not (st_slot and st_paged):
+        print("[bench] skipping structural-paged gate (no structural "
+              "slot+paged rows at the top horizon)")
+    elif args.no_warmup:
+        print("[bench] skipping structural-paged gate (--no-warmup: "
+              "numbers are compile-dominated)")
+    else:
+        ratio = (st_paged["engine_tok_s"]
+                 / max(st_slot["engine_tok_s"], 1e-9))
+        print(f"[bench] structural paged vs slot (H={h_top}): "
+              f"{st_paged['engine_tok_s']:.1f} vs "
+              f"{st_slot['engine_tok_s']:.1f} tok/s (×{ratio:.2f})")
+        # 5% band: the two warmed rows are typically within measurement
+        # noise of each other (same compacted compute), and best-of-
+        # --repeats can land either side of parity on a shared host
+        if ratio < 0.95:
+            raise SystemExit(
+                f"[bench] FAIL: warmed structural/paged H={h_top} "
+                f"({st_paged['engine_tok_s']:.1f} tok/s) is ×{ratio:.2f} "
+                f"of structural/slot ({st_slot['engine_tok_s']:.1f} "
+                f"tok/s, need ≥ 0.95×) — paged structural decode must "
+                f"not cost throughput against the slot path it "
+                f"generalizes")
+
+    # Cache-replay gate (DESIGN.md §9, opt-in) — CI runs the bench twice
+    # against the same --compile-cache-dir; the second invocation passes
+    # --assert-cache-replay and must load its executables from disk: same
+    # config ⇒ same traces ⇒ every compile should be a cache hit. A small
+    # miss slack absorbs executables whose keys legitimately vary across
+    # processes (e.g. autotuning); near-zero is the contract.
+    if args.assert_cache_replay:
+        if not args.compile_cache_dir:
+            raise SystemExit("[bench] FAIL: --assert-cache-replay needs "
+                             "--compile-cache-dir")
+        from repro.runtime.engine import _CACHE_EVENTS
+        hits, misses = _CACHE_EVENTS["hits"], _CACHE_EVENTS["misses"]
+        if hits <= 0 or misses > 2:
+            raise SystemExit(
+                f"[bench] FAIL: warmed replay did not reuse the persistent "
+                f"compile cache ({hits} hits, {misses} misses; need > 0 "
+                f"hits and ≤ 2 misses) — a second identical invocation "
+                f"must load executables from {args.compile_cache_dir}, "
+                f"not recompile the serving set")
+        print(f"[bench] cache replay gate passed: {hits} hits, "
+              f"{misses} misses")
+
     # Absolute-throughput gate (opt-in, machine-specific): the warmed
     # masked/paged row at the top horizon must hold the floor the
     # previous PR's committed run established on the same machine.
@@ -742,7 +857,7 @@ def main():
                 f"regressive; a regression here invalidates the sharded "
                 f"serve path")
 
-    # Scenario gates (DESIGN.md §10) — AFTER the doc write, like every
+    # Scenario gates (DESIGN.md §11) — AFTER the doc write, like every
     # gate above: a failing run still leaves its rows behind. These are
     # the robustness contract the elastic-budget machinery ships under;
     # run_budget_shock / run_cancellation_storm returning at all already

@@ -1,7 +1,7 @@
 """Shared benchmark substrate: the RAP subject model + evaluation protocol.
 
 The paper's experiments run Llama2-7B/Llama3-8B on WikiText2/PTB + seven
-commonsense suites. Offline, the analogue (DESIGN.md §14) is:
+commonsense suites. Offline, the analogue (DESIGN.md §15) is:
   * subject model — same family (RMSNorm+SwiGLU+RoPE decoder, 8L/d256,
     ~13M params), trained in-repo on the synthetic Zipf-Markov corpus;
   * "WikiText2 ppl"  → held-out synthetic perplexity;

@@ -67,7 +67,7 @@ def main():
 
     # ---- phase 2: the same contention made REAL — a burst of concurrent
     # requests competing for one shared KV pool through the engine
-    # (DESIGN.md §9). Admission control queues what the pool cannot hold;
+    # (DESIGN.md §10). Admission control queues what the pool cannot hold;
     # the controller prunes deeper as the pool fills.
     from repro.core import masks
     from repro.runtime import EngineConfig, EngineRequest, RAPEngine

@@ -7,7 +7,7 @@ budget* (params + KV cache for the request shape) is met, then measure
 perplexity / task accuracy. ``SliceGPT`` is width-slicing rather than
 block-dropping, so it returns modified (params, cfg) instead of a mask.
 
-Fidelity notes (recorded per DESIGN.md §14):
+Fidelity notes (recorded per DESIGN.md §15):
  * ShortGPT  — Block-Influence score = 1 − cos(h_in, h_out) per *layer*;
    lowest-influence layers removed first.            [Men et al. 2024]
  * MHA-Drop  — same cosine criterion per *attention block* only.

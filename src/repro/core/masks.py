@@ -72,10 +72,11 @@ def compact_layout(cfg, mask: np.ndarray) -> Tuple[Tuple[LayerSlot, ...], Dict]:
 
 
 def compact_params(params: dict, cfg, mask: np.ndarray):
-    """Gather stacks per the mask. Returns (small_params, layout, gates).
+    """Gather stacks per the mask. Returns (small_params, layout).
 
-    ``gates`` are all-ones over the compacted layout (masking became
-    structure); callers pass them (or None) to forward/decode.
+    Masking became structure: the compacted stacks hold only retained
+    blocks, so callers run forward/decode with ``layout`` and no gates
+    (or all-ones gates over the compacted layout).
     """
     layout, gather = compact_layout(cfg, mask)
     new_stacks = {}
@@ -98,6 +99,69 @@ def bucket_key(cfg, mask: np.ndarray) -> Tuple:
     """
     layout, _ = compact_layout(cfg, mask)
     return tuple((s.mixer, s.ffn) for s in layout)
+
+
+def gather_key(cfg, mask: np.ndarray) -> Tuple:
+    """Identity key for the *exact* compacted parameter stack.
+
+    ``bucket_key`` deliberately collapses any k whole-layer drops to one
+    (L-k)-layer signature so those masks share a compiled executable —
+    but masks dropping *different* layers gather *different* rows of the
+    parameter stacks. Resident compacted params (and the slot groups
+    holding them) must therefore be keyed on the gather indices, never on
+    the signature alone (see DESIGN.md §9 on the aliasing bug this fixes).
+    """
+    _, gather = compact_layout(cfg, mask)
+    return tuple(sorted((kind, tuple(idxs)) for kind, idxs in gather.items()))
+
+
+def keep_rows(cfg, mask: np.ndarray) -> np.ndarray:
+    """Original layer indices retained by ``mask`` (either block kept)."""
+    L = cfg.n_layers
+    m = np.asarray(mask)
+    return np.asarray([i for i in range(L) if m[i] or m[L + i]], np.int64)
+
+
+def quantize_mask(cfg, mask: np.ndarray, mode: str) -> np.ndarray:
+    """Snap a mask onto a bucket-shape ladder; returns the *bucket* mask.
+
+    An adaptive policy emits a stream of distinct masks; compiling one
+    structural executable per mask is unbounded. Quantization rounds the
+    retained-layer count UP onto a small ladder and keeps *whole layers*
+    (both blocks) at every retained row, so the request's exact mask is
+    realized as per-slot 0/1 gates inside the bucket. Gating a block off
+    is bitwise-identical to dropping it structurally (``h + 0*out == h``
+    for finite outputs, and ``1.0*out == out`` exactly), so bucket streams
+    match pure-structural streams token for token.
+
+    Modes:
+      * ``none``  — identity; each exact mask compiles its own bucket.
+      * ``layer`` — whole-layer bucket over the exact retained-row set
+                    (half-layer drops become gates; row sets still vary).
+      * ``pow2``  — like ``layer`` but the row count is rounded up to the
+                    next power of two (extra rows realized from the
+                    lowest-indexed fully-dropped layers, gated off), so at
+                    most ceil(log2 L)+1 compiled families exist.
+    """
+    if mode == "none":
+        return np.array(mask, copy=True)
+    if mode not in ("layer", "pow2"):
+        raise ValueError(f"unknown bucket_quant mode {mode!r}; "
+                         "expected none|layer|pow2")
+    L = cfg.n_layers
+    m = np.asarray(mask)
+    rows = [i for i in range(L) if m[i] or m[L + i]]
+    k = max(len(rows), 1)
+    if mode == "pow2":
+        target = min(1 << (k - 1).bit_length(), L)
+        extras = [i for i in range(L) if not (m[i] or m[L + i])]
+        rows = sorted(rows + extras[: target - len(rows)])
+    elif not rows:
+        rows = [0]
+    out = np.zeros(2 * L, bool)
+    for i in rows:
+        out[i] = out[L + i] = True
+    return out
 
 
 def mask_param_fraction(cfg, mask: np.ndarray) -> float:

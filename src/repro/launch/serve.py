@@ -10,7 +10,7 @@ their removal order once and need no RL training — then serves an
 Azure-like workload trace of (batch, seq_len, memory-budget) requests:
 the full online loop of paper Algorithm 3, now policy-agnostic.
 
-Two serving paths (DESIGN.md §9):
+Two serving paths (DESIGN.md §10):
   * default — continuous batching through ``RAPEngine``: one shared KV pool
     with admission control; all in-flight requests decode together under
     the chosen scheduler (fifo | sjf | priority);
@@ -39,8 +39,8 @@ def main():
                     help="execution backend: 'local' = slot-batched caches "
                          "(reference, any mode/arch); 'paged' = physically "
                          "paged KV pool with per-request page tables "
-                         "(masked mode, uniform-attention archs); "
-                         "'sharded' = mesh-resident slot groups, TP/DP "
+                         "(masked or structural mode, uniform-attention "
+                         "archs); 'sharded' = mesh-resident slot groups, TP/DP "
                          "horizon decode (masked mode; see --mesh — works "
                          "on CPU via XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
@@ -87,7 +87,7 @@ def main():
     ap.add_argument("--budget-trace", choices=("none", "workload",
                                                "staircase"),
                     default="none",
-                    help="time-varying device budget (DESIGN.md §10): "
+                    help="time-varying device budget (DESIGN.md §11): "
                          "'workload' replays the trace's OU memory-"
                          "availability walk (each request's budget_frac "
                          "becomes a breakpoint); 'staircase' cuts half "
@@ -103,6 +103,22 @@ def main():
                          "drops (--no-enable-preemption: shrink by "
                          "admission-gating new work only; in-flight "
                          "requests keep their pages)")
+    ap.add_argument("--bucket-quant", choices=("none", "layer", "pow2"),
+                    default="none",
+                    help="structural bucket-shape quantization (DESIGN.md "
+                         "§9): snap decision masks onto a ladder of whole-"
+                         "layer keep-sets before minting a bucket — the "
+                         "exact mask runs as 0/1 gates inside it (bitwise-"
+                         "identical tokens) — so adaptive policies compile "
+                         "a bounded executable set; 'pow2' bounds it at "
+                         "ceil(log2 L)+1 families. The paged executor "
+                         "floors 'none' at 'layer'")
+    ap.add_argument("--compile-cache-dir", default="",
+                    help="enable JAX's persistent compilation cache rooted "
+                         "here: a second serve of the same config re-traces "
+                         "but loads XLA binaries from disk instead of "
+                         "recompiling (near-zero warm-start compiles; "
+                         "DESIGN.md §9)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.chunked_prefill and args.max_prefill_tokens <= 0:
@@ -123,9 +139,6 @@ def main():
     if args.executor != "local" and args.serial:
         ap.error(f"--executor {args.executor} drives the batching engine; "
                  f"drop --serial")
-    if args.executor == "paged" and args.mode != "masked":
-        ap.error("--executor paged serves masked mode (structural paged "
-                 "serving is a ROADMAP item); add --mode masked")
     if args.executor == "sharded" and args.mode != "masked":
         ap.error("--executor sharded serves masked mode (structural sharded "
                  "buckets are a ROADMAP item); add --mode masked")
@@ -202,8 +215,9 @@ def main():
               f"{slots * dense_req / 1e6:.1f}MB)")
     executor = None
     if args.executor == "paged":
-        executor = PagedExecutor(model, params, max_active=slots,
-                                 kv_dtype=kv_dtype)
+        executor = PagedExecutor(model, params, mode=args.mode,
+                                 max_active=slots, kv_dtype=kv_dtype,
+                                 bucket_quant=args.bucket_quant)
     elif args.executor == "sharded":
         from repro.launch.mesh import make_host_mesh, make_serve_mesh
         from repro.runtime import ShardedExecutor
@@ -236,7 +250,9 @@ def main():
         max_len=max_total, budget_bytes=budget, kv_dtype=kv_dtype,
         decode_horizon=args.decode_horizon,
         max_prefill_tokens=args.max_prefill_tokens,
-        preemption_enabled=args.enable_preemption),
+        preemption_enabled=args.enable_preemption,
+        bucket_quant=args.bucket_quant,
+        compile_cache_dir=args.compile_cache_dir),
         scheduler=args.scheduler, executor=executor)
     ereqs = []
     for i, r in enumerate(reqs):
@@ -247,7 +263,7 @@ def main():
         ereqs.append(EngineRequest(rid=f"req{i}", prompt=prompt,
                                    arrival_t=r.t - reqs[0].t,
                                    priority=0 if sql <= 128 else 1))
-    # time-varying budget (DESIGN.md §10): breakpoint lists on the
+    # time-varying budget (DESIGN.md §11): breakpoint lists on the
     # engine's virtual clock, derived from the workload or a synthetic
     # mid-serve staircase shock
     trace = None
@@ -290,6 +306,11 @@ def main():
           f"{rep.decode_iters} decode iters, "
           f"mean queue {rep.mean_queue_delay_s*1e3:.0f}ms, "
           f"fit-rate {rep.budget_fit_rate:.2f}")
+    if args.compile_cache_dir:
+        print(f"compile cache: {rep.compile_events} traces, "
+              f"{rep.compile_cache_hits} disk hits, "
+              f"{rep.compile_cache_misses} misses "
+              f"({args.compile_cache_dir})")
     if rep.preempted_count:
         print(f"preemption: {rep.preempted_count} preempted, "
               f"{rep.spilled_mb:.2f}MB spilled, resume p50/p99 "

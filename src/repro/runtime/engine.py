@@ -75,7 +75,7 @@ from repro.runtime.scheduler import (Scheduler, VictimCandidate,
                                      make_scheduler)
 
 __all__ = ["EngineConfig", "EngineRequest", "RequestResult", "EngineReport",
-           "RAPEngine"]
+           "RAPEngine", "enable_compile_cache"]
 
 _MIGRATION_HINT = (
     "RAPEngine's constructor changed with the serving-API split: it now "
@@ -104,6 +104,54 @@ def _kv_byte_ratio(kv_dtype, mcfg) -> float:
     from repro.core.memory import dtype_bytes
     dh = max(int(mcfg.dh), 1)
     return (dh * 1.0 + 4.0) / (dh * dtype_bytes(mcfg.dtype))
+
+
+# -------------------------------------------- persistent compilation cache
+# Process-wide hit/miss counters fed by JAX's monitoring events; the engine
+# reports per-run deltas next to compile_events. compile_events counts
+# TRACES (Python → jaxpr, paid either way); a cache hit means the expensive
+# XLA compile behind a trace was served from disk.
+_CACHE_EVENTS = {"hits": 0, "misses": 0}
+_CACHE_LISTENER = {"registered": False}
+
+
+def _on_jax_monitoring_event(event: str, **kw) -> None:
+    if event == "/jax/compilation_cache/cache_hits":
+        _CACHE_EVENTS["hits"] += 1
+    elif event == "/jax/compilation_cache/cache_misses":
+        _CACHE_EVENTS["misses"] += 1
+
+
+def enable_compile_cache(cache_dir: str) -> None:
+    """Root JAX's persistent compilation cache at ``cache_dir``.
+
+    A second serve of the same config (same process or a fresh one)
+    re-traces its executables but deserializes the XLA binaries from disk
+    instead of recompiling — the recompile-dominated structural cold start
+    becomes a warm start (DESIGN.md §9). Process-wide and idempotent; the
+    floors are lowered so even sub-second compiles (smoke-sized models)
+    populate the cache.
+    """
+    import jax
+    cache_dir = str(cache_dir)
+    changed = _CACHE_LISTENER.get("dir") != cache_dir
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    if changed:
+        # JAX latches the cache-used decision at the process's FIRST
+        # compile: a process that already compiled with caching off (any
+        # engine built without compile_cache_dir) must reset the latch or
+        # the new dir is silently ignored
+        try:
+            from jax._src import compilation_cache as _cc
+            _cc.reset_cache()
+        except (ImportError, AttributeError):   # private API moved
+            pass
+        _CACHE_LISTENER["dir"] = cache_dir
+    if not _CACHE_LISTENER["registered"]:
+        jax.monitoring.register_event_listener(_on_jax_monitoring_event)
+        _CACHE_LISTENER["registered"] = True
 
 
 # ------------------------------------------------------------------- config
@@ -158,7 +206,7 @@ class EngineConfig:
     # bitwise-identical with chunking on or off. Backends without a
     # chunked path (heterogeneous layouts) fall back to monolithic.
     max_prefill_tokens: int = 0
-    # Elastic budgets (DESIGN.md §10): when run() is given a budget_trace
+    # Elastic budgets (DESIGN.md §11): when run() is given a budget_trace
     # and the budget shrinks below the bytes already reserved, the engine
     # preempts running victims (Scheduler.select_victims order), spilling
     # their KV pages to host and resuming them when the budget recovers.
@@ -173,6 +221,24 @@ class EngineConfig:
     # (SLO tiers + aging under PriorityScheduler); "arrival" preempts the
     # newest running request first (least sunk work, LIFO).
     victim_policy: str = "scheduler"
+    # Structural bucket-shape quantization (DESIGN.md §9): snap every
+    # decision mask onto a ladder of whole-layer keep-sets before a bucket
+    # is minted, realizing the exact mask as 0/1 gates INSIDE the bucket
+    # (bitwise-identical tokens), so an adaptive policy's stream of
+    # distinct masks compiles a bounded executable family set instead of
+    # one program per mask. none | layer | pow2 (masks.quantize_mask);
+    # paged executors floor "none" at "layer".
+    bucket_quant: str = "none"
+    # Cap on live structural slot groups in the default LocalExecutor
+    # (0 = unbounded): idle groups past the cap are evicted LRU, dropping
+    # their prefill executables and — when they were the signature's last
+    # group — the resident compacted param stack.
+    max_structural_groups: int = 0
+    # Non-empty: enable JAX's persistent compilation cache rooted here
+    # (enable_compile_cache), so a second serve of the same config skips
+    # XLA compilation. Per-run activity is reported as
+    # EngineReport.compile_cache_hits / compile_cache_misses.
+    compile_cache_dir: str = ""
 
     def __post_init__(self):
         if self.mode not in ("masked", "structural"):
@@ -242,6 +308,17 @@ class EngineConfig:
                 f"unknown victim_policy {self.victim_policy!r} (expected "
                 f"'scheduler' — Scheduler.select_victims's SLO-tier order "
                 f"— or 'arrival' — newest running request first)")
+        if self.bucket_quant not in ("none", "layer", "pow2"):
+            raise ValueError(
+                f"unknown bucket_quant {self.bucket_quant!r} (expected "
+                f"'none' — one bucket per exact mask — 'layer' — "
+                f"whole-layer buckets over the exact retained rows — or "
+                f"'pow2' — keep-count rounded up to a power of two)")
+        if self.max_structural_groups < 0:
+            raise ValueError(
+                f"max_structural_groups must be >= 0, got "
+                f"{self.max_structural_groups!r} (0 disables the "
+                f"structural group cap)")
 
 
 @dataclasses.dataclass
@@ -289,6 +366,13 @@ class EngineReport:
     decode_iters: int                 # macro-ticks (horizons), not tokens
     compile_events: int
     pool: Dict[str, float]
+    # persistent-compile-cache activity during the run (zeros unless
+    # EngineConfig.compile_cache_dir enabled the cache): a hit means a
+    # traced executable was deserialized from disk instead of recompiled,
+    # so a warmed replay shows compile_events ≈ compile_cache_hits and
+    # near-zero misses
+    compile_cache_hits: int = 0
+    compile_cache_misses: int = 0
     # wall time spent inside compiled-executable launches + read-backs
     # (prefill and decode horizons): wall_s − launch_s is the host-side
     # orchestration share the horizon decode exists to shrink
@@ -304,7 +388,7 @@ class EngineReport:
     # per-token share)
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
     itl: Dict[str, float] = dataclasses.field(default_factory=dict)
-    # elastic-budget counters (DESIGN.md §10): preemption events, requests
+    # elastic-budget counters (DESIGN.md §11): preemption events, requests
     # cancelled via cancel(), MB of KV spilled to host across the run
     preempted_count: int = 0
     cancelled: int = 0
@@ -415,19 +499,24 @@ class RAPEngine:
         # from its actual cache sizes
         self.cfg = dataclasses.replace(cfg if cfg is not None
                                        else EngineConfig())
+        if self.cfg.compile_cache_dir:
+            enable_compile_cache(self.cfg.compile_cache_dir)
         self.mm = policy.mm
         self.scheduler = make_scheduler(scheduler)
         self.executor = executor if executor is not None else LocalExecutor(
             model, params, mode=self.cfg.mode, max_active=self.cfg.max_active,
             kv_dtype=self.cfg.kv_dtype,
-            decode_buckets=self.cfg.decode_buckets)
+            decode_buckets=self.cfg.decode_buckets,
+            bucket_quant=self.cfg.bucket_quant,
+            max_groups=self.cfg.max_structural_groups)
         self._paged = bool(getattr(self.executor, "paged", False))
         if self._paged:
-            if self.cfg.mode != "masked":
+            ex_mode = getattr(self.executor, "mode", self.cfg.mode)
+            if ex_mode != self.cfg.mode:
                 raise ValueError(
-                    "a paged executor serves masked mode only (structural "
-                    "paged serving is a ROADMAP item); set "
-                    "EngineConfig(mode='masked') or use LocalExecutor")
+                    f"paged executor was built for mode={ex_mode!r} but "
+                    f"EngineConfig.mode={self.cfg.mode!r}; construct "
+                    f"PagedExecutor(..., mode={self.cfg.mode!r})")
             if self.cfg.admission != "strict":
                 raise ValueError(
                     "a paged executor requires strict admission: overflow "
@@ -455,11 +544,13 @@ class RAPEngine:
         self._itl_samples: List[float] = []
         self._decode_iters = 0
         self._compiles_at_run_start = 0
+        self._cache_hits_at_run_start = 0
+        self._cache_misses_at_run_start = 0
         self._t0 = 0.0
         self._skew = 0.0
         self._budget = self.cfg.budget_bytes
         self._frag_samples: List[float] = []
-        # elastic-budget state (DESIGN.md §10)
+        # elastic-budget state (DESIGN.md §11)
         self._preempted: "Dict[str, _Preempted]" = {}
         self._budget_trace: Any = None
         self._run_budget = self.cfg.budget_bytes
@@ -570,6 +661,8 @@ class RAPEngine:
         self._stall_ticks = 0
         self._decode_iters = 0
         self._compiles_at_run_start = self.executor.compile_events
+        self._cache_hits_at_run_start = _CACHE_EVENTS["hits"]
+        self._cache_misses_at_run_start = _CACHE_EVENTS["misses"]
         self._launch_s_at_run_start = getattr(self.executor, "launch_s", 0.0)
         self._skew = 0.0
         self._t0 = time.perf_counter()
@@ -606,6 +699,10 @@ class RAPEngine:
             decode_iters=self._decode_iters,
             compile_events=(self.executor.compile_events
                             - self._compiles_at_run_start),
+            compile_cache_hits=(_CACHE_EVENTS["hits"]
+                                - self._cache_hits_at_run_start),
+            compile_cache_misses=(_CACHE_EVENTS["misses"]
+                                  - self._cache_misses_at_run_start),
             pool=self.pool.stats(),
             launch_s=(getattr(self.executor, "launch_s", 0.0)
                       - self._launch_s_at_run_start),
@@ -1156,13 +1253,20 @@ class RAPEngine:
             return None
         best = None
         for group in self.executor.groups():
-            if (group.mask is None or group.cache_len != cache_len
-                    or len(group.free_slots()) < b):
+            if group.mask is None or len(group.free_slots()) < b:
+                continue
+            # paged groups have no dense cache (pages grow per token), so
+            # any bucket can host any admissible length — cache_len
+            # affinity only applies to the slot-cache path
+            if not self._paged and group.cache_len != cache_len:
                 continue
             peak = self.mm.peak_bytes(group.mask, b, total)
             if peak > eff:
                 continue
-            if not self.pool.can_alloc(
+            if self._paged:
+                if not self.pool.can_alloc_tokens(b, total):
+                    continue
+            elif not self.pool.can_alloc(
                     self.mm.state_bytes(group.mask, b, total)):
                 continue
             # prefer the bucket keeping the most blocks (least over-pruned)

@@ -34,7 +34,10 @@ Executors:
     and page-granular (not slot-granular) internal fragmentation. Pages
     for the whole horizon are pre-granted in ONE bulk ``KVPool.extend``
     before the launch (the admission-time worst-case commitment
-    guarantees it cannot fail), so no paging happens mid-loop.
+    guarantees it cannot fail), so no paging happens mid-loop. Serves
+    both pruning modes: structural mode runs per-bucket compacted layer
+    stacks over the SAME shared pool (a bucket with L' retained layers
+    touches pool layers 0..L'-1 of its pages; see DESIGN.md §9).
   * :class:`ShardedExecutor` — mesh-resident serving (DESIGN.md §7
     "Sharded serving"): parameters placed with the production partition
     rules of ``repro.parallel.sharding`` (and a sharded decode-step
@@ -186,6 +189,13 @@ def _slot_place_body(cache, tokens, req_cache, sidx, plen, first, cols,
 _slot_place_upd = jax.jit(_slot_place_body, donate_argnums=(0, 1, 7))
 
 
+# distinct occupancy patterns a group may cache device index vectors for;
+# a long adaptive serve cycles through unboundedly many patterns, so the
+# cache evicts FIFO past the cap (each entry is a tiny int32 vector, but
+# "tiny and immortal" is still a leak)
+_IIDX_CACHE_CAP = 256
+
+
 def _cached_iidx(cache: Dict[Tuple[int, ...], Any], idx: List[int]):
     """Device copy of a slot-index vector, cached by its pattern — the
     hot paths (horizon launches, placement, eviction) re-use the resident
@@ -193,9 +203,24 @@ def _cached_iidx(cache: Dict[Tuple[int, ...], Any], idx: List[int]):
     key = tuple(idx)
     dev = cache.get(key)
     if dev is None:
+        if len(cache) >= _IIDX_CACHE_CAP:
+            cache.pop(next(iter(cache)))
         dev = jnp.asarray(idx, jnp.int32)
         cache[key] = dev
     return dev
+
+
+def _gate_cols(mask, gate_rows: Optional[np.ndarray]) -> np.ndarray:
+    """A request's gate columns [2, Lg] for its host group: the keep-mask
+    split into mixer/ffn rows and, for gated *compacted* buckets,
+    restricted to the bucket's retained layers (``gate_rows`` — gates are
+    indexed by compacted layout position, not original layer)."""
+    m = np.asarray(mask, np.float32)
+    L = m.shape[0] // 2
+    gm, gf = m[:L], m[L:]
+    if gate_rows is not None:
+        gm, gf = gm[gate_rows], gf[gate_rows]
+    return np.stack([gm, gf])
 
 
 def _bucket_batch(occ: List[int], free: List[int], n_slots: int,
@@ -229,11 +254,16 @@ class SlotGroup:
 
     def __init__(self, key, params, layout, cfg_model, n_slots: int,
                  cache_len: int, kv_dtype, gated: bool,
-                 mask: Optional[np.ndarray] = None):
+                 mask: Optional[np.ndarray] = None,
+                 gate_rows: Optional[np.ndarray] = None):
         self.key = key                # logical bucket key ("masked" | tuple)
         self.params = params
         self.layout = layout
         self.mask = mask              # the keep-mask that minted this bucket
+        # gated compacted buckets (bucket quantization): the original
+        # layer index behind each layout row — request masks restrict to
+        # these rows before becoming per-slot gate columns
+        self.gate_rows = gate_rows
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.gated = gated
@@ -247,8 +277,10 @@ class SlotGroup:
         self.cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         if gated:
-            L = cfg_model.n_layers
-            self._gates_dev = jnp.ones((2, L, n_slots), jnp.float32)
+            # gates are indexed by layout position: a compacted gated
+            # bucket carries len(layout) gate rows, not n_layers
+            Lg = len(layout) if layout is not None else cfg_model.n_layers
+            self._gates_dev = jnp.ones((2, Lg, n_slots), jnp.float32)
         self._mcfg = cfg_model
         # fused horizon executables, one jit per horizon length (batch
         # widths retrace inside jit); compile accounting per (width, H)
@@ -283,9 +315,7 @@ class SlotGroup:
             self.occupants[s] = rid
         cols = None
         if self.gated and mask is not None:
-            g = masks_lib.mask_to_gates(mask)
-            cols = np.stack([np.asarray(g["mixer"], np.float32),
-                             np.asarray(g["ffn"], np.float32)])
+            cols = _gate_cols(mask, self.gate_rows)
         # mask=None on a gated group skips the gate write (the historical
         # contract): the fused update traces a no-gate variant rather
         # than scattering a None
@@ -573,13 +603,19 @@ class LocalExecutor(ModelExecutor):
 
     def __init__(self, model, params, *, mode: str = "masked",
                  max_active: int = 8, kv_dtype=None,
-                 decode_buckets: Sequence[int] = (1, 2, 4, 8)):
+                 decode_buckets: Sequence[int] = (1, 2, 4, 8),
+                 bucket_quant: str = "none", max_groups: int = 0):
         if mode not in ("masked", "structural"):
             raise ValueError(f"unknown mode {mode!r}")
+        if bucket_quant not in ("none", "layer", "pow2"):
+            raise ValueError(f"unknown bucket_quant {bucket_quant!r}; "
+                             "expected none|layer|pow2")
         self.model = model
         self.mcfg = model.cfg
         self.params = params
         self.mode = mode
+        self.bucket_quant = bucket_quant
+        self.max_groups = int(max_groups)   # structural group cap, 0 = ∞
         self.max_active = int(max_active)
         # canonical precision names ("fp32"/"bf16"/"int8"/"fp8") resolve to
         # their storage dtype so --kv-dtype works on the slot path too; raw
@@ -589,29 +625,96 @@ class LocalExecutor(ModelExecutor):
         self.decode_buckets = tuple(int(b) for b in decode_buckets or ())
         self.compile_events = 0
         self.launch_s = 0.0
+        # structural groups are keyed by (gather_key, cache_len) — the
+        # EXACT parameter rows they decode with — never by bucket_key
+        # alone, which aliases different-layer drops onto one signature
         self._groups: Dict[Tuple, SlotGroup] = {}
         self._prefill_fns: Dict[Tuple, Any] = {}
+        # one device-resident compacted stack per gather signature, shared
+        # by every cache-length group of that bucket and refcounted so it
+        # frees when its last group drops: gather_key -> [params, layout,
+        # refs]
+        self._resident: Dict[Tuple, list] = {}
 
     # ------------------------------------------------------------ capacity
+    def _invalidate(self) -> None:
+        """THE invalidation path: groups, their prefill executables, and
+        the resident compacted stacks drop together. Any key kept behind a
+        cleared group dict would pin dead XLA executables (or device
+        params) for the executor's lifetime — capacity reshapes and bucket
+        churn must not be able to strand them."""
+        self._groups.clear()
+        self._prefill_fns.clear()
+        self._resident.clear()
+
     def set_max_active(self, n_slots: int) -> None:
-        """Changing the slot count changes every cache's slot axis — all
-        compiled groups drop (their prefill executables stay valid: prefill
-        shapes depend on (cache_len, batch, seq), not slot count)."""
+        """Changing the slot count changes every cache's slot axis — the
+        full compiled state drops (one unified invalidation path with
+        :meth:`drop_groups`; re-minting a handful of prefill executables
+        on the next admission is cheaper than auditing which stale keys
+        are still reachable)."""
         if int(n_slots) == self.max_active:
             return
         self.max_active = int(n_slots)
-        self._groups.clear()
+        self._invalidate()
 
     def drop_groups(self) -> None:
-        # prefill fns are keyed by cache_len: after a capacity reshape the
-        # old lengths are unreachable, so keeping them would pin dead XLA
-        # executables for the executor's lifetime
-        self._groups.clear()
-        self._prefill_fns.clear()
+        self._invalidate()
 
     # -------------------------------------------------------------- groups
     def groups(self) -> List[SlotGroup]:
         return list(self._groups.values())
+
+    def _resident_acquire(self, rkey: Tuple, qmask: np.ndarray):
+        """(params, layout) for a gather signature, minting the compacted
+        device stack on first use and bumping its refcount."""
+        ent = self._resident.get(rkey)
+        if ent is None:
+            small, layout = masks_lib.compact_params(self.params, self.mcfg,
+                                                     qmask)
+            ent = self._resident[rkey] = [small, layout, 0]
+        ent[2] += 1
+        return ent[0], ent[1]
+
+    def _resident_release(self, rkey: Tuple) -> None:
+        ent = self._resident.get(rkey)
+        if ent is None:
+            return
+        ent[2] -= 1
+        if ent[2] <= 0:
+            del self._resident[rkey]
+
+    def _drop_group(self, gkey: Tuple) -> None:
+        """Drop one structural group: release its resident-params ref and,
+        when it was the last group of its (signature, cache_len), the
+        prefill executables compiled for that family."""
+        g = self._groups.pop(gkey)
+        self._resident_release(gkey[0])
+        if not any(og.key == g.key and og.cache_len == g.cache_len
+                   for og in self._groups.values()):
+            dead = [k for k in self._prefill_fns
+                    if (k[0] == g.key and k[1] == g.cache_len)
+                    or (k[0] == "chunk" and k[1] == g.key
+                        and k[2] == g.cache_len)]
+            for k in dead:
+                del self._prefill_fns[k]
+
+    def _maybe_evict_structural(self) -> None:
+        """Enforce the structural-group cap before minting a new group:
+        evict idle (unoccupied, unreserved) structural groups in LRU
+        order. Busy groups are never evicted — under a cap smaller than
+        the working set the dict temporarily overshoots instead."""
+        if self.max_groups <= 0:
+            return
+        n_struct = sum(1 for k in self._groups if k[0] != "masked")
+        while n_struct >= self.max_groups:
+            idle = [k for k, g in self._groups.items()
+                    if k[0] != "masked" and not g.occupied()
+                    and not g.reserved]
+            if not idle:
+                break
+            self._drop_group(idle[0])
+            n_struct -= 1
 
     def group_for(self, mask: np.ndarray, cache_len: int) -> SlotGroup:
         if self.mode == "masked":
@@ -622,16 +725,33 @@ class LocalExecutor(ModelExecutor):
                     key, self.params, None, self.mcfg, self.max_active,
                     cache_len, self.kv_dtype, gated=True)
             return self._groups[gkey]
-        key = masks_lib.bucket_key(self.mcfg, mask)
-        gkey = (key, cache_len)
-        if gkey not in self._groups:
-            small, layout = masks_lib.compact_params(self.params, self.mcfg,
-                                                     mask)
-            self._groups[gkey] = SlotGroup(
-                key, small, layout, self.mcfg, self.max_active,
-                cache_len, self.kv_dtype, gated=False,
-                mask=np.array(mask, copy=True))
-        return self._groups[gkey]
+        # bucket quantization first (identity under "none"), then key the
+        # group by the exact gather indices: two masks dropping DIFFERENT
+        # layers share a bucket_key (by design — one compiled family) but
+        # must never share compacted params
+        qmask = masks_lib.quantize_mask(self.mcfg, mask, self.bucket_quant)
+        rkey = masks_lib.gather_key(self.mcfg, qmask)
+        gkey = (rkey, cache_len)
+        group = self._groups.get(gkey)
+        if group is not None:
+            self._groups[gkey] = self._groups.pop(gkey)   # LRU touch
+            return group
+        self._maybe_evict_structural()
+        small, layout = self._resident_acquire(rkey, qmask)
+        gated = self.bucket_quant != "none"
+        # group.mask is engine-facing sticky-affinity metadata: store the
+        # exact MINTING mask, not qmask — a rounded-up bucket mask would
+        # make bucket affinity adopt a less-pruned (up to dense) decision,
+        # diverging quantized runs from unquantized ones. Per-request
+        # masks ride the slot gates, so correctness never reads this.
+        group = SlotGroup(
+            masks_lib.bucket_key(self.mcfg, qmask), small, layout,
+            self.mcfg, self.max_active, cache_len, self.kv_dtype,
+            gated=gated, mask=np.array(mask, copy=True),
+            gate_rows=(masks_lib.keep_rows(self.mcfg, qmask) if gated
+                       else None))
+        self._groups[gkey] = group
+        return group
 
     # ------------------------------------------------------------- prefill
     def _prefill_fn(self, group: SlotGroup, b: int, S: int):
@@ -640,11 +760,14 @@ class LocalExecutor(ModelExecutor):
             cfg, max_len = self.mcfg, group.cache_len
             kv_dtype, layout = self.kv_dtype, group.layout
             if group.gated:
+                # same-signature buckets share this executable: their
+                # (compacted) layouts are identical tuples and the params
+                # arrive as jit arguments, never closure constants
                 @jax.jit
                 def fn(p, tokens, gm, gf):
                     return decoder.prefill(p, cfg, tokens, max_len,
                                            gates={"mixer": gm, "ffn": gf},
-                                           kv_dtype=kv_dtype)
+                                           layout=layout, kv_dtype=kv_dtype)
             else:
                 @jax.jit
                 def fn(p, tokens):
@@ -662,8 +785,8 @@ class LocalExecutor(ModelExecutor):
         fn = self._prefill_fn(group, b, S)
         t0 = time.perf_counter()
         if group.gated:
-            g = masks_lib.mask_to_gates(mask)
-            logits, cache = fn(self.params, tokens, g["mixer"], g["ffn"])
+            cols = _gate_cols(mask, group.gate_rows)
+            logits, cache = fn(group.params, tokens, cols[0], cols[1])
         else:
             logits, cache = fn(group.params, tokens)
         first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
@@ -719,7 +842,10 @@ class LocalExecutor(ModelExecutor):
         attn = decoder.init_cache(self.mcfg, b, group.cache_len,
                                   group.layout, self.kv_dtype)["attn"]
         group.reserved.update(slots)
-        gates = masks_lib.mask_to_gates(mask) if group.gated else None
+        gates = None
+        if group.gated:
+            cols = _gate_cols(mask, group.gate_rows)
+            gates = {"mixer": cols[0], "ffn": cols[1]}
         return _PrefillTask(group=group, slots=list(slots), rid=rid,
                             prompt=prompt, mask=mask, gates=gates,
                             widths=chunk_widths(S, max_chunk), state=attn)
@@ -733,7 +859,7 @@ class LocalExecutor(ModelExecutor):
         fn = self._chunk_fn(group, b, c)
         t0 = time.perf_counter()
         if group.gated:
-            logits, task.state = fn(self.params, task.state, tokens,
+            logits, task.state = fn(group.params, task.state, tokens,
                                     np.int32(task.pos),
                                     task.gates["mixer"], task.gates["ffn"])
         else:
@@ -845,10 +971,15 @@ class LocalExecutor(ModelExecutor):
     def stats(self) -> Dict[str, int]:
         return {
             "groups": len(self._groups),
-            # distinct logical mask buckets — NOT (bucket, cache_len)
+            # distinct parameter gathers resident — NOT (gather, cache_len)
             # entries, which pow2 length bucketing would overcount
             "structural_buckets": len({k for k, _ in self._groups
                                        if k != "masked"}),
+            # distinct compiled families (bucket signatures): what bucket
+            # quantization bounds — many gathers may share one signature
+            "bucket_signatures": len({g.key for g in self._groups.values()
+                                      if g.key != "masked"}),
+            "resident_param_stacks": len(self._resident),
             "prefill_executables": len(self._prefill_fns),
             "masked_prefill_executables": sum(
                 1 for k in self._prefill_fns if k[0] == "masked"),
@@ -871,9 +1002,13 @@ class PagedGroup:
     the engine's occupancy bookkeeping and utilization sampling."""
 
     def __init__(self, cfg_model, n_slots: int, max_row_pages: int,
-                 scratch_page: int):
-        self.key = "paged"
-        self.mask = None
+                 scratch_page: int, *, key="paged", mask=None, layout=None,
+                 params=None, gate_rows: Optional[np.ndarray] = None):
+        self.key = key                 # "paged" | structural bucket signature
+        self.mask = mask               # structural: the bucket's keep-mask
+        self.layout = layout           # structural: compacted LayerSlots
+        self.params = params           # structural: compacted param stack
+        self.gate_rows = gate_rows     # structural: original rows per slot
         self.cache_len = 0             # no dense cache — pages grow per token
         self.n_slots = n_slots
         self.max_row_pages = max_row_pages
@@ -885,11 +1020,12 @@ class PagedGroup:
         self.table = np.full((n_slots, max_row_pages), scratch_page, np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
         self.tokens = np.zeros((n_slots,), np.int32)
-        L = cfg_model.n_layers
+        # gates are indexed by layout position (see SlotGroup)
+        Lg = len(layout) if layout is not None else cfg_model.n_layers
         self.table_dev = jnp.asarray(self.table)
         self.pos_dev = jnp.asarray(self.pos)
         self.tokens_dev = jnp.asarray(self.tokens)
-        self.gates_dev = jnp.ones((2, L, n_slots), jnp.float32)
+        self.gates_dev = jnp.ones((2, Lg, n_slots), jnp.float32)
         self._iidx_cache: Dict[Tuple[int, ...], Any] = {}
 
     def free_slots(self) -> List[int]:
@@ -956,7 +1092,7 @@ class PagedGroup:
 
 
 class PagedExecutor(ModelExecutor):
-    """Physically paged KV execution (masked mode).
+    """Physically paged KV execution.
 
     The engine's :class:`~repro.runtime.kv_pool.KVPool` owns the page
     arrays (``bind_pool`` materializes them at pool capacity, once per
@@ -981,9 +1117,19 @@ class PagedExecutor(ModelExecutor):
     free slots whose page-table rows point at the pool's scratch page (so
     their garbage writes land in a write sink no request reads).
 
-    Masked mode only: structural paged serving (compacted layer stacks
-    over a shared pool) is a ROADMAP item. Uniform all-attention layouts
-    only — ``LocalExecutor`` is the reference backend for everything else.
+    Structural mode runs per-bucket compacted layer stacks over the SAME
+    shared pool: groups are keyed by the exact parameter gather (as in
+    ``LocalExecutor`` — bucket signatures share executables, never
+    params), a bucket with L' retained layers reads/writes pool layers
+    0..L'-1 of its request-exclusive pages (the pool stays full-depth, so
+    spill/restore and admission accounting are mode-blind and
+    conservative), and per-slot gates realize each request's exact mask
+    inside its bucket. Structural buckets are always *gated* whole-layer
+    buckets (``bucket_quant`` floors at "layer"): the paged decoder
+    serves uniform all-attention layouts, so half-layer drops become
+    gates — which is bitwise-identical to dropping them structurally.
+    Uniform all-attention models only — ``LocalExecutor`` is the
+    reference backend for everything else.
 
     ``kv_dtype`` accepts the canonical precision names (``fp32``/``bf16``/
     ``int8``/``fp8``) or a jnp dtype: quantized precisions store int8/fp8
@@ -996,12 +1142,13 @@ class PagedExecutor(ModelExecutor):
 
     def __init__(self, model, params, *, mode: str = "masked",
                  max_active: int = 8, kv_dtype=None,
-                 decode_buckets: Sequence[int] = (1, 2, 4, 8)):
-        if mode != "masked":
-            raise NotImplementedError(
-                f"PagedExecutor serves masked mode only (got {mode!r}); "
-                "structural paged serving is a ROADMAP item — use "
-                "LocalExecutor")
+                 decode_buckets: Sequence[int] = (1, 2, 4, 8),
+                 bucket_quant: str = "none"):
+        if mode not in ("masked", "structural"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if bucket_quant not in ("none", "layer", "pow2"):
+            raise ValueError(f"unknown bucket_quant {bucket_quant!r}; "
+                             "expected none|layer|pow2")
         layout = decoder.default_layout(model.cfg)
         if not (len(layout) > 0
                 and all(s.mixer == "attn" and s.ffn == layout[0].ffn
@@ -1014,7 +1161,13 @@ class PagedExecutor(ModelExecutor):
         self.model = model
         self.mcfg = model.cfg
         self.params = params
-        self.mode = "masked"
+        self.mode = mode
+        # the paged decoder requires uniform layouts, so structural
+        # buckets are always whole-layer gated buckets: "none" floors at
+        # "layer" (bitwise-identical — half-layer drops run as 0-gates)
+        if mode == "structural" and bucket_quant == "none":
+            bucket_quant = "layer"
+        self.bucket_quant = bucket_quant
         self.max_active = int(max_active)
         name, store, quantized, _ = resolve_kv_dtype(kv_dtype)
         self.kv_dtype_name = name            # canonical, None = model dtype
@@ -1025,9 +1178,11 @@ class PagedExecutor(ModelExecutor):
         self.compile_events = 0
         self.launch_s = 0.0
         self.pool = None               # bound per engine run
-        self._group: Optional[PagedGroup] = None
+        # "masked" -> the single gated group; structural mode keys groups
+        # by gather_key (exact parameter rows), as in LocalExecutor
+        self._groups: Dict[Any, PagedGroup] = {}
         self._prefill_fns: Dict[Tuple, Any] = {}
-        self._hfns: Dict[int, Any] = {}
+        self._hfns: Dict[Tuple, Any] = {}
         self._decode_widths: set = set()    # (width, horizon) pairs
         # "pallas" routes decode through the paged flash-decode kernel on
         # TPU; elsewhere the XLA gather fallback is the fast path (the
@@ -1062,7 +1217,9 @@ class PagedExecutor(ModelExecutor):
                                          or self.kv_dtype))
         self.pool = pool
         self.max_row_pages = -(-int(max_len) // pool.tokens_per_page)
-        self._group = None
+        # groups reference the previous pool's scratch page/table geometry;
+        # compiled executables stay (keys carry their shapes)
+        self._groups.clear()
 
     def _pool_leaves(self) -> Dict[str, Any]:
         """The pool's device arrays as one pytree (pages + scales when
@@ -1081,65 +1238,103 @@ class PagedExecutor(ModelExecutor):
             self.pool.v_scales = pools["vs"]
 
     # ------------------------------------------------------------ capacity
+    def _invalidate(self) -> None:
+        """Unified invalidation (see ``LocalExecutor._invalidate``):
+        groups and every compiled-executable cache drop together."""
+        self._groups.clear()
+        self._prefill_fns.clear()
+        self._hfns.clear()
+        self._decode_widths.clear()
+
     def set_max_active(self, n_slots: int) -> None:
         if int(n_slots) == self.max_active:
             return
         self.max_active = int(n_slots)
-        self._group = None
+        self._invalidate()
 
     def drop_groups(self) -> None:
-        self._group = None
+        self._invalidate()
 
     # -------------------------------------------------------------- groups
     def groups(self) -> List[PagedGroup]:
-        return [self._group] if self._group is not None else []
+        return list(self._groups.values())
 
     def group_for(self, mask: np.ndarray, cache_len: int) -> PagedGroup:
-        """One group hosts every request: pages make cache length a
-        per-slot property, so there is nothing to key groups by."""
+        """Masked mode: ONE group hosts every request — pages make cache
+        length a per-slot property, so there is nothing to key groups by.
+        Structural mode: one group per parameter gather (quantized bucket),
+        all decoding over the same shared pool."""
         if self.pool is None:
             raise RuntimeError("PagedExecutor has no bound pool — the "
                                "engine calls bind_pool() per run")
-        if self._group is None:
-            self._group = PagedGroup(self.mcfg, self.max_active,
-                                     self.max_row_pages,
-                                     self.pool.scratch_page)
-        return self._group
+        if self.mode == "masked":
+            group = self._groups.get("masked")
+            if group is None:
+                group = self._groups["masked"] = PagedGroup(
+                    self.mcfg, self.max_active, self.max_row_pages,
+                    self.pool.scratch_page)
+            return group
+        qmask = masks_lib.quantize_mask(self.mcfg, mask, self.bucket_quant)
+        rkey = masks_lib.gather_key(self.mcfg, qmask)
+        group = self._groups.get(rkey)
+        if group is None:
+            small, layout = masks_lib.compact_params(self.params, self.mcfg,
+                                                     qmask)
+            # mask: the exact MINTING mask (sticky-affinity metadata, see
+            # LocalExecutor.group_for) — per-request masks ride the gates
+            group = self._groups[rkey] = PagedGroup(
+                self.mcfg, self.max_active, self.max_row_pages,
+                self.pool.scratch_page,
+                key=masks_lib.bucket_key(self.mcfg, qmask),
+                mask=np.array(mask, copy=True), layout=layout,
+                params=small,
+                gate_rows=masks_lib.keep_rows(self.mcfg, qmask))
+        return group
+
+    def _group_params(self, group: PagedGroup):
+        return group.params if group.params is not None else self.params
 
     # ------------------------------------------------------------- prefill
-    def _prefill_fn(self, b: int, S: int, npg: int):
-        key = (b, S, npg)
+    def _prefill_fn(self, group: PagedGroup, b: int, S: int, npg: int):
+        key = (group.key, b, S, npg)
         if key not in self._prefill_fns:
             cfg = self.mcfg
             pt = self.pool.tokens_per_page
-            L = cfg.n_layers
+            layout = group.layout
+            Lp = len(layout) if layout is not None else cfg.n_layers
             quantized = self.kv_quantized
             # quantized pools prefill at model width inside the jit and
             # page-quantize during the scatter: every granted page is
             # fresh (offset 0), so scales are set, never floored
             cache_dtype = None if quantized else self.kv_dtype
 
+            # a compacted bucket prefills an Lp-layer cache and scatters
+            # into pool layers [0, Lp) of its granted pages — pages are
+            # request-exclusive, so the untouched upper layers are never
+            # read. Same-signature buckets share this executable (params
+            # are jit arguments; equal-signature layouts are identical).
             @functools.partial(jax.jit, donate_argnums=(4,))
             def fn(p, tokens, gm, gf, pools, rows):
                 logits, cache = decoder.prefill(
                     p, cfg, tokens, npg * pt,
-                    gates={"mixer": gm, "ffn": gf}, kv_dtype=cache_dtype)
+                    gates={"mixer": gm, "ffn": gf}, layout=layout,
+                    kv_dtype=cache_dtype)
                 kp, vp = pools["k"], pools["v"]
-                k = cache["attn"]["k"].reshape(L, b, npg, pt, *kp.shape[3:])
-                v = cache["attn"]["v"].reshape(L, b, npg, pt, *vp.shape[3:])
+                k = cache["attn"]["k"].reshape(Lp, b, npg, pt, *kp.shape[3:])
+                v = cache["attn"]["v"].reshape(Lp, b, npg, pt, *vp.shape[3:])
                 pools = dict(pools)
                 if quantized:
                     qk, sk = attention.page_quant(
                         k.astype(jnp.float32), kp.dtype)
                     qv, sv = attention.page_quant(
                         v.astype(jnp.float32), vp.dtype)
-                    pools["k"] = kp.at[:, rows].set(qk)
-                    pools["v"] = vp.at[:, rows].set(qv)
-                    pools["ks"] = pools["ks"].at[:, rows].set(sk)
-                    pools["vs"] = pools["vs"].at[:, rows].set(sv)
+                    pools["k"] = kp.at[:Lp, rows].set(qk)
+                    pools["v"] = vp.at[:Lp, rows].set(qv)
+                    pools["ks"] = pools["ks"].at[:Lp, rows].set(sk)
+                    pools["vs"] = pools["vs"].at[:Lp, rows].set(sv)
                 else:
-                    pools["k"] = kp.at[:, rows].set(k.astype(kp.dtype))
-                    pools["v"] = vp.at[:, rows].set(v.astype(vp.dtype))
+                    pools["k"] = kp.at[:Lp, rows].set(k.astype(kp.dtype))
+                    pools["v"] = vp.at[:Lp, rows].set(v.astype(vp.dtype))
                 return logits, pools
 
             self._prefill_fns[key] = fn
@@ -1154,44 +1349,46 @@ class PagedExecutor(ModelExecutor):
         rows = self.pool.row_pages(rid)            # [b][npg] page ids
         npg = len(rows[0])
         rows_np = np.asarray(rows, np.int32)
-        fn = self._prefill_fn(b, S, npg)
-        # one mask_to_gates serves both the jitted call and the group's
-        # resident gate columns
-        g = masks_lib.mask_to_gates(mask)
+        fn = self._prefill_fn(group, b, S, npg)
+        # one gate-column stack serves both the jitted call and the
+        # group's resident gate columns
+        cols = _gate_cols(mask, group.gate_rows)
         t0 = time.perf_counter()
-        logits, pools = fn(self.params, jnp.asarray(prompt, jnp.int32),
-                           g["mixer"], g["ffn"], self._pool_leaves(),
+        logits, pools = fn(self._group_params(group),
+                           jnp.asarray(prompt, jnp.int32),
+                           cols[0], cols[1], self._pool_leaves(),
                            jnp.asarray(rows_np))
         self._store_leaves(pools)
         first = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
         self.launch_s += time.perf_counter() - t0
-        group.place(rid, slots, rows_np, S, first,
-                    np.asarray(g["mixer"]), np.asarray(g["ffn"]))
+        group.place(rid, slots, rows_np, S, first, cols[0], cols[1])
         return first
 
     # ----------------------------------------------------- chunked prefill
     def supports_chunked_prefill(self, group: PagedGroup) -> bool:
-        # the constructor already pins masked + uniform all-attention,
-        # which is exactly what the paged chunk path serves (quantized
-        # pools requantize the chunk's touched pages in the same call)
+        # the constructor pins uniform all-attention models, and
+        # structural buckets are whole-layer (still uniform) — exactly
+        # what the paged chunk path serves (quantized pools requantize
+        # the chunk's touched pages in the same call)
         return True
 
-    def _chunk_fn(self, b: int, C: int):
+    def _chunk_fn(self, group: PagedGroup, b: int, C: int):
         """Jitted paged one-chunk prefill, keyed by chunk width (offset is
         traced): the chunk's K/V scatter straight into the granted pages
         (pool arrays donated through the call, as in monolithic paged
         prefill)."""
         scratch = self.pool.scratch_page
-        key = ("chunk", b, C, scratch)
+        key = ("chunk", group.key, b, C, scratch)
         if key not in self._prefill_fns:
             cfg = self.mcfg
+            layout = group.layout
 
             @functools.partial(jax.jit, donate_argnums=(1,))
             def fn(p, pools, table, tokens, start, gm, gf):
                 logits, pools = decoder.paged_prefill_chunk(
                     p, cfg, pools, table, tokens, start,
                     scratch_page=scratch,
-                    gates={"mixer": gm, "ffn": gf})
+                    gates={"mixer": gm, "ffn": gf}, layout=layout)
                 return logits, pools
 
             self._prefill_fns[key] = fn
@@ -1208,9 +1405,10 @@ class PagedExecutor(ModelExecutor):
         prompt = np.asarray(prompt, np.int32)
         b, S = prompt.shape
         group.reserved.update(slots)
+        cols = _gate_cols(mask, group.gate_rows)
         return _PrefillTask(group=group, slots=list(slots), rid=rid,
                             prompt=prompt, mask=mask,
-                            gates=masks_lib.mask_to_gates(mask),
+                            gates={"mixer": cols[0], "ffn": cols[1]},
                             widths=chunk_widths(S, max_chunk))
 
     def prefill_step(self, task: _PrefillTask) -> Optional[np.ndarray]:
@@ -1224,10 +1422,10 @@ class PagedExecutor(ModelExecutor):
         table = np.full((b, self.max_row_pages), self.pool.scratch_page,
                         np.int32)
         table[:, :len(rows[0])] = np.asarray(rows, np.int32)
-        fn = self._chunk_fn(b, c)
+        fn = self._chunk_fn(group, b, c)
         t0 = time.perf_counter()
         logits, pools = fn(
-            self.params, self._pool_leaves(), jnp.asarray(table),
+            self._group_params(group), self._pool_leaves(), jnp.asarray(table),
             jnp.asarray(task.prompt[:, task.pos:task.pos + c], jnp.int32),
             np.int32(task.pos), task.gates["mixer"], task.gates["ffn"])
         self._store_leaves(pools)
@@ -1261,10 +1459,9 @@ class PagedExecutor(ModelExecutor):
         unpreempted resident would hold them."""
         if rows is None:
             rows = self.pool.row_pages(rid)
-        g = masks_lib.mask_to_gates(mask)
+        cols = _gate_cols(mask, group.gate_rows)
         group.place(rid, list(slots), np.asarray(rows, np.int32),
-                    state["pos"], state["first"],
-                    np.asarray(g["mixer"]), np.asarray(g["ffn"]))
+                    state["pos"], state["first"], cols[0], cols[1])
 
     # -------------------------------------------------------------- decode
     def _decode_batch(self, group: PagedGroup) -> List[int]:
@@ -1273,16 +1470,17 @@ class PagedExecutor(ModelExecutor):
         # full width: every slot steps (free rows write the scratch page)
         return idx if idx is not None else list(range(group.n_slots))
 
-    def _horizon_fn(self, horizon: int, bucketed: bool):
-        """Jitted fused paged horizon per (H, bucketed). The bucketed
-        variant gathers the stepped rows from the full-width resident
-        state and scatters positions/tokens back *inside* the compiled
-        call (eager indexing would upload an index-normalization scalar
-        per launch — the transfer-guard test forbids it)."""
+    def _horizon_fn(self, group: PagedGroup, horizon: int, bucketed: bool):
+        """Jitted fused paged horizon per (bucket signature, H, bucketed).
+        The bucketed variant gathers the stepped rows from the full-width
+        resident state and scatters positions/tokens back *inside* the
+        compiled call (eager indexing would upload an index-normalization
+        scalar per launch — the transfer-guard test forbids it)."""
         h = int(horizon)
-        key = (h, bool(bucketed))
+        key = (group.key, h, bool(bucketed))
         if key not in self._hfns:
             cfg, impl = self.mcfg, self._impl
+            layout = group.layout
 
             if not bucketed:
                 @functools.partial(jax.jit, donate_argnums=(1, 3, 4))
@@ -1291,7 +1489,7 @@ class PagedExecutor(ModelExecutor):
                         p, cfg, pools, table, pos,
                         tok[:, None], h,
                         gates={"mixer": gates[0], "ffn": gates[1]},
-                        impl=impl)
+                        impl=impl, layout=layout)
                     return toks, pools, pos, toks[:, -1]
             else:
                 @functools.partial(jax.jit, donate_argnums=(1, 3, 4))
@@ -1300,7 +1498,8 @@ class PagedExecutor(ModelExecutor):
                     toks, pools, pos_out = decoder.paged_decode_horizon(
                         p, cfg, pools, table[iidx], pos[iidx],
                         tok[iidx][:, None], h,
-                        gates={"mixer": g[0], "ffn": g[1]}, impl=impl)
+                        gates={"mixer": g[0], "ffn": g[1]}, impl=impl,
+                        layout=layout)
                     pos = pos.at[iidx].set(pos_out)
                     tok = tok.at[iidx].set(toks[:, -1])
                     return toks, pools, pos, tok
@@ -1352,15 +1551,16 @@ class PagedExecutor(ModelExecutor):
         once warm — the caller's single ``np.asarray`` is the only sync."""
         idx = self._decode_batch(group)
         width = len(idx)
-        key = (width, int(horizon))
+        key = (group.key, width, int(horizon))
         new = key not in self._decode_widths
         self._decode_widths.add(key)
         if new:
             self.compile_events += 1
         full = width == group.n_slots
-        fn = self._horizon_fn(horizon, bucketed=not full)
-        args = (self.params, self._pool_leaves(), group.table_dev,
-                group.pos_dev, group.tokens_dev, group.gates_dev)
+        fn = self._horizon_fn(group, horizon, bucketed=not full)
+        args = (self._group_params(group), self._pool_leaves(),
+                group.table_dev, group.pos_dev, group.tokens_dev,
+                group.gates_dev)
         if not full:
             args += (group.iidx(idx),)
         toks, pools, pos, tok = fn(*args)
@@ -1412,23 +1612,29 @@ class PagedExecutor(ModelExecutor):
         bytes of the pages they hold. Waste is bounded by one partial page
         per row plus the pre-granted horizon tail — the whole point of
         paging."""
-        if self.pool is None or self._group is None:
+        if self.pool is None or not self._groups:
             return 0.0, 0.0
         pt = self.pool.tokens_per_page
         tok_bytes = self.pool.page_bytes / pt
         used = 0.0
-        for s in self._group.occupied_slots():
-            rid = self._group.occupants[s]
-            # clamp to the granted backing: a request over-generating in
-            # its final horizon advances pos past its page-backed tokens
-            used += min(int(self._group.pos[s]),
-                        self.pool.seq_tokens(rid)) * tok_bytes
+        for group in self._groups.values():
+            for s in group.occupied_slots():
+                rid = group.occupants[s]
+                # clamp to the granted backing: a request over-generating
+                # in its final horizon advances pos past its page-backed
+                # tokens
+                used += min(int(group.pos[s]),
+                            self.pool.seq_tokens(rid)) * tok_bytes
         return used, self.pool.bytes_reserved
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, int]:
         return {
-            "groups": 1 if self._group is not None else 0,
+            "groups": len(self._groups),
+            "structural_buckets": len({k for k in self._groups
+                                       if k != "masked"}),
+            "bucket_signatures": len({g.key for g in self._groups.values()
+                                      if g.key != "paged"}),
             "prefill_executables": len(self._prefill_fns),
             "decode_widths": len(self._decode_widths),
             "compile_events": self.compile_events,
@@ -1485,6 +1691,8 @@ class ShardedSlotGroup(SlotGroup):
         key = tuple(idx)
         dev = self._iidx_cache.get(key)
         if dev is None:
+            if len(self._iidx_cache) >= _IIDX_CACHE_CAP:
+                self._iidx_cache.pop(next(iter(self._iidx_cache)))
             dev = jax.device_put(np.asarray(idx, np.int32), self._rep)
             self._iidx_cache[key] = dev
         return dev

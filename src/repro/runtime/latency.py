@@ -1,7 +1,7 @@
 """Pure latency-percentile helpers for serving measurement.
 
 The async engine reports per-request TTFT (time to first token) and
-inter-token latency as p50/p90/p99 summaries (DESIGN.md §11
+inter-token latency as p50/p90/p99 summaries (DESIGN.md §12
 "Measurement"); this module is the arithmetic behind them, kept free of
 engine/JAX imports so the benchmark schema and the property tests
 (``tests/test_latency.py``, hypothesis) can pin it in isolation.

@@ -1,4 +1,4 @@
-"""Fault-injection scenarios for the serving engine (DESIGN.md §10).
+"""Fault-injection scenarios for the serving engine (DESIGN.md §11).
 
 The engine's elastic-budget machinery (preemption, KV spill/resume,
 cancellation) is only trustworthy if it survives adversarial traffic, so

@@ -18,7 +18,7 @@ XLA adaptation of "execute pruned" (see DESIGN.md §8) — two modes:
     layout signature). Uniform architectures collapse many masks into one
     bucket, so compiles amortize exactly like vLLM's shape buckets.
 
-Since the continuous-batching refactor (DESIGN.md §9) this class is a thin
+Since the continuous-batching refactor (DESIGN.md §10) this class is a thin
 shim: each ``serve()`` call runs a single-request trace through
 :class:`repro.runtime.engine.RAPEngine` in ``force``-admission mode, which
 reproduces the historical contract exactly — one decision per request

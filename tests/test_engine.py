@@ -661,8 +661,10 @@ def test_engine_paged_queues_under_page_pressure(served):
 def test_paged_executor_validation(served):
     """Misconfigurations fail loudly at construction, not mid-serve."""
     model, params, batch, mm, c = served
-    with pytest.raises(NotImplementedError, match="masked"):
-        PagedExecutor(model, params, mode="structural")
+    # structural paged buckets are now a supported mode (DESIGN.md §9);
+    # unknown modes still fail loudly at construction
+    with pytest.raises(ValueError, match="mode"):
+        PagedExecutor(model, params, mode="gated")
     # int8 paged pools are now a supported precision: the executor
     # resolves the canonical name and allocates quantized pages + scales
     import jax.numpy as jnp
@@ -724,7 +726,7 @@ def test_sharded_executor_places_params_and_serves(served):
 
 
 # ------------------------------------- elastic budgets / spill / cancel
-# (DESIGN.md §10). Budget shocks in tests are TICK-counting staircases
+# (DESIGN.md §11). Budget shocks in tests are TICK-counting staircases
 # (repro.runtime.scenarios.TickStaircase): the engine evaluates callable
 # traces once per tick, so the shock hits after a deterministic number of
 # ticks regardless of how long a tick takes on the host running the test.

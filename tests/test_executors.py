@@ -23,10 +23,11 @@ import numpy as np
 import pytest
 
 from repro.core import masks
-from repro.core.policy import DensePolicy, RLPolicy
+from repro.core.policy import Decision, DensePolicy, RLPolicy
 from repro.launch.mesh import make_host_mesh, make_serve_mesh
-from repro.runtime import (EngineConfig, EngineRequest, PagedExecutor,
-                           RAPEngine, ShardedExecutor, TickStaircase)
+from repro.runtime import (EngineConfig, EngineRequest, LocalExecutor,
+                           PagedExecutor, RAPEngine, ShardedExecutor,
+                           TickStaircase)
 
 EXECUTORS = {
     "local": lambda model, params, slots, kv_dtype=None: None,  # engine default
@@ -454,7 +455,7 @@ def test_sharded_horizon_zero_transfers_when_warm(tiny_model):
 
 
 # ------------------------------------------- elastic-budget preemption
-# (DESIGN.md §10): a mid-serve budget shock forces KV spill to host and
+# (DESIGN.md §11): a mid-serve budget shock forces KV spill to host and
 # later resume; the token streams must be BITWISE identical to the
 # unshocked run on every backend — preemption must be unobservable in
 # the output, exactly like the decode horizon above.
@@ -540,3 +541,349 @@ def test_paged_preemption_bitwise_fp32_and_int8(served, kv_dtype):
                     f"on {rid}")
     assert rep.pool["reserved_bytes"] == 0
     assert rep.pool["free_pages"] == rep.pool["n_pages"]
+
+
+# ------------------------------------------------------ structural serving
+# (DESIGN.md §9): structural buckets on the paged backend, the bucket
+# aliasing regression, bucket-shape quantization, the bounded group set,
+# and the persistent compilation cache.
+
+class FixedMaskPolicy(DensePolicy):
+    """Deterministic mask sequence keyed by observe() call index: call i
+    returns ``seq[min(i, len(seq)-1)]``. Pins exactly which keep-mask each
+    admission sees, independent of budget drift — the structural
+    conformance tests need the mask stream itself to be the controlled
+    variable."""
+
+    name = "fixed"
+
+    def __init__(self, mm, seq):
+        super().__init__(mm)
+        self._seq = [np.array(m, copy=True) for m in seq]
+        self._i = 0
+
+    def observe(self, state):
+        mask = self._seq[min(self._i, len(self._seq) - 1)]
+        self._i += 1
+        peak = self.mm.peak_bytes(mask, state.batch, state.total_len)
+        return self._stamp(Decision(mask=mask.copy(), steps=0,
+                                    peak_bytes=peak,
+                                    fits=peak <= state.budget_bytes,
+                                    latency_s=0.0))
+
+
+STRUCT_PARAMS = ["local", "paged"]
+
+
+def _struct_engine(model, params, policy, kind, *, budget, max_new, slots=4,
+                   max_len=32, horizon=8, kv_dtype=None, bucket_quant="none",
+                   max_groups=0, cache_dir=""):
+    ex = None
+    if kind == "paged":
+        ex = PagedExecutor(model, params, mode="structural", max_active=slots,
+                           kv_dtype=kv_dtype, bucket_quant=bucket_quant)
+    return RAPEngine(model, params, policy, EngineConfig(
+        mode="structural", max_new_tokens=max_new, max_active=slots,
+        max_len=max_len, budget_bytes=budget, tokens_per_page=8,
+        kv_dtype=kv_dtype, decode_horizon=horizon,
+        bucket_quant=bucket_quant, max_structural_groups=max_groups,
+        compile_cache_dir=cache_dir), executor=ex)
+
+
+def _drop_layer(cfg, *layers):
+    m = masks.full_mask(cfg.n_layers)
+    for i in layers:
+        m[i] = m[cfg.n_layers + i] = False
+    return m
+
+
+@pytest.mark.parametrize("kind", STRUCT_PARAMS)
+def test_structural_bucket_aliasing_serves_own_weights(served, kind):
+    """THE aliasing regression (DESIGN.md §9): masks dropping DIFFERENT
+    layers share a bucket signature (``bucket_key`` collapses k whole-layer
+    drops by count), but must never share compacted params. Two
+    same-signature requests served concurrently — A drops layer 0, B drops
+    layer 1, one slot per group so neither can join the other's group —
+    must each emit the stream their own single-request serve emits. The
+    pre-fix executor cached the first mask's ``compact_params`` under the
+    shared signature, so B decoded with A's weights (deferred behind A,
+    then seated on A's gather)."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    mA, mB = _drop_layer(model.cfg, 0), _drop_layer(model.cfg, 1)
+    assert masks.bucket_key(model.cfg, mA) == masks.bucket_key(model.cfg, mB)
+    assert masks.gather_key(model.cfg, mA) != masks.gather_key(model.cfg, mB)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    pA, pB = toks[:1, :16], toks[:1, :24]
+
+    def solo(mask, prompt):
+        eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                             kind, budget=budget, max_new=4, slots=1)
+        rep = eng.run([EngineRequest(rid="x", prompt=prompt, arrival_t=0.0,
+                                     max_new=4)])
+        return rep.result("x")
+
+    ref_a, ref_b = solo(mA, pA), solo(mB, pB)
+    eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mA, mB]),
+                         kind, budget=budget, max_new=4, slots=1)
+    rep = eng.run([
+        EngineRequest(rid="a", prompt=pA, arrival_t=0.0, max_new=4),
+        EngineRequest(rid="b", prompt=pB, arrival_t=0.0, max_new=4)])
+    ra, rb = rep.result("a"), rep.result("b")
+    assert ra.status == rb.status == "done"
+    np.testing.assert_array_equal(ra.mask, mA)
+    np.testing.assert_array_equal(rb.mask, mB)
+    np.testing.assert_array_equal(
+        ra.tokens, ref_a.tokens,
+        err_msg=f"{kind}: request A diverged from its solo reference")
+    np.testing.assert_array_equal(
+        rb.tokens, ref_b.tokens,
+        err_msg=f"{kind}: same-signature request B was served with the "
+                f"wrong compacted weights (bucket aliasing)")
+    # one compiled family, two resident parameter gathers
+    s = eng.executor.stats()
+    assert s["bucket_signatures"] == 1
+    assert s["groups"] == 2
+
+
+def test_structural_paged_matches_local_bitwise(served):
+    """Structural paged serves the canonical trace bitwise-identically to
+    structural local: compacted per-bucket layer stacks decoding over the
+    shared page pool reproduce the slot-cache reference token for token.
+    One fixed whole-layer mask for every request, so backend-dependent
+    policy call order cannot flip a mask."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    mask = _drop_layer(model.cfg, 1)
+    outs = {}
+    for kind in STRUCT_PARAMS:
+        eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                             kind, budget=budget, max_new=4)
+        rep = eng.run(_reqs(prompts, max_new=4))
+        done = {r.rid: r for r in rep.results if r.status == "done"}
+        assert len(done) == 8 and rep.rejected == 0, kind
+        for r in done.values():
+            np.testing.assert_array_equal(r.mask, mask)
+        outs[kind] = done
+    for rid, r in outs["local"].items():
+        np.testing.assert_array_equal(
+            r.tokens, outs["paged"][rid].tokens,
+            err_msg=f"structural paged diverged from local on {rid}")
+
+
+@pytest.mark.parametrize("kind", STRUCT_PARAMS)
+def test_structural_horizon_token_equivalence(served, kind):
+    """Horizon decode stays unobservable in structural mode: H ∈ {1, 4, 8}
+    emit bitwise-identical streams through the compacted layer stacks
+    (max_new=6 lands mid-horizon for H=4 and H=8)."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    mask = _drop_layer(model.cfg, 2)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :24], toks[:1, :16]]
+    outs = {}
+    for horizon in (1, 4, 8):
+        eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                             kind, budget=budget, max_new=6, horizon=horizon)
+        rep = eng.run(_reqs(prompts, max_new=6))
+        assert all(r.status == "done" for r in rep.results)
+        outs[horizon] = {r.rid: r.tokens for r in rep.results}
+    for horizon in (4, 8):
+        for rid, t in outs[1].items():
+            np.testing.assert_array_equal(
+                t, outs[horizon][rid],
+                err_msg=f"structural {kind}: H={horizon} diverged from "
+                        f"H=1 on {rid}")
+
+
+@pytest.mark.parametrize("kind,kv_dtype", [("local", None), ("paged", None),
+                                           ("paged", "int8")],
+                         ids=["local-fp32", "paged-fp32", "paged-int8"])
+def test_structural_spill_restore_bitwise(served, kind, kv_dtype):
+    """Preemption is unobservable in structural mode too: a mid-serve KV
+    budget shock spills compacted-bucket residents (paged: physical page
+    gather → host → scatter, including int8 scale rows) and the resumed
+    streams match the unshocked same-precision oracle bitwise. The resume
+    path re-resolves the group by gather key, so a restored request can
+    never land on another bucket's weights."""
+    model, params, batch, mm, c = served
+    prompts, budget = _trace(batch, mm, model.cfg)
+    mask = _drop_layer(model.cfg, 1)
+    ref_eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                             kind, budget=budget, max_new=6, horizon=2,
+                             kv_dtype=kv_dtype)
+    ref = {r.rid: r for r in ref_eng.run(_reqs(prompts, max_new=6)).results
+           if r.status == "done"}
+    eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                         kind, budget=budget, max_new=6, horizon=2,
+                         kv_dtype=kv_dtype)
+    frac = 0.45 if kv_dtype is None else 0.8
+    rep = eng.run(_reqs(prompts, max_new=6),
+                  budget_trace=_kv_staircase(eng, budget, down=4, up=14,
+                                             frac=frac))
+    done = {r.rid: r for r in rep.results if r.status == "done"}
+    assert rep.preempted_count > 0, f"{kind}/{kv_dtype}: shock never " \
+                                    f"preempted"
+    assert set(done) == set(ref)
+    for rid, r in ref.items():
+        np.testing.assert_array_equal(
+            r.tokens, done[rid].tokens,
+            err_msg=f"structural {kind}/{kv_dtype}: spill/resume changed "
+                    f"tokens on {rid}")
+    assert rep.pool["reserved_bytes"] == 0
+    assert rep.pool["spilled_requests"] == 0
+
+
+def test_bucket_quantization_bitwise_and_bounded(tiny_model):
+    """Bucket-shape quantization is invisible in the tokens and bounds the
+    compiled set: every trial mask served through a pow2-quantized bucket
+    (exact mask realized as 0/1 gates inside it) emits the stream the
+    exact structural compaction emits — gating a block off multiplies by
+    literal 0.0/1.0, bitwise-identical to dropping it — while the
+    signature count collapses onto the pow2 ladder (≤ ceil(log2 L)+1
+    families; here {4, 2}-layer buckets for 5 distinct masks)."""
+    model, params, batch = tiny_model
+    L = model.cfg.n_layers
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    trial = [_drop_layer(model.cfg, 0), _drop_layer(model.cfg, 1),
+             _drop_layer(model.cfg, 3), _drop_layer(model.cfg, 0, 1)]
+    half = masks.full_mask(L)
+    half[L + 2] = False                      # ffn-only drop: gated in both
+    trial.append(half)
+    streams, stats = {}, {}
+    for quant in ("none", "pow2"):
+        ex = LocalExecutor(model, params, mode="structural", max_active=2,
+                           bucket_quant=quant)
+        out = []
+        for i, m in enumerate(trial):
+            g = ex.group_for(m, 32)
+            first = ex.prefill_into(g, [0], f"r{i}", prompt, m)
+            toks, _ = ex.decode_horizon(g, 4)
+            g.evict([0])
+            out.append(np.concatenate([first, toks[0]]))
+        streams[quant] = out
+        stats[quant] = ex.stats()
+    for i, m in enumerate(trial):
+        np.testing.assert_array_equal(
+            streams["none"][i], streams["pow2"][i],
+            err_msg=f"pow2 bucket changed tokens for trial mask {i}")
+    bound = int(np.ceil(np.log2(L))) + 1
+    assert stats["pow2"]["bucket_signatures"] <= bound
+    assert stats["pow2"]["bucket_signatures"] == 2      # {4, 2}-layer
+    assert stats["pow2"]["groups"] == 2                 # gathers collapsed
+    assert stats["none"]["groups"] == len(trial)        # one per exact mask
+    assert (stats["pow2"]["prefill_executables"]
+            < stats["none"]["prefill_executables"])
+
+
+def test_structural_group_cap_evicts_idle(tiny_model):
+    """The ``max_groups`` cap bounds ``_groups``/``_prefill_fns``/resident
+    param growth under an adaptive mask stream: idle structural groups are
+    evicted LRU at mint time, releasing their prefill executables and —
+    when last of their signature — the resident compacted stack. Occupied
+    groups are never evicted (the cap may overshoot while all are busy)."""
+    model, params, batch = tiny_model
+    L = model.cfg.n_layers
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    ex = LocalExecutor(model, params, mode="structural", max_active=2,
+                       max_groups=2)
+    for k in range(L):                      # 4 distinct single-layer drops
+        m = _drop_layer(model.cfg, k)
+        g = ex.group_for(m, 32)
+        ex.prefill_into(g, [0], f"r{k}", prompt, m)
+        ex.decode_horizon(g, 2)
+        g.evict([0])
+    s = ex.stats()
+    assert s["groups"] <= 2
+    assert s["resident_param_stacks"] <= 2
+    # all four masks share one 3-layer signature: one prefill family
+    assert s["prefill_executables"] == 1
+    # occupied groups are exempt: with both cap slots busy, a third mask
+    # overshoots instead of evicting a resident
+    g0 = ex.group_for(_drop_layer(model.cfg, 0), 32)
+    ex.prefill_into(g0, [0], "busy0", prompt, _drop_layer(model.cfg, 0))
+    g1 = ex.group_for(_drop_layer(model.cfg, 1), 32)
+    ex.prefill_into(g1, [0], "busy1", prompt, _drop_layer(model.cfg, 1))
+    g2 = ex.group_for(_drop_layer(model.cfg, 2), 32)
+    assert g0.occupied() and g1.occupied()
+    assert ex.stats()["groups"] == 3
+    # …and the overshoot drains at the next mint once they idle
+    g0.evict([0])
+    g1.evict([0])
+    ex.group_for(_drop_layer(model.cfg, 3), 32)
+    assert ex.stats()["groups"] <= 2
+
+
+def test_invalidation_unified(tiny_model):
+    """``set_max_active`` and ``drop_groups`` share one invalidation path:
+    both clear groups, prefill executables, and resident compacted params
+    — stale (signature, slots) keys must not pin dead XLA executables
+    after a capacity reshape."""
+    model, params, batch = tiny_model
+    prompt = np.asarray(batch["tokens"])[:1, :16]
+    for invalidate in (lambda e: e.set_max_active(4),
+                       lambda e: e.drop_groups()):
+        ex = LocalExecutor(model, params, mode="structural", max_active=2)
+        m = _drop_layer(model.cfg, 0)
+        g = ex.group_for(m, 32)
+        ex.prefill_into(g, [0], "r0", prompt, m)
+        g.evict([0])
+        s = ex.stats()
+        assert s["groups"] == 1 and s["prefill_executables"] == 1
+        assert s["resident_param_stacks"] == 1
+        invalidate(ex)
+        s = ex.stats()
+        assert s["groups"] == 0
+        assert s["prefill_executables"] == 0
+        assert s["resident_param_stacks"] == 0
+
+
+def test_persistent_compile_cache_hits(served, tmp_path):
+    """With ``EngineConfig.compile_cache_dir`` set, a second engine serving
+    the same config after ``jax.clear_caches()`` re-traces its executables
+    but loads the XLA binaries from disk: the report shows cache hits,
+    near-zero misses, and the replayed streams are bitwise-identical."""
+    model, params, batch, mm, c = served
+    toks = np.asarray(batch["tokens"])
+    full = masks.full_mask(model.cfg.n_layers)
+    mask = _drop_layer(model.cfg, 1)
+    budget = mm.param_bytes(full) + 4 * mm.state_bytes(full, 1, 32)
+    prompts = [toks[:1, :16], toks[:1, :16]]
+    names = ("jax_compilation_cache_dir",
+             "jax_persistent_cache_min_entry_size_bytes",
+             "jax_persistent_cache_min_compile_time_secs")
+    prev = {n: getattr(jax.config, n) for n in names}
+    try:
+        def serve():
+            eng = _struct_engine(model, params, FixedMaskPolicy(mm, [mask]),
+                                 "local", budget=budget, max_new=4,
+                                 cache_dir=str(tmp_path))
+            return eng.run(_reqs(prompts, max_new=4))
+
+        rep1 = serve()
+        assert rep1.compile_events > 0
+        jax.clear_caches()                  # drop in-memory executables
+        # first replay: executables compiled BEFORE the cache was enabled
+        # (session fixtures, earlier tests) are written — not hit — so
+        # only the second replay has a history-independent miss count
+        rep2 = serve()
+        assert rep2.compile_cache_hits > 0, \
+            "warmed replay never hit the persistent cache"
+        jax.clear_caches()
+        rep3 = serve()
+        assert rep3.compile_cache_hits > 0
+        assert rep3.compile_cache_misses == 0, \
+            "fully-warmed replay still recompiled"
+        done1 = {r.rid: r.tokens for r in rep1.results}
+        for rep in (rep2, rep3):
+            for r in rep.results:
+                np.testing.assert_array_equal(done1[r.rid], r.tokens)
+    finally:
+        for n, v in prev.items():
+            jax.config.update(n, v)
+        from jax._src import compilation_cache as _cc
+        _cc.reset_cache()               # re-latch: later tests cache-free
+        from repro.runtime.engine import _CACHE_LISTENER
+        _CACHE_LISTENER.pop("dir", None)

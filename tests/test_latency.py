@@ -1,5 +1,5 @@
 """Property tests for the pure latency-percentile helpers
-(``repro.runtime.latency``, DESIGN.md §11 "Measurement").
+(``repro.runtime.latency``, DESIGN.md §12 "Measurement").
 
 These pin the arithmetic the engine's TTFT/ITL summaries and the
 BENCH_engine.json schema rely on — no JAX, no engine, tier-1 fast. The

@@ -318,7 +318,7 @@ def test_int8_kv_quant_roundtrip(x):
 @settings(max_examples=40, deadline=None)
 @given(data=st.data())
 def test_kv_pool_spill_restore_interleave_conserves(data):
-    """Spill/restore (DESIGN.md §10) interleaved with alloc/extend/free on
+    """Spill/restore (DESIGN.md §11) interleaved with alloc/extend/free on
     an int8 physical pool: pages and scale rows are conserved after EVERY
     op, a spill releases exactly its reservation, ``can_restore`` is an
     accurate oracle (True ⇒ restore succeeds, token-kind False ⇒ restore
